@@ -1,0 +1,58 @@
+"""Roofline report: reads results/dryrun_all.json (written by the multi-pod
+dry-run) and emits the per-cell roofline terms as CSV rows.  If the dry-run
+results are absent it says so rather than recomputing (the 512-device
+dry-run must not run inside the 1-device bench process)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun_all.json")
+OPTIMIZED = "results/dryrun_optimized.json"
+
+
+def roofline_rows():
+    rows = []
+    if not os.path.exists(RESULTS):
+        rows.append(("roofline/missing", 0.0,
+                     f"run `python -m repro.launch.dryrun --out {RESULTS}` first"))
+        return rows
+    with open(RESULTS) as f:
+        data = json.load(f)
+    for cell in data.get("ok", []):
+        tag = f"{cell['arch']}/{cell['shape']}/{cell['mesh']}"
+        rows.append((f"roofline/{tag}/t_compute_ms", 0.0,
+                     round(cell["t_compute_s"] * 1e3, 4)))
+        rows.append((f"roofline/{tag}/t_memory_ms", 0.0,
+                     round(cell["t_memory_s"] * 1e3, 4)))
+        rows.append((f"roofline/{tag}/t_collective_ms", 0.0,
+                     round(cell["t_collective_s"] * 1e3, 4)))
+        rows.append((f"roofline/{tag}/bottleneck", 0.0, cell["bottleneck"]))
+        rows.append((f"roofline/{tag}/useful_ratio", 0.0,
+                     round(cell["useful_ratio"], 3)))
+        rows.append((f"roofline/{tag}/roofline_fraction", 0.0,
+                     round(cell["roofline_fraction"], 3)))
+    n_fail = len(data.get("failed", []))
+    rows.append(("roofline/cells_ok", 0.0, len(data.get("ok", []))))
+    rows.append(("roofline/cells_failed", 0.0, n_fail))
+    if os.path.exists(OPTIMIZED):
+        with open(OPTIMIZED) as f:
+            opt = json.load(f)
+        base = {(c["arch"], c["shape"], c["mesh"]): c for c in data.get("ok", [])}
+        gains = []
+        for c in opt.get("ok", []):
+            b = base.get((c["arch"], c["shape"], c["mesh"]))
+            if not b:
+                continue
+            tb = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+            to = max(c["t_compute_s"], c["t_memory_s"], c["t_collective_s"])
+            if to > 0:
+                gains.append((tb / to, c["arch"], c["shape"], c["mesh"]))
+        gains.sort(reverse=True)
+        for g, a, sh, m in gains[:10]:
+            rows.append((f"roofline/optimized_gain/{a}/{sh}/{m}", 0.0, round(g, 2)))
+        rows.append(("roofline/optimized_cells", 0.0, len(opt.get("ok", []))))
+    return rows
+
+
+ALL = [roofline_rows]

@@ -1,0 +1,28 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro +
+roofline report.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_tables, roofline_report
+
+    suites = paper_tables.ALL + kernel_bench.ALL + roofline_report.ALL
+    print("name,us_per_call,derived")
+    failures = 0
+    for suite in suites:
+        try:
+            for name, us, derived in suite():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{suite.__name__}/ERROR,0.00,{type(e).__name__}: {e}")
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

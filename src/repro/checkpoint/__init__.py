@@ -1,0 +1,4 @@
+"""Sharded checkpointing with atomic step directories and resume."""
+from .ckpt import CheckpointManager, latest_step, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "save_tree", "restore_tree", "latest_step"]

@@ -1,0 +1,123 @@
+"""Fault-tolerant checkpointing (no external deps).
+
+Design (mirrors Orbax semantics at framework scale):
+  * one directory per step, written to ``<step>.tmp`` then atomically renamed
+    — a crash mid-save never corrupts the latest checkpoint;
+  * leaves stored as .npy inside a flat key->file layout with a JSON manifest
+    (pytree structure, dtypes, shapes) — restore works without the model;
+  * per-host shard files (``shard<k>``) so each data-parallel host writes
+    only its addressable slice at scale;
+  * ``keep_last`` garbage collection;
+  * ``latest_step`` + manifest validation gives crash-safe resume, which the
+    runtime (repro.runtime) uses for restart-on-failure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # np.save can't store ml_dtypes (bf16 etc.); upcast losslessly.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_tree(tree, directory: str, shard: int = 0) -> None:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {
+        "treedef": str(jax.tree_util.tree_structure(tree)),
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
+        "shard": shard,
+    }
+    for k, v in flat.items():
+        fn = os.path.join(directory, k.replace("/", "__") + f".shard{shard}.npy")
+        np.save(fn, v)
+    with open(os.path.join(directory, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore_tree(template, directory: str, shard: int = 0):
+    """Restore into the structure (and dtypes) of ``template``."""
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        manifest = json.load(f)
+    flat_t = _flatten(template)
+    missing = set(flat_t) - set(manifest["keys"])
+    if missing:
+        raise ValueError(f"checkpoint at {directory} missing keys: {sorted(missing)[:5]}")
+    leaves_by_key = {}
+    for k in flat_t:
+        fn = os.path.join(directory, k.replace("/", "__") + f".shard{shard}.npy")
+        leaves_by_key[k] = np.load(fn)
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = leaves_by_key[key]
+        out.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(root: str) -> int | None:
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(root, name, _MANIFEST)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Atomic step checkpoints with retention and resume."""
+
+    def __init__(self, root: str, keep_last: int = 3):
+        self.root = root
+        self.keep_last = keep_last
+        os.makedirs(root, exist_ok=True)
+
+    def dir_for(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def save(self, step: int, tree, shard: int = 0) -> str:
+        final = self.dir_for(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        save_tree(tree, tmp, shard=shard)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+        return final
+
+    def restore_latest(self, template, shard: int = 0):
+        step = latest_step(self.root)
+        if step is None:
+            return None, None
+        return step, restore_tree(template, self.dir_for(step), shard=shard)
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.root)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(self.dir_for(s), ignore_errors=True)

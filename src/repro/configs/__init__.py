@@ -1,0 +1,8 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+from .base import ModelConfig, ShapeConfig, SHAPES, shapes_for
+from .registry import ARCH_IDS, all_cells, get_config, get_reduced
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "shapes_for",
+    "ARCH_IDS", "all_cells", "get_config", "get_reduced",
+]

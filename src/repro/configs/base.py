@@ -1,0 +1,213 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is a ``ModelConfig``; every input-shape cell is a
+``ShapeConfig``.  ``configs.registry`` maps ``--arch`` ids to configs; each
+arch also ships a ``reduced()`` variant for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 64
+    n_shared: int = 2
+    top_k: int = 6
+    d_ff_expert: int = 1408
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    aux_loss: float = 1e-2
+    group_tokens: int = 4096  # dispatch-group size (perf knob)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 16
+    conv_dim: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> d_model // 16 (mamba1 only)
+    head_dim: int = 64  # mamba2 only
+    chunk: int = 256
+    version: int = 1  # 1 = Mamba1 selective scan, 2 = Mamba2 SSD
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    """Modality frontend STUB: input_specs provides precomputed embeddings."""
+
+    n_image_tokens: int = 1600
+    cross_attn_every: int = 5  # a cross-attn layer after every N self layers
+
+
+@dataclass(frozen=True)
+class AudioConfig:
+    """Audio frontend STUB: precomputed frame embeddings feed the encoder."""
+
+    n_frames: int = 1024
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    vision: Optional[VisionConfig] = None
+    audio: Optional[AudioConfig] = None
+    dec_layers: int = 0  # encdec only
+    n_dense_layers: int = 0  # leading non-MoE layers (deepseek)
+    attn_every: int = 0  # hybrid: shared attn block applied every N ssm layers
+    sub_quadratic: bool = False  # may run long_500k
+    # PIM-mode (the paper's technique): weight bits for serving; 0 = off.
+    pim_bits: int = 0
+    param_dtype: str = "bfloat16"
+    # --- perf knobs (hillclimb variants; defaults = baseline) ---
+    kv_chunk: int = 512      # online-softmax KV block size (prefill)
+    remat: bool = True       # checkpoint scanned layer bodies
+    logits_f32: bool = True  # cross-entropy in f32 (False: bf16 logits)
+    act_shard: bool = False  # explicit head-sharding constraints on q/k/v
+    kv_cache_bits: int = 16  # 16 = param dtype; 8 = int8 cache + f32 scales
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------- sizing ---
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (matches init_params within ~1%)."""
+        d, l = self.d_model, self.n_layers
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            s = self.ssm
+            d_in = s.expand * d
+            dt_rank = s.dt_rank or d // 16
+            per = (
+                d * (2 * d_in)  # in_proj (x, z)
+                + d_in * s.conv_dim
+                + d_in * (dt_rank + 2 * s.state_dim)
+                + dt_rank * d_in
+                + d_in * s.state_dim  # A
+                + d_in * d  # out_proj
+            )
+            return emb + l * per
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.mla:
+            m = self.mla
+            q_head = m.qk_nope_dim + m.qk_rope_dim
+            attn = (
+                d * self.n_heads * q_head
+                + d * (m.kv_lora_rank + m.qk_rope_dim)
+                + m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                + self.n_heads * m.v_head_dim * d
+            )
+        mlp = 3 * d * self.d_ff
+        if self.family == "moe":
+            e = self.moe
+            moe_mlp = (e.n_experts + e.n_shared) * 3 * d * e.d_ff_expert + d * e.n_experts
+            n_moe = l - self.n_dense_layers
+            return emb + l * attn + self.n_dense_layers * mlp + n_moe * moe_mlp
+        if self.family == "hybrid":
+            s = self.ssm
+            d_in = s.expand * d
+            nh = d_in // s.head_dim
+            per_ssm = (
+                d * (2 * d_in + 2 * s.state_dim * nh + nh)  # in_proj fused (m2)
+                + d_in * s.conv_dim
+                + nh  # A
+                + d_in * d
+            ) + 3 * d * self.d_ff
+            shared = attn + 3 * d * self.d_ff
+            return emb + l * per_ssm + shared
+        n_dec = self.dec_layers
+        if self.family == "encdec":
+            return emb + l * (attn + 2 * d * self.d_ff) + n_dec * (
+                2 * attn + 2 * d * self.d_ff
+            )
+        if self.family == "vlm":
+            n_cross = l // (self.vision.cross_attn_every or l)
+            return emb + l * (attn + mlp) + n_cross * attn
+        return emb + l * (attn + mlp)
+
+    def active_param_count(self) -> int:
+        """Active (per-token) parameters: MoE counts top_k + shared experts."""
+        if self.family != "moe":
+            return self.param_count()
+        e = self.moe
+        d, l = self.d_model, self.n_layers
+        emb = self.vocab * d * 2
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.mla:
+            total = self.param_count()
+            full_moe = (l - self.n_dense_layers) * (
+                (e.n_experts + e.n_shared) * 3 * d * e.d_ff_expert
+            )
+            active_moe = (l - self.n_dense_layers) * (
+                (e.top_k + e.n_shared) * 3 * d * e.d_ff_expert
+            )
+            return total - full_moe + active_moe
+        mlp_dense = self.n_dense_layers * 3 * d * self.d_ff
+        moe_active = (l - self.n_dense_layers) * (
+            (e.top_k + e.n_shared) * 3 * d * e.d_ff_expert + d * e.n_experts
+        )
+        return emb + l * attn + mlp_dense + moe_active
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shapes_for(cfg: ModelConfig) -> list[ShapeConfig]:
+    """The shape cells an arch runs: long_500k only for sub-quadratic archs
+    (pure full-attention archs skip it — recorded in DESIGN.md §4)."""
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.sub_quadratic:
+        out.append(SHAPES["long_500k"])
+    return out

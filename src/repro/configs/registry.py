@@ -1,0 +1,52 @@
+"""--arch registry: id -> (full config, reduced smoke config)."""
+from __future__ import annotations
+
+from . import (
+    deepseek_v2_lite,
+    falcon_mamba_7b,
+    llama3_2_3b,
+    llama3_2_vision_90b,
+    moonshot_16b_a3b,
+    qwen2_1_5b,
+    seamless_m4t_medium,
+    starcoder2_15b,
+    starcoder2_7b,
+    zamba2_1_2b,
+)
+from .base import ModelConfig, ShapeConfig, SHAPES, shapes_for
+
+_MODULES = {
+    "zamba2-1.2b": zamba2_1_2b,
+    "qwen2-1.5b": qwen2_1_5b,
+    "starcoder2-7b": starcoder2_7b,
+    "llama3.2-3b": llama3_2_3b,
+    "starcoder2-15b": starcoder2_15b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite,
+    "moonshot-v1-16b-a3b": moonshot_16b_a3b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "llama-3.2-vision-90b": llama3_2_vision_90b,
+    "falcon-mamba-7b": falcon_mamba_7b,
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].reduced()
+
+
+def all_cells() -> list[tuple[ModelConfig, ShapeConfig]]:
+    """Every (arch x shape) dry-run cell (32 after documented long_500k skips)."""
+    cells = []
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id)
+        for shape in shapes_for(cfg):
+            cells.append((cfg, shape))
+    return cells
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_reduced", "all_cells", "SHAPES", "shapes_for"]

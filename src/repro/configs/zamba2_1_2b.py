@@ -1,0 +1,34 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000,
+ssm_state=64 — Mamba2 blocks + a shared attention block [arXiv:2411.15242; hf].
+
+Realisation (DESIGN.md §4): 36 Mamba2 layers scanned in 6 groups of 6, a
+single *shared-weight* attention+MLP block applied after each group (Zamba's
+parameter-sharing trick), plus 2 trailing Mamba2 layers = 38 SSM layers.
+Sub-quadratic (the shared attn block is O(seq^2) only at prefill; decode
+state is O(1) SSM + one KV cache), so long_500k runs.
+"""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab=32000,
+    attn_every=6,
+    ssm=SSMConfig(state_dim=64, conv_dim=4, expand=2, head_dim=64, version=2, chunk=256),
+    sub_quadratic=True,
+    pim_bits=8,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=256, attn_every=2, param_dtype="float32",
+        ssm=SSMConfig(state_dim=8, conv_dim=4, expand=2, head_dim=16, version=2, chunk=8),
+    )

@@ -1,0 +1,66 @@
+"""Bit-serial FA/S ALU (paper Fig 1(b), Table I).
+
+The ALU processes one operand bit per step; a carry flip-flop holds the
+running carry/borrow between steps, exactly like the hardware.  All PEs
+(lanes) execute in SIMD, but the Op-Encoder may give each lane its own op-code
+(Booth's algorithm uses per-lane multiplier bits), so the op-code is a per-lane
+array.
+
+Functional contract (validated in tests/test_core_alu.py):
+  ADD: SUM = X + Y  (mod 2**width, two's complement)
+  SUB: SUM = X - Y
+  CPX: SUM = X
+  CPY: SUM = Y
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .isa import OpCode
+
+
+def _carry_init(op: jnp.ndarray) -> jnp.ndarray:
+    """SUB lanes start with carry=1 (borrow via ~Y + 1); others with 0."""
+    return (op == OpCode.SUB).astype(jnp.uint8)
+
+
+def serial_alu(
+    x_bits: jnp.ndarray, y_bits: jnp.ndarray, op: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the bit-serial FA/S over full operands.
+
+    Args:
+      x_bits, y_bits: ``(lanes, width)`` uint8 bit-planes, LSB first.
+      op: ``(lanes,)`` int32 FA/S op-codes.
+
+    Returns:
+      ``(sum_bits, carry_out)`` with ``sum_bits`` of shape ``(lanes, width)``.
+    """
+    op = jnp.asarray(op, dtype=jnp.int32)
+    carry0 = _carry_init(op)
+
+    def step(carry, xy):
+        x, y = xy  # each (lanes,) uint8
+        y_eff = jnp.where(op == OpCode.SUB, 1 - y, y).astype(jnp.uint8)
+        s_fa = (x ^ y_eff ^ carry).astype(jnp.uint8)
+        c_fa = ((x & y_eff) | (carry & (x ^ y_eff))).astype(jnp.uint8)
+        s = jnp.where(
+            op == OpCode.CPX, x, jnp.where(op == OpCode.CPY, y, s_fa)
+        ).astype(jnp.uint8)
+        c = jnp.where((op == OpCode.CPX) | (op == OpCode.CPY), carry, c_fa)
+        return c, s
+
+    carry_out, sum_bits = jax.lax.scan(
+        step, carry0, (x_bits.T, y_bits.T)
+    )
+    return sum_bits.T, carry_out
+
+
+def alu_cycles(width: int, cycles_per_bit: int = 2) -> int:
+    """Cycle cost of one serial ALU pass.
+
+    PiCaSO needs 2 cycles per bit (read + write of the register file through a
+    single port pair); hence ADD/SUB latency ``2N`` in paper Table V.
+    """
+    return cycles_per_bit * width

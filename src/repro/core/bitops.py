@@ -1,0 +1,61 @@
+"""Bit-plane <-> integer conversions and the parallel-to-serial corner turn.
+
+PiCaSO stores operands *bit-serially*: an N-bit operand occupies N consecutive
+wordlines of a PE's register-file column (paper §III-A).  In the functional
+simulator, the register file of a PE array is a ``uint8`` array of shape
+``(num_pes, rf_depth)`` whose entries are single bits.  These helpers convert
+between ordinary integer arrays and striped bit-plane storage.
+
+Two's-complement semantics throughout: ``width``-bit operands represent values
+in ``[-2**(width-1), 2**(width-1))``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def to_bits(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Integer array -> bit-planes, LSB first.  Output shape ``x.shape + (width,)``."""
+    x = jnp.asarray(x, dtype=jnp.int32)
+    shifts = jnp.arange(width, dtype=jnp.int32)
+    return ((x[..., None] >> shifts) & 1).astype(jnp.uint8)
+
+
+def from_bits(bits: jnp.ndarray, signed: bool = True) -> jnp.ndarray:
+    """Bit-planes (LSB first, last axis) -> int32, two's complement if signed."""
+    width = bits.shape[-1]
+    if width > 32:
+        raise ValueError("from_bits supports widths up to 32 (int32 lanes)")
+    weights = (1 << np.arange(width, dtype=np.int64)).astype(np.int64)
+    if signed and width > 0:
+        weights = weights.copy()
+        weights[-1] = -weights[-1]
+    # int32 modular arithmetic == two's-complement semantics for width <= 32.
+    w32 = jnp.asarray(weights.astype(np.int64).astype(np.int32))
+    return jnp.sum(bits.astype(jnp.int32) * w32, axis=-1, dtype=jnp.int32)
+
+
+def sign_extend_bits(bits: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Extend bit-plane operands (last axis) to ``width`` bits, two's complement."""
+    cur = bits.shape[-1]
+    if cur >= width:
+        return bits[..., :width]
+    msb = bits[..., -1:]
+    pad = jnp.broadcast_to(msb, bits.shape[:-1] + (width - cur,))
+    return jnp.concatenate([bits, pad], axis=-1)
+
+
+def corner_turn(words: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Parallel-to-serial corner turn (paper §III-A).
+
+    Takes parallel data ``words`` of shape ``(num_pes,)`` (one word per PE,
+    as read from DRAM/external I/O) and produces the striped column layout
+    ``(num_pes, width)`` written into the BRAM register files.
+    """
+    return to_bits(words, width)
+
+
+def corner_turn_inverse(striped: jnp.ndarray, signed: bool = True) -> jnp.ndarray:
+    """Serial-to-parallel corner turn: gather a striped column back to words."""
+    return from_bits(striped, signed=signed)

@@ -1,0 +1,76 @@
+"""Booth radix-2 bit-serial multiplier (paper §III-B, Table II).
+
+Classic serial/parallel Booth recoding as implemented by the PiCaSO PE: a
+2N-bit product register is updated over N steps; at step ``i`` the Op-Encoder
+inspects the multiplier bit-pair ``(y_i, y_{i-1})`` and requests ADD (+M),
+SUB (-M) or CPX (NOP) of the multiplicand ``M`` into the *upper half* of the
+product register, which is then arithmetic-shifted right by one.  Each step is
+an ``N+1``-bit serial ALU pass (2 cycles/bit), giving the paper's Table V
+latency ``2N^2 + 2N``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .alu import serial_alu
+from .bitops import from_bits, sign_extend_bits, to_bits
+from .isa import booth_decode
+
+
+def booth_multiply_bits(
+    m_bits: jnp.ndarray, y_bits: jnp.ndarray
+) -> jnp.ndarray:
+    """Multiply bit-plane operands.
+
+    Args:
+      m_bits: multiplicand, ``(lanes, N)`` uint8 LSB-first two's complement.
+      y_bits: multiplier, ``(lanes, N)``.
+
+    Returns:
+      Product bit-planes ``(lanes, 2N)`` (exact signed product, two's compl.).
+    """
+    lanes, width = m_bits.shape
+    m_ext = sign_extend_bits(m_bits, width + 1)  # (lanes, N+1)
+
+    p0 = jnp.zeros((lanes, 2 * width), dtype=jnp.uint8)
+    y_prev0 = jnp.zeros((lanes,), dtype=jnp.uint8)
+
+    def step(carry, y_i):
+        p, y_prev = carry  # p: (lanes, 2N)
+        pair = (2 * y_i + y_prev).astype(jnp.int32)
+        op = booth_decode(pair)  # (lanes,) FA/S op-codes
+        hi = sign_extend_bits(p[:, width:], width + 1)  # (lanes, N+1)
+        s, _ = serial_alu(hi, m_ext, op)  # (lanes, N+1)
+        # Arithmetic shift right by 1: low half picks up s[0]; high half = s[1:].
+        p_new = jnp.concatenate([p[:, 1:width], s[:, :1], s[:, 1:]], axis=1)
+        return (p_new, y_i), None
+
+    (p, _), _ = jax.lax.scan(step, (p0, y_prev0), y_bits.T)
+    return p
+
+
+def booth_multiply(x: jnp.ndarray, y: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Integer-level wrapper: signed ``width``-bit multiply via the serial PE."""
+    xb = to_bits(x, width)
+    yb = to_bits(y, width)
+    return from_bits(booth_multiply_bits(xb, yb), signed=True)
+
+
+def booth_cycles(width: int) -> int:
+    """Paper Table V: MULT latency (cycles) = 2N^2 + 2N."""
+    return 2 * width * width + 2 * width
+
+
+def booth_nop_fraction(y: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Fraction of Booth steps that are NOPs (bit-pairs 00/11).
+
+    Paper §V-B: on average half of the intermediate steps are NOPs, which a
+    controller-scheduled overlay can skip (custom designs mostly cannot).
+    """
+    yb = to_bits(y, width).astype(jnp.int32)
+    prev = jnp.concatenate(
+        [jnp.zeros(yb.shape[:-1] + (1,), jnp.int32), yb[..., :-1]], axis=-1
+    )
+    nop = (yb == prev).astype(jnp.float32)
+    return jnp.mean(nop)

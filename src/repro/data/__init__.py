@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (host-sharded)."""
+from .pipeline import DataConfig, batch_spec, make_batch, token_stream
+
+__all__ = ["DataConfig", "make_batch", "token_stream", "batch_spec"]

@@ -1,0 +1,22 @@
+"""PIM compute kernels (Pallas, TPU target; interpret-mode validated on CPU).
+
+  pim_matmul   — dequant-fused INT4/INT8 weight matmul (the PIM adaptation)
+  bitplane     — bit-plane-decomposed matmul (PIM-semantic faithful form)
+  fold_reduce  — OpMux-style log-step folding reduction
+  ops          — jit'd public wrappers;  ref — pure-jnp oracles
+"""
+from .ops import (
+    bitplane_matmul,
+    fold_reduce,
+    fold_sum,
+    pim_dense,
+    pim_dense_bitplane,
+    pim_matmul,
+    quantize_for_pim,
+)
+from . import ref
+
+__all__ = [
+    "pim_matmul", "bitplane_matmul", "fold_reduce", "ref",
+    "quantize_for_pim", "pim_dense", "pim_dense_bitplane", "fold_sum",
+]

@@ -1,0 +1,48 @@
+"""OpMux-style folding reduction as a Pallas kernel (paper Fig 2 / §III-C).
+
+Reduces the last axis of ``(rows, q)`` to ``(rows,)`` by log2(q) halve-and-add
+steps inside VMEM — the spatial analogue of the A-FOLD-1..4 serial passes: at
+each level the 'second half' of the tile is the Y operand of an element-wise
+add with the first half, no copies through HBM ('bitlines').
+
+Used for partial-sum trees (MoE top-k combine, attention denominator folds)
+and as the in-tile half of the hierarchical reduction whose cross-device half
+is the binary-hopping collective schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fold_kernel(x_ref, o_ref, *, q: int):
+    x = x_ref[...].astype(jnp.float32)  # (br, q)
+    h = q
+    while h > 1:
+        h //= 2
+        x = x[:, :h] + x[:, h:2 * h]  # A-FOLD level: Y = second half of A
+    o_ref[...] = x  # (br, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def fold_reduce(
+    x: jnp.ndarray, *, br: int = 256, interpret: bool = False
+) -> jnp.ndarray:
+    """Fold-sum the last axis of ``x`` (rows, q) -> (rows,). q: power of two."""
+    rows, q = x.shape
+    assert q & (q - 1) == 0, f"q={q} must be a power of two"
+    br = min(br, rows)
+    assert rows % br == 0, (rows, br)
+
+    out = pl.pallas_call(
+        functools.partial(_fold_kernel, q=q),
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, q), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[:, 0]

@@ -1,0 +1,52 @@
+"""Public jit'd entry points for the PIM kernels.
+
+Selects interpret mode automatically off-TPU so the same call sites work in
+CPU tests (Pallas interpret) and on real hardware (compiled Mosaic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import QuantizedTensor, pack_int4, quantize_symmetric, to_bitplanes
+
+from .bitplane import bitplane_matmul
+from .fold_reduce import fold_reduce
+from .pim_matmul import pim_matmul
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize_for_pim(w: jnp.ndarray, bits: int = 8) -> QuantizedTensor:
+    """Quantize a (K, N) weight for PIM-mode matmul (packs nibbles for int4)."""
+    q = quantize_symmetric(w, bits=bits, axis=0)
+    if bits == 4:
+        return QuantizedTensor(pack_int4(q.codes), q.scale, 4, packed=True)
+    return q
+
+
+def pim_dense(x: jnp.ndarray, q: QuantizedTensor, **kw) -> jnp.ndarray:
+    """Quantized dense layer: x @ dequant(q).  Accepts int4-packed or int8."""
+    return pim_matmul(
+        x, q.codes, q.scale, bits=q.bits, interpret=_interpret(), **kw
+    )
+
+
+def pim_dense_bitplane(x: jnp.ndarray, w: jnp.ndarray, bits: int = 4, **kw) -> jnp.ndarray:
+    """PIM-semantic path: quantize + bit-plane decompose + plane-wise matmul."""
+    q = quantize_symmetric(w, bits=bits, axis=0)
+    planes = to_bitplanes(q.codes, bits)
+    return bitplane_matmul(x, planes, q.scale, interpret=_interpret(), **kw)
+
+
+def fold_sum(x: jnp.ndarray, **kw) -> jnp.ndarray:
+    """OpMux-fold reduction of the last axis (power-of-two length)."""
+    return fold_reduce(x, interpret=_interpret(), **kw)
+
+
+__all__ = [
+    "pim_matmul", "bitplane_matmul", "fold_reduce",
+    "quantize_for_pim", "pim_dense", "pim_dense_bitplane", "fold_sum",
+]

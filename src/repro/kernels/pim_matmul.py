@@ -1,0 +1,121 @@
+"""Dequant-fused quantized matmul — the TPU-native PiCaSO adaptation.
+
+PIM thesis: compute sits at the memory boundary, operands are stored at
+reduced precision, so throughput is limited only by memory bandwidth.  On TPU
+the analogous structure is: weights live in HBM as INT8 codes or INT4 nibble
+pairs; each grid step DMAs a *packed* tile into VMEM, expands it to f32 right
+next to the MXU, and accumulates into the resident output tile.  HBM traffic
+for the weights drops 4x/8x vs f32 (2x/4x vs bf16), moving memory-bound
+layers (decode-time matvecs — the paper's MLP/RNN regime, §I) toward the
+compute roofline.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost; the output BlockSpec ignores k,
+so the f32 accumulator tile stays resident in VMEM across the K sweep (zero
+spill) — exactly like PiCaSO keeping partial sums in the PE register file
+during a row MAC.  MXU alignment: bm/bn/bk multiples of 128 for full-size
+inputs (smaller shapes shrink the tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_int8_kernel(x_ref, w_ref, s_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Dequantize the weight tile at the VMEM boundary (the 'BRAM port').
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] *= s_ref[...]
+
+
+def _mm_int4_kernel(x_ref, w_ref, s_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    packed = w_ref[...]  # (bk//2, bn) int8: two K rows per byte
+    lo = (((packed & 0xF) ^ 8) - 8).astype(jnp.float32)
+    hi = ((((packed >> 4) & 0xF) ^ 8) - 8).astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    # Even K rows hit the low nibbles, odd K rows the high nibbles.
+    o_ref[...] += jnp.dot(x[:, 0::2], lo, preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.dot(x[:, 1::2], hi, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] *= s_ref[...]
+
+
+def _pick(block: int, dim: int) -> int:
+    return min(block, dim)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret"))
+def pim_matmul(
+    x: jnp.ndarray,
+    w_codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    bits: int = 8,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x (M,K) f32/bf16 @ quantized w -> (M,N) f32.
+
+    bits=8: ``w_codes`` is (K, N) int8.  bits=4: ``w_codes`` is the
+    nibble-packed (K//2, N) int8 from ``quant.pack_int4``.
+    ``scale``: (1, N) f32 per-output-channel scale.
+    """
+    m, k_dim = x.shape
+    if bits == 8:
+        k_w, n = w_codes.shape
+        assert k_w == k_dim, (k_w, k_dim)
+    elif bits == 4:
+        k_w, n = w_codes.shape
+        assert 2 * k_w == k_dim, (k_w, k_dim)
+    else:
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+
+    bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, k_dim)
+    assert m % bm == 0 and n % bn == 0 and k_dim % bk == 0, (m, n, k_dim, bm, bn, bk)
+    if bits == 4:
+        assert bk % 2 == 0
+    n_k = k_dim // bk
+    grid = (m // bm, n // bn, n_k)
+
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    if bits == 8:
+        w_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+        kernel = functools.partial(_mm_int8_kernel, n_k=n_k)
+    else:
+        w_spec = pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j))
+        kernel = functools.partial(_mm_int4_kernel, n_k=n_k)
+    s_spec = pl.BlockSpec((1, bn), lambda i, j, k: (0, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, w_spec, s_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_codes, scale)

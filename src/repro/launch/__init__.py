@@ -1,0 +1,4 @@
+"""Launch layer: production mesh, sharding rules, step builders, dry-run."""
+from .mesh import data_axes, make_mesh_from_plan, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_mesh_from_plan", "data_axes"]

@@ -1,0 +1,131 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   Set here and ONLY here — smoke tests and benches must see 1 device.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell, lower + compile the appropriate
+step (train_step / prefill / serve_step) on the production meshes:
+
+  single-pod: (16, 16)      = 256 chips  (data, model)
+  multi-pod : (2, 16, 16)   = 512 chips  (pod, data, model)
+
+and record memory_analysis / cost_analysis / collective stats for the
+roofline.  Any failure here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the framework.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b  # one arch
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k --mesh multi                               # one cell
+  ... --out results/dryrun.json                                   # persist
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(cfg, shape, mesh, *, compile_: bool = True, verbose: bool = True,
+             save_hlo: str | None = None):
+    from repro.launch.roofline import analyze
+    from repro.launch.steps import lower_cell
+
+    t0 = time.time()
+    cell = lower_cell(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    out = {
+        "arch": cfg.arch_id, "shape": shape.name,
+        "mesh": cell.mesh_desc, "kind": cell.kind,
+        "lower_s": round(t_lower, 1), "ok": True,
+    }
+    if not compile_:
+        return out
+    t0 = time.time()
+    roof = analyze(cell, cfg, shape, save_hlo=save_hlo)
+    out["compile_s"] = round(time.time() - t0, 1)
+    out.update({k: v for k, v in roof.row().items() if k not in ("arch", "shape", "mesh")})
+    out["bytes_per_device_gb"] = roof.bytes_per_device / 2**30
+    out["collectives"] = {
+        k: {"bytes": roof.collectives.bytes_by_kind[k],
+            "count": roof.collectives.count_by_kind[k]}
+        for k in roof.collectives.bytes_by_kind
+    }
+    if verbose:
+        print(
+            f"  OK  {cfg.arch_id:24s} {shape.name:12s} mesh={cell.mesh_desc:8s} "
+            f"lower={out['lower_s']:6.1f}s compile={out['compile_s']:6.1f}s "
+            f"bottleneck={roof.bottleneck:10s} "
+            f"t=(c {roof.t_compute*1e3:9.3f} | m {roof.t_memory*1e3:9.3f} | "
+            f"x {roof.t_collective*1e3:9.3f}) ms  "
+            f"useful={roof.useful_flops_ratio:5.2f} "
+            f"mem/dev={out['bytes_per_device_gb']:.2f}GiB",
+            flush=True,
+        )
+    return out
+
+
+def main() -> None:
+    import jax
+
+    from repro.configs import SHAPES, get_config, registry, shapes_for
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    ap.add_argument("--no-compile", action="store_true", help="lower only")
+    ap.add_argument("--save-hlo", default=None,
+                    help="directory to dump compiled HLO (gzip) per cell")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        f"dry-run needs 512 host devices, got {jax.device_count()} "
+        "(XLA_FLAGS must be set before any jax import)"
+    )
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single-pod", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi-pod", make_production_mesh(multi_pod=True)))
+
+    arch_ids = [args.arch] if args.arch else registry.ARCH_IDS
+    results, failures = [], []
+    for arch_id in arch_ids:
+        cfg = get_config(arch_id)
+        shapes = shapes_for(cfg)
+        if args.shape:
+            shapes = [s for s in shapes if s.name == args.shape]
+        for shape in shapes:
+            for mesh_name, mesh in meshes:
+                try:
+                    results.append(
+                        run_cell(cfg, shape, mesh, compile_=not args.no_compile,
+                                 save_hlo=args.save_hlo)
+                    )
+                except Exception as e:  # noqa: BLE001 — report all failures
+                    traceback.print_exc()
+                    failures.append(
+                        {"arch": arch_id, "shape": shape.name, "mesh": mesh_name,
+                         "error": f"{type(e).__name__}: {e}", "ok": False}
+                    )
+                    print(f"  FAIL {arch_id} {shape.name} {mesh_name}: {e}",
+                          flush=True)
+
+    print(f"\n{len(results)} cells OK, {len(failures)} failed")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"ok": results, "failed": failures}, f, indent=1)
+        print(f"wrote {args.out}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver (§Perf).
+
+Lowers + compiles one (arch x shape x mesh) cell under a set of variants and
+prints the roofline-term deltas vs baseline.  Used to drive the
+hypothesis -> change -> measure -> validate iterations recorded in
+EXPERIMENTS.md §Perf.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf --arch qwen2-1.5b \
+      --shape decode_32k --variants no_fsdp,pim4
+  PYTHONPATH=src python -m repro.launch.perf --arch deepseek-v2-lite-16b \
+      --shape train_4k --variants moe_group_2048,no_remat,logits_bf16
+"""
+import argparse
+import json
+
+VARIANTS = {
+    "baseline": {},
+    "no_fsdp": {"fsdp": False},
+    "pim4": {"pim_bits": 4},
+    "no_remat": {"remat": False},
+    "logits_bf16": {"logits_f32": False},
+    "kv_chunk_1024": {"kv_chunk": 1024},
+    "kv_chunk_2048": {"kv_chunk": 2048},
+    "kv_chunk_256": {"kv_chunk": 256},
+    "moe_group_1024": {"moe_group": 1024},
+    "moe_group_2048": {"moe_group": 2048},
+    "moe_group_8192": {"moe_group": 8192},
+    "act_shard": {"act_shard": True},
+    "kv8": {"kv_cache_bits": 8},
+    "kv8_no_fsdp": {"kv_cache_bits": 8, "fsdp": False},
+    "act_shard_no_fsdp": {"act_shard": True, "fsdp": False},
+}
+
+
+def run(arch: str, shape_name: str, mesh_kind: str, variant_names: list[str],
+        out_path: str | None = None):
+    from repro.configs import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import analyze
+    from repro.launch.steps import lower_cell
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+
+    rows = []
+    base = None
+    for vname in ["baseline"] + [v for v in variant_names if v != "baseline"]:
+        spec = VARIANTS[vname] if vname in VARIANTS else json.loads(vname)
+        cell = lower_cell(cfg, shape, mesh, variant=spec)
+        cell.arch = f"{cell.arch}+{vname}"
+        roof = analyze(cell, cfg, shape, save_hlo="results/hlo_perf")
+        row = {
+            "variant": vname,
+            "t_compute_ms": roof.t_compute * 1e3,
+            "t_memory_ms": roof.t_memory * 1e3,
+            "t_collective_ms": roof.t_collective * 1e3,
+            "bottleneck": roof.bottleneck,
+            "t_bound_ms": roof.t_bound * 1e3,
+            "useful": roof.useful_flops_ratio,
+            "roofline_fraction": roof.roofline_fraction,
+            "coll_by_kind": {k: round(v / 2**20, 1)
+                             for k, v in roof.collectives.bytes_by_kind.items()},
+        }
+        if base is None:
+            base = row
+        row["bound_vs_baseline"] = row["t_bound_ms"] / base["t_bound_ms"]
+        rows.append(row)
+        print(
+            f"{vname:16s} bound={row['t_bound_ms']:10.3f}ms "
+            f"({row['bound_vs_baseline']:.3f}x) [{row['bottleneck']:10s}] "
+            f"c={row['t_compute_ms']:9.3f} m={row['t_memory_ms']:10.3f} "
+            f"x={row['t_collective_ms']:10.3f} rf={row['roofline_fraction']:.3f}",
+            flush=True,
+        )
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variants", default="baseline",
+                    help="comma-separated variant names (see VARIANTS) or "
+                         "inline JSON dicts")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(args.arch, args.shape, args.mesh, args.variants.split(","), args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), in seconds:
+  compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory     = HLO_bytes / (chips x HBM_bw)
+  collective = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``.  IMPORTANT:
+cost_analysis runs on the SPMD-*partitioned* module, so flops/bytes are
+already PER-DEVICE; the terms below therefore divide by per-chip rates only.
+``useful_flops_ratio`` compares against global MODEL_FLOPS via
+hlo_flops * n_devices.  Collective bytes are NOT in cost_analysis, so we
+parse the optimized HLO text and sum result sizes of all-gather / all-reduce
+/ reduce-scatter / all-to-all / collective-permute ops — also per-shard, i.e.
+the bytes each device's link carries (1-pass model; ring all-reduce moves
+~2x, recorded as a known underestimate).  Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e per-chip constants (per the system spec).
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape like 'f32[128,256]' or a tuple of them."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output shapes of every collective op in (optimized) HLO text.
+
+    Counts the *result* shape of each collective instruction — the data that
+    actually crosses links (start/done pairs counted once via the -start op;
+    plain (non-async) forms counted directly).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        lhs_rhs = s.split(" = ", 1)
+        if len(lhs_rhs) != 2:
+            continue
+        _, rhs = lhs_rhs
+        # HLO: '%name = <shape-with-layout> <opcode>(operands...), attrs'
+        op = None
+        for kind in _COLLECTIVES:
+            # match '<shape> all-reduce(' / '-start(' but not '-done('
+            if re.search(rf"\}}?\s{kind}(-start)?\(", rhs):
+                op = kind
+                break
+        if op is None:
+            continue
+        shape_str = rhs.split(f" {op}")[0]
+        nbytes = _shape_bytes(shape_str)
+        stats.bytes_by_kind[op] = stats.bytes_by_kind.get(op, 0) + nbytes
+        stats.count_by_kind[op] = stats.count_by_kind.get(op, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    collectives: CollectiveStats = None
+    bytes_per_device: float = 0.0  # peak memory from memory_analysis (if any)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS  # per-device flops / per-chip rate
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x devices) — fraction of compiled compute
+        that is 'useful' (catches remat/redundancy/padding waste)."""
+        total = self.hlo_flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of the compute roofline if perfectly overlapped:
+        t_compute / max(terms)."""
+        return self.t_compute / self.t_bound if self.t_bound else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "bottleneck": self.bottleneck,
+            "hlo_gflops": self.hlo_flops / 1e9, "hlo_gbytes": self.hlo_bytes / 1e9,
+            "coll_gbytes": self.collective_bytes / 1e9,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N_active*D for inference steps."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(lowered_cell, cfg, shape, save_hlo: str | None = None) -> Roofline:
+    """Compile a lowered cell and derive its roofline terms.
+
+    Primary source: the trip-count-aware HLO analyzer (hlo_cost) — XLA's own
+    cost_analysis counts while-loop bodies once, under-reporting scan-based
+    models by the trip count.  XLA numbers are kept as a lower-bound
+    cross-check (max is taken, in case a construct escapes our parser).
+
+    ``save_hlo``: directory to write the compiled HLO text (gzip) so perf
+    iterations can re-analyze without recompiling.
+    """
+    from .hlo_cost import analyze_hlo
+
+    compiled = lowered_cell.lowered.compile()
+    if save_hlo:
+        import gzip
+        import os
+
+        os.makedirs(save_hlo, exist_ok=True)
+        tag = f"{lowered_cell.arch}_{lowered_cell.shape}_{lowered_cell.mesh_desc}"
+        with gzip.open(os.path.join(save_hlo, tag + ".hlo.gz"), "wt") as f:
+            f.write(compiled.as_text())
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    scaled = analyze_hlo(hlo)
+    flops = max(scaled.flops, xla_flops)
+    nbytes = max(scaled.bytes_accessed, xla_bytes)
+    colls = CollectiveStats(
+        bytes_by_kind={k: int(v) for k, v in scaled.collective_by_kind.items()},
+        count_by_kind={k: 1 for k in scaled.collective_by_kind},
+    )
+
+    mem_per_dev = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            # Per-partition peak (buffer assignment). The XLA:CPU backend's
+            # temp accounting is unreliable for scan-heavy modules, so we
+            # report peak_memory (args+outputs+live temps at peak).
+            mem_per_dev = float(getattr(ma, "peak_memory_in_bytes", 0))
+    except Exception:
+        pass
+
+    return Roofline(
+        arch=lowered_cell.arch,
+        shape=lowered_cell.shape,
+        mesh=lowered_cell.mesh_desc,
+        n_devices=lowered_cell.n_devices,
+        hlo_flops=flops,
+        hlo_bytes=nbytes,
+        collective_bytes=float(colls.total_bytes),
+        model_flops=model_flops_for(cfg, shape),
+        collectives=colls,
+        bytes_per_device=mem_per_dev,
+    )

@@ -1,0 +1,225 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs.
+
+Strategy (DESIGN.md §6):
+  * weights: FSDP over the batch axes (pod, data) x tensor-parallel over
+    'model' (attention heads / d_ff / experts / vocab);
+  * activations: batch over (pod, data); intermediate shardings left to
+    GSPMD propagation (constraints added only where the perf iteration
+    showed propagation picked wrong — see EXPERIMENTS.md §Perf);
+  * MoE: experts over 'model' (EP) — the dispatch einsum reshards tokens
+    group->expert, which GSPMD lowers to the canonical all-to-all pair;
+  * decode caches: batch over (pod, data) when divisible, else KV-heads over
+    'model' with the sequence dim over 'data' (long_500k, batch=1).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _names(path) -> list[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+
+
+def param_spec(path_names: list[str], ndim: int, fsdp) -> P:
+    """PartitionSpec for a parameter leaf, identified by its path tail.
+
+    ``ndim`` is the leaf rank *including* any leading stack dims; the rule
+    describes the trailing (semantic) dims and is left-padded with None.
+    """
+    name = path_names[-1]
+    in_moe = "moe" in path_names
+    base: tuple
+    if name in ("wq", "wk", "wv"):
+        base = (fsdp, "model")
+    elif name == "wo":
+        base = ("model", fsdp)
+    elif name in ("gate", "up"):
+        base = ("model", fsdp, None) if in_moe else (fsdp, "model")
+    elif name == "down":
+        base = ("model", None, fsdp) if in_moe else ("model", fsdp)
+    elif name == "router":
+        base = (None, None)
+    elif name == "embed":
+        base = ("model", None)
+    elif name == "head":
+        base = (None, "model")
+    elif name == "w_dkv":
+        base = (fsdp, None)
+    elif name in ("w_uk", "w_uv"):
+        base = ("model", None, None)
+    elif name == "in_proj":  # mamba: shard d_model rows; packed cols stay whole
+        base = (fsdp, None)
+    elif name == "out_proj":
+        base = (None, fsdp)
+    elif name in ("x_proj", "dt_proj", "conv_w"):
+        base = (None, None)
+    elif name == "A_log" and ndim >= 2:
+        base = (None, None)
+    else:
+        # norms, biases, scalars, 1D dynamics params: replicate
+        base = tuple(None for _ in range(min(ndim, 1)))
+    pad = ndim - len(base)
+    if pad < 0:  # scalar or smaller than rule (e.g. unstacked)
+        base = base[-ndim:] if ndim else ()
+        pad = 0
+    return P(*((None,) * pad + tuple(base)))
+
+
+def param_shardings(mesh, params_shape, cfg: ModelConfig, fsdp_enabled: bool = True):
+    """Tree of NamedShardings matching a params (shape-)tree.
+
+    ``fsdp_enabled=False`` replicates weights across the batch axes (pure
+    DP+TP): fewer per-layer all-gathers at the cost of per-device weight
+    memory — a hillclimb variant for collective-bound cells.
+    """
+    fsdp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    fsdp = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    if not fsdp_enabled:
+        fsdp = None
+
+    def conv(path, leaf):
+        names = _names(path)
+        # PIM-quantized leaf: codes use the weight rule; scale follows last dim.
+        if names and names[-1] == "codes":
+            spec = param_spec(names[:-1] or names, leaf.ndim, fsdp)
+            return NamedSharding(mesh, spec)
+        if names and names[-1] == "scale":
+            wspec = param_spec(names[:-1] or names, leaf.ndim, fsdp)
+            last = wspec[-1] if len(wspec) else None
+            return NamedSharding(mesh, P(*((None,) * (leaf.ndim - 1) + (last,))))
+        return NamedSharding(mesh, param_spec(names, leaf.ndim, fsdp))
+
+    return jax.tree_util.tree_map_with_path(conv, params_shape)
+
+
+def opt_state_shardings(mesh, opt_shape, cfg: ModelConfig, fsdp_enabled: bool = True):
+    """Optimizer state: m/v/master follow the param shardings; step replicated.
+
+    Note: even with fsdp_enabled=False for the *params*, optimizer state
+    stays FSDP-sharded (ZeRO-1 style) — it is only touched once per step.
+    """
+    p_shard = {
+        k: param_shardings(mesh, v, cfg)
+        for k, v in opt_shape.items()
+        if k in ("m", "v", "master")
+    }
+    return {"step": NamedSharding(mesh, P()), **p_shard}
+
+
+def batch_shardings(mesh, batch_spec_tree):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_axis = dp if len(dp) > 1 else dp[0]
+
+    def conv(leaf):
+        spec = (dp_axis,) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(conv, batch_spec_tree)
+
+
+def cache_shardings(mesh, cache_shape, cfg: ModelConfig, shape: ShapeConfig):
+    """Decode caches. Leaves have leading stack dims then (B, ...) payload.
+
+    Identified by trailing-dim semantics:
+      kv cache k/v: (..., B, S, KV, hd)
+      mla cache c/kr: (..., B, S, lora)
+      ssm h: (..., B, *state dims), conv: (..., B, K-1, C)
+    """
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_axis = dp if len(dp) > 1 else dp[0]
+    n_dp = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        n_dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    batch_ok = shape.global_batch % n_dp == 0 and shape.global_batch >= n_dp
+
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def conv_kv_scale(leaf):
+        nd = leaf.ndim
+        kv_heads = leaf.shape[-2]
+        kv_div = kv_heads % model_size == 0 and kv_heads >= model_size
+        if batch_ok:
+            return (None,) * (nd - 3) + (
+                (dp_axis, "model", None) if kv_div else (dp_axis, None, "model")
+            )
+        return (None,) * (nd - 3) + (
+            (None, "model", "data") if kv_div else (None, None, ("data", "model"))
+        )
+
+    def conv(path, leaf):
+        names = _names(path)
+        name = names[-1]
+        nd = leaf.ndim
+        if name in ("k", "v"):  # (..., B, KV, S, hd) — head-major cache
+            # KV heads shard over 'model' when they divide it; otherwise use
+            # sequence-parallel caches (seq over 'model'): softmax max/denom
+            # and the attn@V contraction psum are tiny vs replicating the
+            # cache (e.g. llama-90B decode_32k: 86 -> 5.4 GiB/device).
+            kv_heads = leaf.shape[-3]
+            kv_div = kv_heads % model_size == 0 and kv_heads >= model_size
+            if batch_ok:
+                spec = (None,) * (nd - 4) + (
+                    (dp_axis, "model", None, None) if kv_div
+                    else (dp_axis, None, "model", None)
+                )
+            else:
+                spec = (None,) * (nd - 4) + (
+                    (None, "model", "data", None) if kv_div
+                    else (None, None, ("data", "model"), None)
+                )
+        elif name in ("k_scale", "v_scale"):  # (..., B, KV, S)
+            base = conv_kv_scale(leaf)
+            spec = base
+        elif name in ("c", "kr"):  # (..., B, S, lora)
+            if batch_ok:
+                spec = (None,) * (nd - 3) + (dp_axis, None, None)
+            else:
+                spec = (None,) * (nd - 3) + (None, "data", None)
+        elif name == "h":  # ssm state (..., B, d_in/nh, ...)
+            spec = ((None,) * (nd - 3)
+                    + ((dp_axis,) if batch_ok else (None,)) + ("model", None))
+            spec = spec[:nd]
+        elif name == "conv":  # (..., B, K-1, C)
+            spec = (None,) * (nd - 3) + ((dp_axis if batch_ok else None), None, None)
+        else:
+            spec = (None,) * nd
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(conv, cache_shape)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def sanitize(shard_tree, shape_tree):
+    """Drop named axes from dims they don't divide evenly.
+
+    pjit requires explicit argument shardings to divide the dims exactly
+    (e.g. kv_heads=2 cannot shard over model=16); GSPMD may pad
+    *intermediates* but not arguments.  Applied to every sharding tree right
+    before lower().
+    """
+
+    def fix(sh, leaf):
+        if not isinstance(sh, NamedSharding):
+            return sh
+        mesh = sh.mesh
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        spec = list(sh.spec) + [None] * (len(leaf.shape) - len(sh.spec))
+        out = []
+        for dim, names in zip(leaf.shape, spec):
+            if names is None:
+                out.append(None)
+                continue
+            group = names if isinstance(names, tuple) else (names,)
+            prod = 1
+            for a in group:
+                prod *= sizes[a]
+            out.append(names if dim % prod == 0 and dim >= prod else None)
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(fix, shard_tree, shape_tree)

@@ -1,0 +1,203 @@
+"""Distributed train / prefill / decode step builders.
+
+``lower_cell`` is the single entry point the dry-run, roofline, and perf
+iterations all share: given (arch config, shape config, mesh) it constructs
+the right step function, the ShapeDtypeStruct inputs (no allocation), the
+in/out shardings, and returns the jax.jit lowered artifact.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data import batch_spec
+from repro.models import decode_step, forward, init_cache, init_params, loss_fn
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.serving import quantize_tree
+
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+    replicated,
+    sanitize,
+)
+
+# decode_32k / long_500k lower serve_step with a KV cache of this length.
+DECODE_CACHE_LEN = {"decode_32k": 32_768, "long_500k": 524_288}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+        lr_scale = cosine_schedule(
+            opt_state["step"], opt_cfg.warmup_steps, opt_cfg.total_steps
+        )
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg, lr_scale)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = forward(params, cfg, batch)
+        # serving prefill returns the last-position logits (next-token)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, extras_keys: tuple = ()):
+    def serve_step(params, cache, tokens, pos, extras):
+        logits, cache = decode_step(params, cfg, tokens, cache, pos, extras)
+        return logits, cache
+
+    return serve_step
+
+
+@dataclass
+class LoweredCell:
+    arch: str
+    shape: str
+    mesh_desc: str
+    kind: str
+    lowered: Any
+    n_devices: int
+
+
+def _params_shape(cfg: ModelConfig, quantized: bool):
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    if quantized:
+        shapes = jax.eval_shape(lambda: quantize_tree_shapes(shapes, cfg.pim_bits))
+    return shapes
+
+
+def quantize_tree_shapes(shapes, bits):
+    """quantize_tree lifted to ShapeDtypeStructs via eval_shape tricks."""
+    leaves, treedef = jax.tree_util.tree_flatten(shapes)
+    dummies = [jnp.zeros(l.shape, l.dtype) if 0 not in l.shape else l for l in leaves]
+    tree = jax.tree_util.tree_unflatten(treedef, dummies)
+    return quantize_tree(tree, bits)
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    *,
+    opt_cfg: Optional[AdamWConfig] = None,
+    pim: Optional[bool] = None,
+    donate: bool = True,
+    variant: Optional[dict] = None,
+) -> LoweredCell:
+    """Lower (don't run) one (arch x shape) cell on a mesh.
+
+    train_4k  -> train_step(params, opt_state, batch)
+    prefill_* -> prefill_step(quantized_params, batch)
+    decode_*  -> serve_step(quantized_params, cache, tokens, pos, extras)
+
+    ``variant``: hillclimb knobs — any of
+      fsdp (bool), pim_bits (int), kv_chunk (int), remat (bool),
+      logits_f32 (bool), moe_group (int).  Absent keys = baseline.
+    """
+    variant = dict(variant or {})
+    fsdp_enabled = variant.pop("fsdp", True)
+    if "moe_group" in variant and cfg.moe is not None:
+        import dataclasses as _dc
+
+        cfg = cfg.replace(moe=_dc.replace(cfg.moe, group_tokens=variant.pop("moe_group")))
+    variant.pop("moe_group", None)
+    cfg_knobs = {k: v for k, v in variant.items()
+                 if k in ("pim_bits", "kv_chunk", "remat", "logits_f32",
+                          "act_shard", "kv_cache_bits")}
+    if cfg_knobs:
+        cfg = cfg.replace(**cfg_knobs)
+    use_pim = cfg.pim_bits > 0 if pim is None else pim
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape)
+
+    if shape.kind == "train":
+        params_shape = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        p_sh = sanitize(param_shardings(mesh, params_shape, cfg, fsdp_enabled),
+                        params_shape)
+        o_sh = sanitize(opt_state_shardings(mesh, opt_shape, cfg), opt_shape)
+        b_spec = batch_spec(cfg, shape)
+        b_sh = sanitize(batch_shardings(mesh, b_spec), b_spec)
+        step = make_train_step(cfg, opt_cfg or AdamWConfig())
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        with mesh:
+            lowered = jitted.lower(params_shape, opt_shape, b_spec)
+        return LoweredCell(cfg.arch_id, shape.name, mesh_desc, "train", lowered,
+                           mesh.devices.size)
+
+    # inference cells use PIM-quantized weights when the arch enables them
+    params_shape = _params_shape(cfg, quantized=use_pim)
+    p_sh = sanitize(param_shardings(mesh, params_shape, cfg, fsdp_enabled),
+                    params_shape)
+
+    if shape.kind == "prefill":
+        b_spec = batch_spec(cfg, shape)
+        b_sh = sanitize(batch_shardings(mesh, b_spec), b_spec)
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=None)
+        with mesh:
+            lowered = jitted.lower(params_shape, b_spec)
+        return LoweredCell(cfg.arch_id, shape.name, mesh_desc, "prefill", lowered,
+                           mesh.devices.size)
+
+    # decode: one new token against a cache of shape.seq_len
+    cache_len = shape.seq_len
+    b = shape.global_batch
+    cache_shape = jax.eval_shape(lambda: init_cache(cfg, b, cache_len))
+    c_sh = sanitize(cache_shardings(mesh, cache_shape, cfg, shape), cache_shape)
+    tok_spec = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    n_dp = 1
+    for a in dp:
+        n_dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    batch_ok = b % n_dp == 0 and b >= n_dp
+    dp_axis = dp if len(dp) > 1 else dp[0]
+    tok_sh = NamedSharding(mesh, P(dp_axis, None) if batch_ok else P(None, None))
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    extras_spec = {}
+    if cfg.family == "vlm":
+        extras_spec["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision.n_image_tokens, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "encdec":
+        extras_spec["enc_out"] = jax.ShapeDtypeStruct(
+            (b, cfg.audio.n_frames, cfg.d_model), jnp.float32
+        )
+    e_sh = (
+        sanitize(batch_shardings(mesh, extras_spec), extras_spec)
+        if (extras_spec and batch_ok)
+        else jax.tree.map(lambda _: replicated(mesh), extras_spec)
+    )
+
+    step = make_decode_step(cfg)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, c_sh, tok_sh, replicated(mesh), e_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,) if donate else (),
+    )
+    with mesh:
+        lowered = jitted.lower(params_shape, cache_shape, tok_spec, pos_spec, extras_spec)
+    return LoweredCell(cfg.arch_id, shape.name, mesh_desc, "decode", lowered,
+                       mesh.devices.size)

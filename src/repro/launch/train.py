@@ -1,0 +1,102 @@
+"""End-to-end training driver.
+
+On hardware this runs under the TrainingSupervisor with the production mesh;
+on CPU (this container) it drives REDUCED configs for real (examples/
+quickstart.py) — same code path, small shapes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
+      --steps 100 --batch 8 --seq 64 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_reduced
+from repro.data import DataConfig, make_batch
+from repro.models import init_params
+from repro.optim import AdamWConfig, adamw_init
+from repro.configs.base import ShapeConfig
+
+from .steps import make_train_step
+
+
+def train_loop(
+    cfg,
+    *,
+    steps: int,
+    batch: int,
+    seq: int,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    seed: int = 0,
+    log_every: int = 10,
+    opt_cfg: AdamWConfig | None = None,
+    resume: bool = True,
+):
+    """Single-host training loop with checkpoint/resume. Returns metrics log."""
+    opt_cfg = opt_cfg or AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=steps)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = adamw_init(params)
+    start_step = 0
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr and resume:
+        got_step, restored = mgr.restore_latest({"params": params, "opt": opt_state})
+        if got_step is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = got_step
+            print(f"resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    dc = DataConfig(seed=seed, vocab=min(cfg.vocab, 4096))
+    shape = ShapeConfig("cli", seq, batch, "train")
+
+    log = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        b = make_batch(cfg, shape, step=step, data_cfg=dc,
+                       batch_override=batch, seq_override=seq)
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = round(time.time() - t0, 2)
+            log.append(m)
+            print(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                  f"gnorm {m['grad_norm']:.3f} ({m['wall_s']}s)", flush=True)
+        if mgr and (step + 1) % ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt_state})
+    if mgr:
+        mgr.save(steps, {"params": params, "opt": opt_state})
+    return params, opt_state, log
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    _, _, log = train_loop(
+        cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir, seed=args.seed,
+    )
+    losses = [m["loss"] for m in log]
+    print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
+    assert np.isfinite(losses[-1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+"""GQA attention: direct, chunked (online-softmax), decode-with-cache, cross.
+
+Chunked attention scans KV blocks with a running (max, denom, acc) triple so
+prefill at 32k+ never materialises the (S x S) score matrix — the pure-JAX
+equivalent of flash attention, and the TPU analogue of PiCaSO streaming
+partial products through the reduction network instead of buffering them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, linear, split_keys
+
+CHUNKED_THRESHOLD = 8192
+KV_CHUNK = 512
+
+
+def _shard_heads(x):
+    """Pin (B, S, H, D) activations to batch x head sharding.
+
+    GSPMD propagation sometimes contracts attention over a sharded head_dim
+    and all-reduces the S^2 score tensor (309 GB/step on starcoder2-7b
+    train_4k — EXPERIMENTS.md §Perf cell B); this constraint forces the
+    scores to be computed head-local.  No-op off-mesh.
+    """
+    from jax.sharding import PartitionSpec as P
+    import jax
+
+    try:
+        # Requires an enclosing `with mesh:` whose axes include data/model —
+        # exactly how launch.steps lowers; plain CPU tests take the except.
+        return jax.lax.with_sharding_constraint(x, P("data", None, "model", None))
+    except Exception:
+        return x
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int, dtype,
+              bias: bool = False) -> dict:
+    kq, kk, kv, ko = split_keys(key, 4)
+    p = {
+        "wq": dense_init(kq, (d, n_heads * head_dim), dtype),
+        "wk": dense_init(kk, (d, n_kv * head_dim), dtype),
+        "wv": dense_init(kv, (d, n_kv * head_dim), dtype),
+        "wo": dense_init(ko, (n_heads * head_dim, d), dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _split_heads(x, n, d):
+    return x.reshape(x.shape[:-1] + (n, d))
+
+
+def _direct_attention(q, k, v, causal: bool, q_offset: int = 0):
+    """q: (B,Sq,KV,G,D); k,v: (B,Sk,KV,D)."""
+    b, sq, kvh, g, d = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(sk)[None, :]
+        scores = jnp.where(qi >= ki, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+
+
+def _chunked_attention(q, k, v, causal: bool, kv_chunk: int = KV_CHUNK):
+    """Online-softmax over KV chunks. q: (B,Sq,KV,G,D); k,v: (B,Sk,KV,D)."""
+    b, sq, kvh, g, d = q.shape
+    sk = k.shape[1]
+    c = min(kv_chunk, sk)
+    while sk % c:  # fall back to the largest divisor (defensive)
+        c -= 1
+    n_chunks = sk // c
+    kc = k.reshape(b, n_chunks, c, kvh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, c, kvh, d).transpose(1, 0, 2, 3, 4)
+
+    qf = q.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(d)
+    qi = jnp.arange(sq)[:, None]
+
+    def body(carry, xs):
+        m, l, acc = carry
+        j, kj, vj = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kj.astype(jnp.float32)) * scale
+        if causal:
+            ki = j * c + jnp.arange(c)[None, :]
+            s = jnp.where(qi >= ki, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # Guard fully-masked rows (all -inf) against NaNs.
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        corr = jnp.where(jnp.isfinite(corr), corr, 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p, vj.astype(jnp.float32))
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, g, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+    )
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l.transpose(0, 3, 1, 2)[..., None]
+    return out.astype(v.dtype)
+
+
+def attn_apply(
+    p: dict,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 0.0,
+    causal: bool = True,
+    kv_input: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+    kv_chunk: int = KV_CHUNK,
+    act_shard: bool = False,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill). Cross-attn if kv_input."""
+    b, s, _ = x.shape
+    kv_src = x if kv_input is None else kv_input
+    q = _split_heads(linear(x, p["wq"], p.get("bq")), n_heads, head_dim)
+    k = _split_heads(linear(kv_src, p["wk"], p.get("bk")), n_kv, head_dim)
+    v = _split_heads(linear(kv_src, p["wv"], p.get("bv")), n_kv, head_dim)
+    if act_shard:
+        q, k, v = _shard_heads(q), _shard_heads(k), _shard_heads(v)
+    if positions is None:
+        positions = jnp.arange(s)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        kpos = jnp.arange(k.shape[1]) if kv_input is not None else positions
+        k = apply_rope(k, kpos, rope_theta)
+    g = n_heads // n_kv
+    qg = q.reshape(b, s, n_kv, g, head_dim)
+    # Chunk on KV length: long-KV self-attn streams blocks (online softmax);
+    # cross-attn over a short modality memory (e.g. 1600 image tokens) stays
+    # direct regardless of query length.
+    if k.shape[1] > CHUNKED_THRESHOLD:
+        o = _chunked_attention(qg, k, v, causal, kv_chunk=kv_chunk)
+    else:
+        o = _direct_attention(qg, k, v, causal)
+    o = o.reshape(b, s, n_heads * head_dim)
+    return linear(o, p["wo"])
+
+
+# ----------------------------------------------------------------- decode ---
+def kv_cache_init(batch: int, max_seq: int, n_kv: int, head_dim: int, dtype,
+                  bits: int = 16) -> dict:
+    """Head-major cache (B, KV, S, D): the decode contraction then reads the
+    cache in its stored layout — the (B,S,KV,D) layout forced two ~1.4 GB
+    transpose copies per layer per step on starcoder2-15b decode_32k
+    (EXPERIMENTS.md §Perf cell A, iteration 4).
+
+    ``bits=8``: int8 storage + per-token f32 scales — the paper's
+    reduced-precision-operand thesis (Fig 7) applied to the decode cache,
+    halving cache HBM bytes vs bf16."""
+    if bits == 8:
+        return {
+            "k": jnp.zeros((batch, n_kv, max_seq, head_dim), jnp.int8),
+            "v": jnp.zeros((batch, n_kv, max_seq, head_dim), jnp.int8),
+            "k_scale": jnp.zeros((batch, n_kv, max_seq), jnp.float32),
+            "v_scale": jnp.zeros((batch, n_kv, max_seq), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, n_kv, max_seq, head_dim), dtype),
+        "v": jnp.zeros((batch, n_kv, max_seq, head_dim), dtype),
+    }
+
+
+def _quant_kv(x):
+    """(B,KV,1,D) -> int8 codes + per-token scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def attn_decode(
+    p: dict,
+    x: jnp.ndarray,  # (B, 1, D)
+    cache: dict,
+    pos: jnp.ndarray,  # scalar int32: current length (tokens already cached)
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 0.0,
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step against a preallocated KV cache."""
+    b = x.shape[0]
+    q = _split_heads(linear(x, p["wq"], p.get("bq")), n_heads, head_dim)
+    k = _split_heads(linear(x, p["wk"], p.get("bk")), n_kv, head_dim)
+    v = _split_heads(linear(x, p["wv"], p.get("bv")), n_kv, head_dim)
+    if rope_theta:
+        pvec = jnp.full((b, 1), pos, jnp.int32)
+        q = apply_rope(q, pvec, rope_theta)
+        k = apply_rope(k, pvec, rope_theta)
+    quantized = "k_scale" in cache
+    k_t = k.transpose(0, 2, 1, 3)  # (B,KV,1,D)
+    v_t = v.transpose(0, 2, 1, 3)
+    new_cache = {}
+    if quantized:
+        k_codes, k_sc = _quant_kv(k_t)
+        v_codes, v_sc = _quant_kv(v_t)
+        ck8 = jax.lax.dynamic_update_slice(cache["k"], k_codes, (0, 0, pos, 0))
+        cv8 = jax.lax.dynamic_update_slice(cache["v"], v_codes, (0, 0, pos, 0))
+        cks = jax.lax.dynamic_update_slice(cache["k_scale"], k_sc, (0, 0, pos))
+        cvs = jax.lax.dynamic_update_slice(cache["v_scale"], v_sc, (0, 0, pos))
+        new_cache = {"k": ck8, "v": cv8, "k_scale": cks, "v_scale": cvs}
+        # dequant at the compute boundary (fuses into the contraction on TPU)
+        ck = ck8.astype(x.dtype) * cks[..., None].astype(x.dtype)
+        cv = cv8.astype(x.dtype) * cvs[..., None].astype(x.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k_t.astype(cache["k"].dtype), (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v_t.astype(cache["v"].dtype), (0, 0, pos, 0))
+        new_cache = {"k": ck, "v": cv}
+    g = n_heads // n_kv
+    # Keep the cache in its storage dtype through the contraction: upcasting
+    # with .astype(f32) materialised (and all-gathered) a full f32 copy of
+    # the 2S-byte cache per step — 2x the HBM + ICI bytes (EXPERIMENTS.md
+    # §Perf, starcoder2-15b decode iteration 1).  preferred_element_type
+    # keeps the accumulator in f32 without touching operand storage.
+    qg = q.reshape(b, 1, n_kv, g, head_dim).astype(ck.dtype)
+    s = jnp.einsum("bqhgd,bhkd->bhgqk", qg, ck,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(head_dim)
+    valid = jnp.arange(ck.shape[2])[None, None, None, None, :] <= pos
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bqhgd", w.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
+    return linear(o, p["wo"]), new_cache

@@ -1,0 +1,142 @@
+"""Decoder/encoder block variants assembled from the layer library."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import mamba as mb
+from .attention import attn_apply, attn_decode, attn_init
+from .common import mlp_apply, mlp_init, rmsnorm, rmsnorm_init, split_keys
+from .mla import mla_apply, mla_decode, mla_init
+from .moe import moe_apply, moe_init
+
+
+# ------------------------------------------------------------ dense block ---
+def dense_block_init(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> dict:
+    ka, km = split_keys(key, 2)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, dtype, bias=cfg.qkv_bias),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(km, cfg.d_model, d_ff or cfg.d_ff, dtype),
+    }
+
+
+def dense_block_apply(p, x, cfg: ModelConfig, causal: bool = True):
+    h = attn_apply(
+        p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, causal=causal, kv_chunk=cfg.kv_chunk,
+        act_shard=cfg.act_shard,
+    )
+    x = x + h
+    return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+
+
+def dense_block_decode(p, x, cache, pos, cfg: ModelConfig):
+    h, cache = attn_decode(
+        p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cache, pos,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta,
+    )
+    x = x + h
+    return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps)), cache
+
+
+# -------------------------------------------------------------- MoE block ---
+def moe_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    ka, km = split_keys(key, 2)
+    attn = (
+        mla_init(ka, cfg.d_model, cfg.n_heads, cfg.mla, dtype)
+        if cfg.mla
+        else attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim, dtype, bias=cfg.qkv_bias)
+    )
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn,
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "moe": moe_init(km, cfg.d_model, cfg.moe, dtype),
+    }
+
+
+def moe_block_apply(p, x, cfg: ModelConfig):
+    xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        h = mla_apply(p["attn"], xin, n_heads=cfg.n_heads, m=cfg.mla,
+                      rope_theta=cfg.rope_theta)
+    else:
+        h = attn_apply(p["attn"], xin, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                       head_dim=cfg.head_dim, rope_theta=cfg.rope_theta)
+    x = x + h
+    y, aux = moe_apply(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.moe)
+    return x + y, aux
+
+
+def moe_block_decode(p, x, cache, pos, cfg: ModelConfig):
+    xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        h, cache = mla_decode(p["attn"], xin, cache, pos, n_heads=cfg.n_heads,
+                              m=cfg.mla, rope_theta=cfg.rope_theta)
+    else:
+        h, cache = attn_decode(p["attn"], xin, cache, pos, n_heads=cfg.n_heads,
+                               n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                               rope_theta=cfg.rope_theta)
+    x = x + h
+    y, _ = moe_apply(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.moe)
+    return x + y, cache
+
+
+# -------------------------------------------------------------- SSM block ---
+def ssm_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    init = mb.mamba1_init if cfg.ssm.version == 1 else mb.mamba2_init
+    return {"ln": rmsnorm_init(cfg.d_model, dtype),
+            "ssm": init(key, cfg.d_model, cfg.ssm, dtype)}
+
+
+def ssm_block_apply(p, x, cfg: ModelConfig):
+    f = mb.mamba1_apply if cfg.ssm.version == 1 else mb.mamba2_apply
+    return x + f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cfg.ssm)
+
+
+def ssm_block_decode(p, x, cache, cfg: ModelConfig):
+    f = mb.mamba1_decode if cfg.ssm.version == 1 else mb.mamba2_decode
+    y, cache = f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cache, cfg.ssm)
+    return x + y, cache
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int):
+    d_in = cfg.ssm.expand * cfg.d_model
+    init = mb.mamba1_cache_init if cfg.ssm.version == 1 else mb.mamba2_cache_init
+    return init(batch, d_in, cfg.ssm)
+
+
+# ------------------------------------------------------------ cross block ---
+def cross_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    """Gated cross-attention block (llama-vision style)."""
+    ka, km = split_keys(key, 2)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "xattn": attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.head_dim, dtype),
+        "gate_attn": jnp.zeros((), dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+        "gate_mlp": jnp.zeros((), dtype),
+    }
+
+
+def cross_block_apply(p, x, kv, cfg: ModelConfig):
+    h = attn_apply(
+        p["xattn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=0.0, causal=False, kv_input=kv,
+    )
+    x = x + jnp.tanh(p["gate_attn"]) * h
+    h = mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x + jnp.tanh(p["gate_mlp"]) * h

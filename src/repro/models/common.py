@@ -1,0 +1,143 @@
+"""Shared functional building blocks: init, norms, RoPE, PIM-aware linear."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ------------------------------------------------------------ PIM linear ----
+def linear(x: jnp.ndarray, w, b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Matmul against a dense weight or a PIM-quantized leaf.
+
+    A PIM leaf is ``{"codes": int8 (..., K, N), "scale": f32}`` produced by
+    ``serving.quantize_tree``; the dequant happens at the matmul operand (XLA
+    fuses it into the producing fusion — the 'overlay' path).  On real TPU,
+    hot layers route through kernels.pim_dense (the 'overhaul' path) instead.
+    """
+    if isinstance(w, dict) and "codes" in w:
+        y = x @ dq(w, x.dtype)
+    else:
+        y = x @ w
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def weight_kn(w) -> tuple[int, int]:
+    """(K, N) of a dense or PIM-quantized weight leaf."""
+    s = weight_shape(w)
+    return s[-2], s[-1]
+
+
+def weight_shape(w) -> tuple:
+    if isinstance(w, dict) and "codes" in w:
+        s = w["codes"].shape
+        if "nibbles" in w:  # int4: two K rows per byte
+            return s[:-2] + (2 * s[-2], s[-1])
+        return s
+    return w.shape
+
+
+def dq(w, dtype=None) -> jnp.ndarray:
+    """Densify a weight leaf (dequantize PIM codes) for matmul/einsum use.
+
+    Handles nibble-packed int4 ('nibbles' marker): two K rows per byte,
+    unpacked with sign extension at the compute boundary.
+    """
+    if isinstance(w, dict) and "codes" in w:
+        codes = w["codes"]
+        if "nibbles" in w:
+            lo = ((codes & 0xF) ^ 8) - 8
+            hi = (((codes >> 4) & 0xF) ^ 8) - 8
+            k2 = codes.shape[-2]
+            stacked = jnp.stack([lo, hi], axis=-2)  # (..., K//2, 2, N)
+            codes = stacked.reshape(codes.shape[:-2] + (2 * k2, codes.shape[-1]))
+        out = codes.astype(w["scale"].dtype) * w["scale"]
+        return out.astype(dtype) if dtype is not None else out
+    return w.astype(dtype) if dtype is not None else w
+
+
+# ------------------------------------------------------------------ norms ---
+def rmsnorm_init(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * rms).astype(x.dtype) * g.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE ---
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B?, S, D/2)
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :] if ang.ndim == x.ndim - 1 else ang[None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP ----
+def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    kg, ku, kd = split_keys(key, 3)
+    return {
+        "gate": dense_init(kg, (d, d_ff), dtype),
+        "up": dense_init(ku, (d, d_ff), dtype),
+        "down": dense_init(kd, (d_ff, d), dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP."""
+    return linear(jax.nn.silu(linear(x, p["gate"])) * linear(x, p["up"]), p["down"])
+
+
+# ------------------------------------------------------------- embeddings ---
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return dense_init(key, (vocab, d), dtype, scale=0.02)
+
+
+def embed_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def unembed(x: jnp.ndarray, table_or_w) -> jnp.ndarray:
+    """Logits. ``table_or_w``: (V, D) tied table or (D, V) head weight."""
+    if isinstance(table_or_w, dict) and "codes" in table_or_w:
+        return linear(x, table_or_w)
+    if table_or_w.shape[0] > table_or_w.shape[1]:  # (V, D) tied
+        return x @ table_or_w.T
+    return x @ table_or_w
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy in f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,402 @@
+"""Full model assembly for all six architecture families.
+
+Homogeneous layer stacks are *scanned* (``lax.scan`` over stacked params):
+one trace per block type regardless of depth, which keeps HLO size and
+compile time bounded for the 100-layer dry-run cells.  Heterogeneous
+patterns (hybrid shared-attention, VLM cross-attn groups) scan over repeating
+groups.  Every scanned block body is wrapped in ``jax.checkpoint`` so
+training remat saves only layer boundaries.
+
+Public API:
+  init_params(cfg, key)          -> params pytree
+  forward(params, cfg, batch)    -> (logits, aux)      [train / prefill]
+  loss_fn(params, cfg, batch)    -> (loss, metrics)
+  init_cache(cfg, batch, max_seq)-> cache pytree        [decode]
+  decode_step(params, cfg, tokens, cache, pos, extras) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import blocks as bk
+from .attention import attn_apply, attn_decode, attn_init, kv_cache_init
+from .common import (
+    cross_entropy,
+    dtype_of,
+    embed_init,
+    embed_lookup,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    split_keys,
+    unembed,
+)
+
+
+def _stack_init(key, n: int, fn):
+    if n == 0:
+        return None
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _stack_cache(cache, n: int):
+    return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype), cache)
+
+
+def _scan(stack, x, body, remat: bool = True):
+    b = jax.checkpoint(body) if remat else body
+
+    def f(h, lp):
+        out = b(lp, h)
+        if isinstance(out, tuple):
+            return out
+        return out, None
+
+    return jax.lax.scan(f, x, stack)
+
+
+def _scan_cached(stack, caches, x, body):
+    def f(h, xs):
+        lp, c = xs
+        h, c_new = body(lp, h, c)
+        return h, c_new
+
+    return jax.lax.scan(f, x, (stack, caches))
+
+
+# ---------------------------------------------------------------- init ------
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    k_emb, k_layers, k_extra, k_head = split_keys(key, 4)
+    p: dict[str, Any] = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, dtype),
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = embed_init(k_head, cfg.vocab, cfg.d_model, dtype).T
+
+    fam = cfg.family
+    if fam == "dense":
+        p["layers"] = _stack_init(
+            k_layers, cfg.n_layers, lambda k: bk.dense_block_init(k, cfg, dtype)
+        )
+    elif fam == "moe":
+        nd = cfg.n_dense_layers
+        p["dense_layers"] = _stack_init(
+            k_extra, nd, lambda k: bk.dense_block_init(k, cfg, dtype, d_ff=cfg.d_ff)
+        )
+        p["layers"] = _stack_init(
+            k_layers, cfg.n_layers - nd, lambda k: bk.moe_block_init(k, cfg, dtype)
+        )
+    elif fam == "ssm":
+        p["layers"] = _stack_init(
+            k_layers, cfg.n_layers, lambda k: bk.ssm_block_init(k, cfg, dtype)
+        )
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every  # groups of ssm layers
+        tail = cfg.n_layers - g * cfg.attn_every
+        k1, k2, k3 = split_keys(k_layers, 3)
+        p["groups"] = _stack_init(
+            k1, g,
+            lambda k: _stack_init(k, cfg.attn_every,
+                                  lambda kk: bk.ssm_block_init(kk, cfg, dtype)),
+        )
+        p["tail"] = _stack_init(
+            k2, tail, lambda k: bk.ssm_block_init(k, cfg, dtype)
+        )
+        p["shared_attn"] = bk.dense_block_init(k3, cfg, dtype)  # ONE shared block
+    elif fam == "vlm":
+        every = cfg.vision.cross_attn_every
+        g = cfg.n_layers // every
+        k1, k2 = split_keys(k_layers, 2)
+        p["groups"] = {
+            "self": _stack_init(
+                k1, g,
+                lambda k: _stack_init(k, every - 1,
+                                      lambda kk: bk.dense_block_init(kk, cfg, dtype)),
+            ),
+            "cross": _stack_init(
+                k2, g, lambda k: bk.cross_block_init(k, cfg, dtype)
+            ),
+        }
+    elif fam == "encdec":
+        k1, k2 = split_keys(k_layers, 2)
+        p["encoder"] = _stack_init(
+            k1, cfg.n_layers, lambda k: bk.dense_block_init(k, cfg, dtype)
+        )
+        p["decoder"] = _stack_init(
+            k2, cfg.dec_layers, lambda k: _encdec_dec_block_init(k, cfg, dtype)
+        )
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def _encdec_dec_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    ks, kx, km = split_keys(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "self": attn_init(ks, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "cross": attn_init(kx, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.head_dim, dtype),
+        "ln3": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _encdec_dec_block_apply(p, x, enc_out, cfg: ModelConfig):
+    h = attn_apply(p["self"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                   n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                   rope_theta=cfg.rope_theta, causal=True)
+    x = x + h
+    h = attn_apply(p["cross"], rmsnorm(x, p["ln2"], cfg.norm_eps),
+                   n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                   rope_theta=0.0, causal=False, kv_input=enc_out)
+    x = x + h
+    return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln3"], cfg.norm_eps))
+
+
+# -------------------------------------------------------------- forward -----
+def forward(params: dict, cfg: ModelConfig, batch: dict) -> tuple[jnp.ndarray, dict]:
+    """Teacher-forced forward. Returns (logits, aux-losses)."""
+    aux = {"aux_total": jnp.float32(0.0)}
+    fam = cfg.family
+
+    if fam == "encdec":
+        enc_x = batch["frames"].astype(dtype_of(cfg.param_dtype))  # audio STUB
+        enc_x, _ = _scan(params["encoder"], enc_x,
+                         lambda lp, h: bk.dense_block_apply(lp, h, cfg, causal=False))
+        x = embed_lookup(params["embed"], batch["dec_tokens"])
+        x, _ = _scan(params["decoder"], x,
+                     lambda lp, h: _encdec_dec_block_apply(lp, h, enc_x, cfg))
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return unembed(x, params.get("head", params["embed"])), aux
+
+    x = embed_lookup(params["embed"], batch["tokens"])
+
+    if fam == "dense":
+        x, _ = _scan(params["layers"], x,
+                     lambda lp, h: bk.dense_block_apply(lp, h, cfg),
+                     remat=cfg.remat)
+    elif fam == "moe":
+        if params.get("dense_layers") is not None:
+            x, _ = _scan(params["dense_layers"], x,
+                         lambda lp, h: bk.dense_block_apply(lp, h, cfg))
+        x, auxs = _scan(params["layers"], x,
+                        lambda lp, h: bk.moe_block_apply(lp, h, cfg))
+        aux = {k: jnp.sum(v) for k, v in auxs.items()}
+    elif fam == "ssm":
+        x, _ = _scan(params["layers"], x,
+                     lambda lp, h: bk.ssm_block_apply(lp, h, cfg))
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(gp, h):
+            h, _ = _scan(gp, h, lambda lp, hh: bk.ssm_block_apply(lp, hh, cfg),
+                         remat=False)
+            return bk.dense_block_apply(shared, h, cfg)
+
+        x, _ = _scan(params["groups"], x, group_body)
+        if params.get("tail") is not None:
+            x, _ = _scan(params["tail"], x,
+                         lambda lp, h: bk.ssm_block_apply(lp, h, cfg))
+    elif fam == "vlm":
+        img = batch["image_embeds"].astype(x.dtype)  # vision STUB
+
+        def group_body(gp, h):
+            h, _ = _scan(gp["self"], h,
+                         lambda lp, hh: bk.dense_block_apply(lp, hh, cfg),
+                         remat=False)
+            return bk.cross_block_apply(gp["cross"], h, img, cfg)
+
+        x, _ = _scan(params["groups"], x, group_body)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(x, params.get("head", params["embed"])), aux
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict):
+    logits, aux = forward(params, cfg, batch)
+    tokens = batch["dec_tokens"] if cfg.family == "encdec" else batch["tokens"]
+    labels = batch.get("labels")
+    if labels is None:
+        logits, labels = logits[:, :-1], tokens[:, 1:]
+    if not cfg.logits_f32:
+        logits = logits.astype(jnp.bfloat16)
+    ce = cross_entropy(logits, labels)
+    loss = ce + aux.get("aux_total", 0.0)
+    metrics = {"loss": loss, "ce": ce, **{k: v for k, v in aux.items()}}
+    return loss, metrics
+
+
+# --------------------------------------------------------------- decode -----
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    fam = cfg.family
+    bits = cfg.kv_cache_bits
+    if fam == "dense":
+        c = kv_cache_init(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, dtype,
+                          bits=bits)
+        return {"layers": _stack_cache(c, cfg.n_layers)}
+    if fam == "moe":
+        if cfg.mla:
+            from .mla import mla_cache_init
+
+            c = mla_cache_init(batch, max_seq, cfg.mla, dtype)
+        else:
+            c = kv_cache_init(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, dtype)
+        out = {"layers": _stack_cache(c, cfg.n_layers - cfg.n_dense_layers)}
+        if cfg.n_dense_layers:
+            cd = kv_cache_init(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, dtype,
+                               bits=bits)
+            out["dense_layers"] = _stack_cache(cd, cfg.n_dense_layers)
+        return out
+    if fam == "ssm":
+        return {"layers": _stack_cache(bk.ssm_cache_init(cfg, batch), cfg.n_layers)}
+    if fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - g * cfg.attn_every
+        ssm_c = bk.ssm_cache_init(cfg, batch)
+        attn_c = kv_cache_init(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, dtype,
+                               bits=bits)
+        out = {
+            "groups_ssm": _stack_cache(_stack_cache(ssm_c, cfg.attn_every), g),
+            "groups_attn": _stack_cache(attn_c, g),
+        }
+        if tail:
+            out["tail"] = _stack_cache(ssm_c, tail)
+        return out
+    if fam == "vlm":
+        every = cfg.vision.cross_attn_every
+        g = cfg.n_layers // every
+        c = kv_cache_init(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, dtype,
+                          bits=bits)
+        return {"groups_self": _stack_cache(_stack_cache(c, every - 1), g)}
+    if fam == "encdec":
+        c = kv_cache_init(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, dtype,
+                          bits=bits)
+        return {"decoder": _stack_cache(c, cfg.dec_layers)}
+    raise ValueError(fam)
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, 1)
+    cache: dict,
+    pos: jnp.ndarray,  # scalar int32
+    extras: Optional[dict] = None,
+) -> tuple[jnp.ndarray, dict]:
+    extras = extras or {}
+    fam = cfg.family
+    x = embed_lookup(params["embed"], tokens)
+    new_cache = dict(cache)
+
+    if fam == "dense":
+        x, cs = _scan_cached(
+            params["layers"], cache["layers"], x,
+            lambda lp, h, c: bk.dense_block_decode(lp, h, c, pos, cfg),
+        )
+        new_cache["layers"] = cs
+    elif fam == "moe":
+        if params.get("dense_layers") is not None:
+            x, cs = _scan_cached(
+                params["dense_layers"], cache["dense_layers"], x,
+                lambda lp, h, c: bk.dense_block_decode(lp, h, c, pos, cfg),
+            )
+            new_cache["dense_layers"] = cs
+        x, cs = _scan_cached(
+            params["layers"], cache["layers"], x,
+            lambda lp, h, c: bk.moe_block_decode(lp, h, c, pos, cfg),
+        )
+        new_cache["layers"] = cs
+    elif fam == "ssm":
+        x, cs = _scan_cached(
+            params["layers"], cache["layers"], x,
+            lambda lp, h, c: bk.ssm_block_decode(lp, h, c, cfg),
+        )
+        new_cache["layers"] = cs
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_decode(gp, h, c):
+            ssm_c, attn_c = c
+            h, ssm_new = _scan_cached(
+                gp, ssm_c, h, lambda lp, hh, cc: bk.ssm_block_decode(lp, hh, cc, cfg)
+            )
+            h, attn_new = bk.dense_block_decode(shared, h, attn_c, pos, cfg)
+            return h, (ssm_new, attn_new)
+
+        def f(h, xs):
+            gp, sc, ac = xs
+            h, (sn, an) = group_decode(gp, h, (sc, ac))
+            return h, (sn, an)
+
+        x, (ssm_cs, attn_cs) = jax.lax.scan(
+            f, x, (params["groups"], cache["groups_ssm"], cache["groups_attn"])
+        )
+        new_cache["groups_ssm"], new_cache["groups_attn"] = ssm_cs, attn_cs
+        if params.get("tail") is not None:
+            x, cs = _scan_cached(
+                params["tail"], cache["tail"], x,
+                lambda lp, h, c: bk.ssm_block_decode(lp, h, c, cfg),
+            )
+            new_cache["tail"] = cs
+    elif fam == "vlm":
+        img = extras["image_embeds"].astype(x.dtype)
+
+        def f(h, xs):
+            gp, c = xs
+            h, cs = _scan_cached(
+                gp["self"], c, h,
+                lambda lp, hh, cc: bk.dense_block_decode(lp, hh, cc, pos, cfg),
+            )
+            h = bk.cross_block_apply(gp["cross"], h, img, cfg)
+            return h, cs
+
+        x, cs = jax.lax.scan(f, x, (params["groups"], cache["groups_self"]))
+        new_cache["groups_self"] = cs
+    elif fam == "encdec":
+        enc_out = extras["enc_out"].astype(x.dtype)
+
+        def dec_block_decode(lp, h, c):
+            hh, c_new = attn_decode(
+                lp["self"], rmsnorm(h, lp["ln1"], cfg.norm_eps), c, pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta,
+            )
+            h = h + hh
+            hh = attn_apply(
+                lp["cross"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=0.0, causal=False, kv_input=enc_out,
+            )
+            h = h + hh
+            return h + mlp_apply(lp["mlp"], rmsnorm(h, lp["ln3"], cfg.norm_eps)), c_new
+
+        x, cs = _scan_cached(params["decoder"], cache["decoder"], x, dec_block_decode)
+        new_cache["decoder"] = cs
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(x, params.get("head", params["embed"])), new_cache
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Encoder-only pass (enc-dec serving: run once, feed decode_step)."""
+    assert cfg.family == "encdec"
+    x = frames.astype(dtype_of(cfg.param_dtype))
+    x, _ = _scan(params["encoder"], x,
+                 lambda lp, h: bk.dense_block_apply(lp, h, cfg, causal=False))
+    return x

@@ -1,0 +1,261 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD) blocks, chunked for memory.
+
+Both scans process the sequence in chunks: a sequential ``lax.scan`` carries
+the SSM state across chunks while the inside of a chunk uses an associative
+scan (v1) or the quadratic-in-chunk SSD form (v2).  This bounds the
+materialised (tokens x d_inner x state) tensor to one chunk — the same
+working-set discipline as a VMEM-resident kernel tile.
+
+Decode paths are single-token recurrences with O(1) state, which is what
+makes the long_500k cells runnable for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+
+from .common import dense_init, linear, split_keys, weight_shape
+
+
+# ------------------------------------------------------------------ conv ----
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray = None):
+    """Depthwise causal conv over seq. x: (B,S,C), w: (C,K). state: (B,K-1,C)."""
+    k = w.shape[-1]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[:, i] for i in range(k))
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else pad
+    return out, new_state
+
+
+# ---------------------------------------------------------------- Mamba 1 ---
+def mamba1_init(key, d: int, s: SSMConfig, dtype) -> dict:
+    d_in = s.expand * d
+    dt_rank = s.dt_rank or d // 16
+    kin, kconv, kx, kdt, kout = split_keys(key, 5)
+    return {
+        "in_proj": dense_init(kin, (d, 2 * d_in), dtype),
+        "conv_w": dense_init(kconv, (d_in, s.conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(kx, (d_in, dt_rank + 2 * s.state_dim), dtype),
+        "dt_proj": dense_init(kdt, (dt_rank, d_in), dtype),
+        "dt_bias": jnp.full((d_in,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32), (d_in, s.state_dim))
+        ).astype(jnp.float32),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(kout, (d_in, d), dtype),
+    }
+
+
+def _ssm_chunk_scan(dA, dBx, h0):
+    """Associative scan within a chunk. dA,dBx: (B,L,C,N) f32; h0: (B,C,N)."""
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, b1 * a2 + b2
+
+    dA0 = jnp.concatenate([jnp.ones_like(dA[:, :1]), dA[:, 1:]], axis=1)
+    # fold h0 into the first element: h1 = dA1*h0 + dBx1
+    dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+    _, hs = jax.lax.associative_scan(combine, (dA0, dBx), axis=1)
+    # hs[t] = prod(dA[1..t]) ... correct recurrence given h0 folded in.
+    return hs, hs[:, -1]
+
+
+def mamba1_apply(p: dict, x: jnp.ndarray, s: SSMConfig) -> jnp.ndarray:
+    """Full-sequence Mamba1. x: (B, S, D)."""
+    b, seq, d = x.shape
+    d_in = weight_shape(p["dt_proj"])[1]
+    n = s.state_dim
+    chunk = min(s.chunk, seq)
+    assert seq % chunk == 0, (seq, chunk)
+
+    xz = linear(x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, _ = _causal_conv(xs, p["conv_w"], None)
+    xs = jax.nn.silu(xs + p["conv_b"])
+
+    A = -jnp.exp(p["A_log"])  # (d_in, N)
+
+    def chunk_body(h, xc):
+        """h: (B, d_in, N); xc: (B, L, d_in) conv'd input chunk."""
+        dbc = linear(xc, p["x_proj"])
+        dt_rank = weight_shape(p["dt_proj"])[0]
+        dt = jax.nn.softplus(linear(dbc[..., :dt_rank], p["dt_proj"]) + p["dt_bias"].astype(jnp.float32))
+        bmat = dbc[..., dt_rank : dt_rank + n].astype(jnp.float32)  # (B,L,N)
+        cmat = dbc[..., dt_rank + n :].astype(jnp.float32)  # (B,L,N)
+        dtf = dt.astype(jnp.float32)  # (B,L,d_in)
+        dA = jnp.exp(dtf[..., None] * A)  # (B,L,d_in,N)
+        dBx = (dtf * xc.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+        hs, h_last = _ssm_chunk_scan(dA, dBx, h)
+        y = jnp.einsum("blcn,bln->blc", hs, cmat)  # (B,L,d_in)
+        y = y + p["D"] * xc.astype(jnp.float32)
+        return h_last, y.astype(x.dtype)
+
+    xs_c = xs.reshape(b, seq // chunk, chunk, d_in).transpose(1, 0, 2, 3)
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, xs_c)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, seq, d_in)
+    y = y * jax.nn.silu(z)
+    return linear(y, p["out_proj"])
+
+
+def mamba1_cache_init(batch: int, d_in: int, s: SSMConfig) -> dict:
+    return {
+        "h": jnp.zeros((batch, d_in, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_dim - 1, d_in), jnp.float32),
+    }
+
+
+def mamba1_decode(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
+    """Single-token step. x: (B, 1, D)."""
+    n = s.state_dim
+    xz = linear(x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = _causal_conv(xs, p["conv_w"], cache["conv"])
+    xs = jax.nn.silu(xs + p["conv_b"])
+
+    dbc = linear(xs, p["x_proj"])
+    dt_rank = weight_shape(p["dt_proj"])[0]
+    dt = jax.nn.softplus(linear(dbc[..., :dt_rank], p["dt_proj"]) + p["dt_bias"].astype(jnp.float32))
+    bmat = dbc[..., dt_rank : dt_rank + n].astype(jnp.float32)
+    cmat = dbc[..., dt_rank + n :].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dtf = dt[:, 0].astype(jnp.float32)  # (B, d_in)
+    dA = jnp.exp(dtf[..., None] * A)  # (B,d_in,N)
+    dBx = (dtf * xs[:, 0].astype(jnp.float32))[..., None] * bmat[:, 0, None, :]
+    h = cache["h"] * dA + dBx
+    y = jnp.einsum("bcn,bn->bc", h, cmat[:, 0]) + p["D"] * xs[:, 0].astype(jnp.float32)
+    y = y[:, None, :].astype(x.dtype) * jax.nn.silu(z)
+    return linear(y, p["out_proj"]), {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------- Mamba 2 ---
+def mamba2_init(key, d: int, s: SSMConfig, dtype) -> dict:
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    kin, kconv, kout = split_keys(key, 3)
+    # Fused in_proj: [x (d_in), z (d_in), B (N), C (N), dt (nh)]
+    return {
+        "in_proj": dense_init(kin, (d, 2 * d_in + 2 * s.state_dim + nh), dtype),
+        "conv_w": dense_init(kconv, (d_in + 2 * s.state_dim, s.conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_in + 2 * s.state_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": dense_init(kout, (d_in, d), dtype),
+    }
+
+
+def _ssd_chunk(xh, bmat, cmat, dt_a, h0):
+    """One SSD chunk (quadratic-in-chunk form).
+
+    xh: (B,L,H,P) inputs; bmat/cmat: (B,L,N); dt_a: (B,L,H) = dt*A (negative);
+    h0: (B,H,P,N) carried state.  Returns (y (B,L,H,P), h_last).
+    """
+    csum = jnp.cumsum(dt_a, axis=1)  # (B,L,H)
+    # intra-chunk: decay from s to t = exp(csum_t - csum_s), t >= s
+    diff = csum[:, :, None, :] - csum[:, None, :, :]  # (B,L,L,H)
+    l_idx = jnp.arange(dt_a.shape[1])
+    mask = l_idx[:, None] >= l_idx[None, :]
+    decay = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bln,bsn->bls", cmat, bmat)  # (B,L,L)
+    att = scores[..., None] * decay  # (B,L,L,H)
+    y_intra = jnp.einsum("blsh,bshp->blhp", att, xh)
+    # inter-chunk: contribution of h0
+    dec0 = jnp.exp(csum)  # decay from chunk start to t
+    y_inter = jnp.einsum("bln,blh,bhpn->blhp", cmat, dec0, h0)
+    # state update: h_last = exp(csum_L) * h0 + sum_s exp(csum_L - csum_s) B_s x_s
+    dec_end = jnp.exp(csum[:, -1:, :] - csum)  # (B,L,H)
+    h_new = jnp.einsum("bln,blh,blhp->bhpn", bmat, dec_end, xh)
+    h_last = jnp.exp(csum[:, -1])[:, :, None, None] * h0 + h_new
+    return y_intra + y_inter, h_last
+
+
+def mamba2_apply(p: dict, x: jnp.ndarray, s: SSMConfig) -> jnp.ndarray:
+    """Full-sequence Mamba2 (SSD). x: (B, S, D)."""
+    b, seq, d = x.shape
+    d_in = weight_shape(p["out_proj"])[0]
+    nh = p["A_log"].shape[0]
+    hd = d_in // nh
+    n = s.state_dim
+    chunk = min(s.chunk, seq)
+    assert seq % chunk == 0
+
+    zxbcdt = linear(x, p["in_proj"])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * n :]  # (B,S,nh)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], None)
+    xbc = jax.nn.silu(xbc + p["conv_b"])
+    xs, bmat, cmat = (
+        xbc[..., :d_in],
+        xbc[..., d_in : d_in + n].astype(jnp.float32),
+        xbc[..., d_in + n :].astype(jnp.float32),
+    )
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    a = -jnp.exp(p["A_log"])  # (nh,)
+    dt_a = dt * a  # (B,S,nh), negative
+
+    xh = xs.reshape(b, seq, nh, hd).astype(jnp.float32)
+    n_chunks = seq // chunk
+
+    def body(h, xs_c):
+        xh_c, b_c, c_c, dta_c = xs_c
+        y, h_last = _ssd_chunk(xh_c, b_c, c_c, dta_c, h)
+        return h_last, y
+
+    xh_cs = xh.reshape(b, n_chunks, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+    b_cs = bmat.reshape(b, n_chunks, chunk, n).transpose(1, 0, 2, 3)
+    c_cs = cmat.reshape(b, n_chunks, chunk, n).transpose(1, 0, 2, 3)
+    dta_cs = dt_a.reshape(b, n_chunks, chunk, nh).transpose(1, 0, 2, 3)
+    h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, (xh_cs, b_cs, c_cs, dta_cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, seq, nh, hd)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(b, seq, d_in).astype(x.dtype) * jax.nn.silu(z)
+    return linear(y, p["out_proj"])
+
+
+def mamba2_cache_init(batch: int, d_in: int, s: SSMConfig) -> dict:
+    nh = d_in // s.head_dim
+    return {
+        "h": jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_dim - 1, d_in + 2 * s.state_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
+    """Single-token SSD step. x: (B, 1, D)."""
+    b = x.shape[0]
+    d_in = weight_shape(p["out_proj"])[0]
+    nh = p["A_log"].shape[0]
+    hd = d_in // nh
+    n = s.state_dim
+    zxbcdt = linear(x, p["in_proj"])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * n :]
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], cache["conv"])
+    xbc = jax.nn.silu(xbc + p["conv_b"])
+    xs, bmat, cmat = (
+        xbc[..., :d_in],
+        xbc[..., d_in : d_in + n].astype(jnp.float32),
+        xbc[..., d_in + n :].astype(jnp.float32),
+    )
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)  # (B,nh)
+    xh = xs[:, 0].reshape(b, nh, hd).astype(jnp.float32)
+    dbx = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, bmat[:, 0])
+    h = cache["h"] * decay[..., None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", h, cmat[:, 0]) + p["D"][:, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype) * jax.nn.silu(z)
+    return linear(y, p["out_proj"]), {"h": h, "conv": conv_state}

@@ -1,0 +1,93 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Prefill path materialises per-head K/V from the compressed latent; the decode
+path uses the *absorbed* form: W_uk folds into the query and W_uv into the
+output so the KV cache stores only (kv_lora_rank + qk_rope_dim) per token —
+MLA's whole point, and on TPU a direct HBM-bandwidth win in the decode
+roofline (the same storage-efficiency argument as the paper's Fig 7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+
+from .common import apply_rope, dense_init, dq, linear, split_keys
+
+
+def mla_init(key, d: int, n_heads: int, m: MLAConfig, dtype) -> dict:
+    kq, kkv, kuk, kuv, ko, kr = split_keys(key, 6)
+    qh = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq": dense_init(kq, (d, n_heads * qh), dtype),
+        "w_dkv": dense_init(kkv, (d, m.kv_lora_rank + m.qk_rope_dim), dtype),
+        "w_uk": dense_init(kuk, (n_heads, m.kv_lora_rank, m.qk_nope_dim), dtype),
+        "w_uv": dense_init(kuv, (n_heads, m.kv_lora_rank, m.v_head_dim), dtype),
+        "wo": dense_init(ko, (n_heads * m.v_head_dim, d), dtype),
+    }
+
+
+def mla_apply(p, x, *, n_heads: int, m: MLAConfig, rope_theta: float) -> jnp.ndarray:
+    """Training/prefill: expand the latent into per-head K/V."""
+    b, s, _ = x.shape
+    qh = m.qk_nope_dim + m.qk_rope_dim
+    q = linear(x, p["wq"]).reshape(b, s, n_heads, qh)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    ckv = linear(x, p["w_dkv"])
+    c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    pos = jnp.arange(s)
+    q_rope = apply_rope(q_rope, pos, rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, rope_theta)  # (B,S,1,rope)
+
+    k_nope = jnp.einsum("bsc,hcd->bshd", c, dq(p["w_uk"], c.dtype))
+    v = jnp.einsum("bsc,hcd->bshd", c, dq(p["w_uv"], c.dtype))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, m.qk_rope_dim))], axis=-1
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    scale = 1.0 / jnp.sqrt(qh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q_full, k).astype(jnp.float32) * scale
+    qi, ki = jnp.arange(s)[:, None], jnp.arange(s)[None, :]
+    scores = jnp.where(qi >= ki, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, s, -1)
+    return linear(o, p["wo"])
+
+
+# ----------------------------------------------------------------- decode ---
+def mla_cache_init(batch: int, max_seq: int, m: MLAConfig, dtype) -> dict:
+    """Latent cache: only (kv_lora + rope_dim) per token."""
+    return {"c": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_seq, m.qk_rope_dim), dtype)}
+
+
+def mla_decode(p, x, cache, pos, *, n_heads: int, m: MLAConfig, rope_theta: float):
+    """Absorbed decode: scores in latent space, W_uk/W_uv folded in."""
+    b = x.shape[0]
+    qh = m.qk_nope_dim + m.qk_rope_dim
+    q = linear(x, p["wq"]).reshape(b, 1, n_heads, qh)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    pvec = jnp.full((b, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, pvec, rope_theta)
+    # Absorb W_uk into the query: q_lat (B,1,H,kv_lora)
+    q_lat = jnp.einsum("bqhd,hcd->bqhc", q_nope, dq(p["w_uk"], q_nope.dtype))
+
+    ckv = linear(x, p["w_dkv"])
+    c_new, kr_new = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    kr_new = apply_rope(kr_new[:, :, None, :], pvec, rope_theta)[:, :, 0, :]
+    cc = jax.lax.dynamic_update_slice(cache["c"], c_new.astype(cache["c"].dtype), (0, pos, 0))
+    ckr = jax.lax.dynamic_update_slice(cache["kr"], kr_new.astype(cache["kr"].dtype), (0, pos, 0))
+
+    scale = 1.0 / jnp.sqrt(qh)
+    s_lat = jnp.einsum("bqhc,bkc->bhqk", q_lat.astype(jnp.float32), cc.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32), ckr.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    valid = jnp.arange(cc.shape[1])[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkc->bqhc", w, cc.astype(jnp.float32))  # (B,1,H,lora)
+    o = jnp.einsum("bqhc,hcd->bqhd", o_lat, dq(p["w_uv"], jnp.float32))
+    o = o.reshape(b, 1, -1).astype(x.dtype)
+    return linear(o, p["wo"]), {"c": cc, "kr": ckr}

@@ -1,0 +1,102 @@
+"""Mixture-of-Experts with GShard-style capacity dispatch.
+
+Tokens are grouped (one group per sequence) so the dispatch one-hot stays
+``(G, Sg, E, C)`` with G sharded over the data axis; the expert einsum
+contracts tokens against experts sharded over the model axis — GSPMD lowers
+the resharding to the canonical MoE all-to-all pair.  The top-k *combine* is
+a fold-style weighted sum, the same log-tree reduction the paper's OpMux
+performs over product terms (kernels.fold_sum provides the in-tile version).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+from .common import dense_init, dq, linear, split_keys
+
+
+def moe_init(key, d: int, cfg: MoEConfig, dtype) -> dict:
+    kr, kg, ku, kd, ksh = split_keys(key, 5)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": dense_init(kr, (d, e), jnp.float32),
+        "gate": dense_init(kg, (e, d, f), dtype),
+        "up": dense_init(ku, (e, d, f), dtype),
+        "down": dense_init(kd, (e, f, d), dtype),
+    }
+    if cfg.n_shared:
+        kg2, ku2, kd2 = split_keys(ksh, 3)
+        fs = cfg.n_shared * f
+        p["shared"] = {
+            "gate": dense_init(kg2, (d, fs), dtype),
+            "up": dense_init(ku2, (d, fs), dtype),
+            "down": dense_init(kd2, (fs, d), dtype),
+        }
+    return p
+
+
+def _capacity(sg: int, cfg: MoEConfig) -> int:
+    c = int(sg * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+GROUP_TOKENS = 4096  # default dispatch-group size (cfg.group_tokens overrides)
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: MoEConfig) -> tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (out, aux) with load-balance + z losses.
+
+    Tokens are re-grouped into dispatch groups of <= GROUP_TOKENS so the
+    capacity C (and the expert-slot waste E*C / (gs*k)) stays constant in
+    sequence length — without this, prefill_32k's one-hot is petabyte-scale
+    and a 128-token decode batch computes 64 experts at capacity >= top_k
+    each (384x waste; see EXPERIMENTS.md §Perf, deepseek decode iteration).
+    """
+    b0, s0, d = x.shape
+    t = b0 * s0
+    gt = cfg.group_tokens or GROUP_TOKENS
+    n_groups = max(1, -(-t // gt))  # ceil
+    if t % n_groups == 0:
+        x = x.reshape(n_groups, t // n_groups, d)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(s, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)  # (B,S,k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # Position of each (token, slot) within its expert's capacity buffer.
+    sel = jax.nn.one_hot(top_i, e, dtype=jnp.float32)  # (B,S,k,E)
+    sel_flat = sel.reshape(b, s * k, e)
+    pos_in_e = jnp.cumsum(sel_flat, axis=1) - 1.0  # (B, S*k, E)
+    pos = jnp.einsum("bte,bte->bt", pos_in_e, sel_flat).reshape(b, s, k)
+    keep = (pos < cap).astype(jnp.float32)
+
+    # dispatch (B,S,E,C) / combine (B,S,E,C)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("bske,bskc->bsec", sel, pos_oh)
+    comb = jnp.einsum("bsk,bske,bskc->bsec", top_p, sel, pos_oh)
+
+    xe = jnp.einsum("bsd,bsec->ebcd", x.astype(jnp.float32), disp)  # (E,B,C,D)
+    xe = xe.astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, dq(p["gate"], xe.dtype)))
+    h = h * jnp.einsum("ebcd,edf->ebcf", xe, dq(p["up"], xe.dtype))
+    ye = jnp.einsum("ebcf,efd->ebcd", h, dq(p["down"], h.dtype))  # (E,B,C,D)
+    y = jnp.einsum("ebcd,bsec->bsd", ye.astype(jnp.float32), comb).astype(x.dtype)
+
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + linear(jax.nn.silu(linear(x, sh["gate"])) * linear(x, sh["up"]), sh["down"])
+
+    # Aux losses (GShard load-balance + router z-loss).
+    me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+    ce = jnp.mean(sel.sum(2), axis=(0, 1))  # fraction of tokens per expert
+    lb = e * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"load_balance": lb, "router_z": z,
+           "aux_total": cfg.aux_loss * lb + cfg.router_z_loss * z}
+    return y.reshape(b0, s0, d), aux

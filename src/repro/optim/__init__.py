@@ -1,0 +1,12 @@
+"""Optimizer substrate: AdamW, schedules, clipping, gradient compression."""
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .compression import compress_gradients, decompress_gradients, error_feedback_update
+from .distributed import compressed_psum_mean, dp_train_step_factory
+from .schedule import cosine_schedule
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+    "cosine_schedule",
+    "compress_gradients", "decompress_gradients", "error_feedback_update",
+    "compressed_psum_mean", "dp_train_step_factory",
+]

@@ -1,0 +1,27 @@
+"""Weight quantization for PIM-mode execution.
+
+The paper's PIM stores model weights bit-serially at reduced precision
+(§I: "less than full precision operands can result in better utilization of
+limited memory").  On TPU this becomes: weights live in HBM as packed INT4/
+INT8 (or bit-planes) and are expanded to bf16 at the VMEM boundary inside the
+matmul kernel — cutting HBM traffic by 16/B.
+"""
+from .quantize import (
+    QuantizedTensor,
+    dequantize,
+    from_bitplanes,
+    pack_int4,
+    quantize_symmetric,
+    to_bitplanes,
+    unpack_int4,
+)
+
+__all__ = [
+    "QuantizedTensor",
+    "quantize_symmetric",
+    "dequantize",
+    "pack_int4",
+    "unpack_int4",
+    "to_bitplanes",
+    "from_bitplanes",
+]

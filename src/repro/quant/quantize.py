@@ -1,0 +1,83 @@
+"""Symmetric per-channel weight quantization + bit-plane / nibble packing."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass
+class QuantizedTensor:
+    """Weights as stored in 'PIM mode': integer codes + per-channel scale.
+
+    codes: int8 codes in [-2^(bits-1), 2^(bits-1)-1], shape = original shape
+           (or nibble-packed along axis 0 when ``packed`` is True, bits=4).
+    scale: f32, broadcastable along the quantization axis.
+    """
+
+    codes: jnp.ndarray
+    scale: jnp.ndarray
+    bits: int
+    packed: bool = False
+
+    @property
+    def shape(self):
+        if self.packed:
+            return (2 * self.codes.shape[0],) + self.codes.shape[1:]
+        return self.codes.shape
+
+
+def quantize_symmetric(w: jnp.ndarray, bits: int = 8, axis: int = 0) -> QuantizedTensor:
+    """Per-output-channel symmetric quantization (axis = reduction axis).
+
+    The scale is chosen per channel of the *non*-reduction dims so the matmul
+    can rescale once per output column.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return QuantizedTensor(codes=codes, scale=scale, bits=bits)
+
+
+def dequantize(q: QuantizedTensor) -> jnp.ndarray:
+    codes = unpack_int4(q.codes) if q.packed else q.codes
+    return codes.astype(jnp.float32) * q.scale
+
+
+def pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4 codes pairwise along axis 0: (K, ...) int8 -> (K//2, ...) int8.
+
+    Row 2i goes to the low nibble, row 2i+1 to the high nibble.
+    """
+    lo = codes[0::2] & 0xF
+    hi = codes[1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`, with sign extension."""
+    lo = ((packed & 0xF) ^ 8) - 8
+    hi = (((packed >> 4) & 0xF) ^ 8) - 8
+    k2 = packed.shape[0]
+    out = jnp.stack([lo, hi], axis=1).reshape((2 * k2,) + packed.shape[1:])
+    return out.astype(jnp.int8)
+
+
+def to_bitplanes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Integer codes -> bit-planes, LSB first: shape ``(bits,) + codes.shape``.
+
+    Two's complement: plane ``bits-1`` carries weight ``-2^(bits-1)``.  This is
+    the *spatial* analogue of PiCaSO's bit-serial striped storage (§III-A).
+    """
+    shifts = jnp.arange(bits, dtype=jnp.int32).reshape((bits,) + (1,) * codes.ndim)
+    return ((codes.astype(jnp.int32)[None] >> shifts) & 1).astype(jnp.int8)
+
+
+def from_bitplanes(planes: jnp.ndarray) -> jnp.ndarray:
+    """Bit-planes -> int32 codes (two's complement)."""
+    bits = planes.shape[0]
+    weights = 2 ** jnp.arange(bits, dtype=jnp.int32)
+    weights = weights.at[bits - 1].set(-weights[bits - 1])
+    weights = weights.reshape((bits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=0)

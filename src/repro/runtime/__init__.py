@@ -1,0 +1,15 @@
+"""Distributed runtime: fault tolerance, stragglers, elastic scaling."""
+from .fault import (
+    ClusterState,
+    ElasticPlan,
+    FailureEvent,
+    HeartbeatMonitor,
+    StragglerDetector,
+    TrainingSupervisor,
+    plan_elastic_remesh,
+)
+
+__all__ = [
+    "ClusterState", "FailureEvent", "HeartbeatMonitor", "StragglerDetector",
+    "ElasticPlan", "plan_elastic_remesh", "TrainingSupervisor",
+]

@@ -1,0 +1,214 @@
+"""Fault tolerance, straggler mitigation, and elastic scaling.
+
+On a 1000+-node cluster the control plane must answer three questions every
+step: *who is alive* (heartbeats), *who is slow* (straggler statistics), and
+*what mesh do we run on now* (elastic re-planning).  These are plain-Python
+control paths — they run identically under simulation on CPU (tested in
+tests/test_runtime.py) and against a real cluster agent, because all device
+interaction goes through the injected callbacks.
+
+Recovery contract: training state is (params, opt_state, data step) — all
+reconstructable from the CheckpointManager + the stateless data pipeline, so
+recovery = restore latest atomic checkpoint, re-plan the mesh over the
+surviving hosts, re-lower the step, continue.  That is exactly what
+``TrainingSupervisor.run`` implements.
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+# -------------------------------------------------------------- heartbeat ---
+@dataclass
+class FailureEvent:
+    host: int
+    at_step: int
+    kind: str  # "dead" | "straggler"
+
+
+class HeartbeatMonitor:
+    """Detects dead hosts from missed heartbeats."""
+
+    def __init__(self, n_hosts: int, timeout_s: float = 30.0, clock=time.monotonic):
+        self.n_hosts = n_hosts
+        self.timeout_s = timeout_s
+        self._clock = clock
+        now = clock()
+        self.last_seen = {h: now for h in range(n_hosts)}
+        self.dead: set[int] = set()
+
+    def beat(self, host: int) -> None:
+        if host not in self.dead:
+            self.last_seen[host] = self._clock()
+
+    def sweep(self) -> list[int]:
+        """Mark and return newly-dead hosts."""
+        now = self._clock()
+        newly = [
+            h
+            for h, t in self.last_seen.items()
+            if h not in self.dead and now - t > self.timeout_s
+        ]
+        self.dead.update(newly)
+        return newly
+
+    @property
+    def healthy(self) -> list[int]:
+        return [h for h in range(self.n_hosts) if h not in self.dead]
+
+
+# -------------------------------------------------------------- straggler ---
+class StragglerDetector:
+    """Flags hosts whose step time exceeds ``factor`` x the fleet median.
+
+    Mitigation at the framework level: flagged hosts are reported to the
+    supervisor, which (a) excludes them at the next elastic re-plan, and
+    (b) in the meantime relies on within-step overlap (backup-task style
+    mitigation belongs to the cluster scheduler; the framework's job is to
+    *detect and re-plan*).
+    """
+
+    def __init__(self, n_hosts: int, window: int = 16, factor: float = 2.0):
+        self.window = window
+        self.factor = factor
+        self.times: dict[int, deque] = {h: deque(maxlen=window) for h in range(n_hosts)}
+
+    def record(self, host: int, step_time_s: float) -> None:
+        self.times[host].append(step_time_s)
+
+    def medians(self) -> dict[int, float]:
+        out = {}
+        for h, ts in self.times.items():
+            if ts:
+                s = sorted(ts)
+                out[h] = s[len(s) // 2]
+        return out
+
+    def stragglers(self) -> list[int]:
+        med = self.medians()
+        if len(med) < 2:
+            return []
+        fleet = sorted(med.values())[len(med) // 2]
+        return [h for h, m in med.items() if m > self.factor * fleet]
+
+
+# ----------------------------------------------------------------- elastic --
+@dataclass(frozen=True)
+class ElasticPlan:
+    pods: int
+    data: int
+    model: int
+    hosts_used: int
+    batch_scale: float  # fraction of the nominal global batch this mesh carries
+
+    @property
+    def shape(self) -> tuple:
+        return (self.pods, self.data, self.model) if self.pods > 1 else (self.data, self.model)
+
+
+def plan_elastic_remesh(
+    healthy_hosts: int,
+    *,
+    model_parallel: int = 16,
+    nominal_data: int = 32,  # pods*data at full strength
+    hosts_per_device_row: int = 1,
+) -> ElasticPlan:
+    """Largest power-of-two data extent that fits the surviving hosts.
+
+    The model axis is preserved (changing TP factor would invalidate the
+    parameter sharding); elasticity comes from shrinking the data axis and
+    rescaling the per-step token budget — the standard elastic-DP design.
+    """
+    if healthy_hosts < model_parallel * hosts_per_device_row:
+        raise RuntimeError(
+            f"only {healthy_hosts} hosts healthy; cannot sustain model_parallel={model_parallel}"
+        )
+    max_rows = healthy_hosts // (model_parallel * hosts_per_device_row)
+    data = 2 ** int(math.log2(max_rows))
+    data = min(data, nominal_data)
+    pods = 1
+    if data > 16:  # split across pods in rows of 16
+        pods, data = data // 16, 16
+    return ElasticPlan(
+        pods=pods,
+        data=data,
+        model=model_parallel,
+        hosts_used=pods * data * model_parallel * hosts_per_device_row,
+        batch_scale=(pods * data) / nominal_data,
+    )
+
+
+# -------------------------------------------------------------- supervisor --
+@dataclass
+class ClusterState:
+    step: int = 0
+    restarts: int = 0
+    failures: list = field(default_factory=list)
+    plans: list = field(default_factory=list)
+
+
+class TrainingSupervisor:
+    """Drives the train loop with failure recovery + elastic re-planning.
+
+    Injected callbacks keep it runnable in simulation:
+      run_step(step, plan) -> step_time_s            (raises on device loss)
+      save(step), restore() -> step | None           (checkpoint manager)
+      replan(healthy_hosts) -> ElasticPlan
+    """
+
+    def __init__(
+        self,
+        n_hosts: int,
+        run_step: Callable,
+        save: Callable,
+        restore: Callable,
+        replan: Callable[[int], ElasticPlan],
+        monitor: Optional[HeartbeatMonitor] = None,
+        detector: Optional[StragglerDetector] = None,
+        ckpt_every: int = 50,
+        max_restarts: int = 8,
+    ):
+        self.monitor = monitor or HeartbeatMonitor(n_hosts)
+        self.detector = detector or StragglerDetector(n_hosts)
+        self.run_step = run_step
+        self.save = save
+        self.restore = restore
+        self.replan = replan
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.state = ClusterState()
+
+    def run(self, total_steps: int) -> ClusterState:
+        st = self.state
+        plan = self.replan(len(self.monitor.healthy))
+        st.plans.append(plan)
+        while st.step < total_steps:
+            try:
+                dead = self.monitor.sweep()
+                if dead:
+                    raise RuntimeError(f"hosts died: {dead}")
+                t = self.run_step(st.step, plan)
+                for h in self.monitor.healthy:
+                    self.detector.record(h, t)
+                st.step += 1
+                if st.step % self.ckpt_every == 0:
+                    self.save(st.step)
+                slow = self.detector.stragglers()
+                if slow:
+                    st.failures.append(FailureEvent(slow[0], st.step, "straggler"))
+                    plan = self.replan(len(self.monitor.healthy) - len(slow))
+                    st.plans.append(plan)
+            except RuntimeError as e:
+                st.restarts += 1
+                if st.restarts > self.max_restarts:
+                    raise
+                st.failures.append(FailureEvent(-1, st.step, f"dead:{e}"))
+                restored = self.restore()
+                st.step = restored if restored is not None else 0
+                plan = self.replan(len(self.monitor.healthy))
+                st.plans.append(plan)
+        return st

@@ -1,0 +1,4 @@
+"""Serving substrate: PIM weight conversion + batched prefill/decode engine."""
+from .engine import ServingEngine, prefill_cache, quantize_tree
+
+__all__ = ["ServingEngine", "quantize_tree", "prefill_cache"]

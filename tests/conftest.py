@@ -1,0 +1,15 @@
+"""Shared test config.
+
+NOTE: do NOT set XLA_FLAGS/device-count here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512 host devices.
+"""
+from hypothesis import HealthCheck, settings
+
+# JIT compilation makes first examples slow; wall-clock deadlines are noise.
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")

@@ -1,0 +1,171 @@
+"""Bit-level machine: FA/S ALU, Booth multiplier, OpMux folds, network."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    OpCode,
+    booth_decode,
+    booth_multiply,
+    booth_nop_fraction,
+    fold_operand,
+    fold_reduce_block,
+    fold_source_index,
+    from_bits,
+    network_reduce_bits,
+    node_roles,
+    serial_alu,
+    sign_extend_bits,
+    to_bits,
+)
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _rand_ints(rng, n, width):
+    lo, hi = -(1 << (width - 1)), 1 << (width - 1)
+    return rng.integers(lo, hi, size=n, dtype=np.int64)
+
+
+# ------------------------------------------------------------------ bitops --
+@given(st.integers(-(2**15), 2**15 - 1), st.integers(2, 8))
+def test_bits_roundtrip(v, extra):
+    width = 16
+    bits = to_bits(jnp.array([v]), width)
+    assert int(from_bits(bits)[0]) == v
+    ext = sign_extend_bits(bits, width + extra)
+    assert int(from_bits(ext)[0]) == v
+
+
+# --------------------------------------------------------------------- ALU --
+@pytest.mark.parametrize("width", [4, 8, 16])
+@pytest.mark.parametrize("op", [OpCode.ADD, OpCode.SUB, OpCode.CPX, OpCode.CPY])
+def test_serial_alu_ops(width, op):
+    rng = _rng(width * 10 + int(op))
+    x = _rand_ints(rng, 64, width)
+    y = _rand_ints(rng, 64, width)
+    xb, yb = to_bits(jnp.asarray(x), width), to_bits(jnp.asarray(y), width)
+    ops = jnp.full((64,), int(op), dtype=jnp.int32)
+    s, _ = serial_alu(xb, yb, ops)
+    got = np.asarray(from_bits(s))
+    mod = 1 << width
+    if op == OpCode.ADD:
+        want = (x + y) % mod
+    elif op == OpCode.SUB:
+        want = (x - y) % mod
+    elif op == OpCode.CPX:
+        want = x % mod
+    else:
+        want = y % mod
+    np.testing.assert_array_equal(got % mod, want % mod)
+
+
+def test_serial_alu_mixed_lane_opcodes():
+    """Per-lane op-codes (as Booth's encoder issues them) work in one pass."""
+    width = 8
+    x = jnp.array([10, 10, 10, 10])
+    y = jnp.array([3, 3, 3, 3])
+    ops = jnp.array([OpCode.ADD, OpCode.SUB, OpCode.CPX, OpCode.CPY], dtype=jnp.int32)
+    s, _ = serial_alu(to_bits(x, width), to_bits(y, width), ops)
+    np.testing.assert_array_equal(np.asarray(from_bits(s)), [13, 7, 10, 3])
+
+
+# ------------------------------------------------------------------- Booth --
+def test_booth_decode_table2():
+    pairs = jnp.array([0b00, 0b01, 0b10, 0b11])
+    got = [int(v) for v in booth_decode(pairs)]
+    assert got == [OpCode.CPX, OpCode.ADD, OpCode.SUB, OpCode.CPX]
+
+
+@pytest.mark.parametrize("width", [4, 6, 8, 12, 16])
+def test_booth_multiply_matches_integer_product(width):
+    rng = _rng(width)
+    x = _rand_ints(rng, 128, width)
+    y = _rand_ints(rng, 128, width)
+    got = np.asarray(booth_multiply(jnp.asarray(x), jnp.asarray(y), width))
+    np.testing.assert_array_equal(got, (x * y).astype(np.int64))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(-128, 127),
+    st.integers(-128, 127),
+)
+def test_booth_multiply_property(a, b):
+    got = int(booth_multiply(jnp.array([a]), jnp.array([b]), 8)[0])
+    assert got == a * b
+
+
+def test_booth_nop_fraction_near_half():
+    """§V-B: on average ~half the Booth steps are NOPs."""
+    rng = _rng(7)
+    y = jnp.asarray(_rand_ints(rng, 4096, 8))
+    frac = float(booth_nop_fraction(y, 8))
+    assert 0.40 < frac < 0.60
+
+
+# ------------------------------------------------------------------- OpMux --
+def test_fold_source_index_16_pattern_a():
+    """A-FOLD-1..4 for a 16-PE block (Table III: H2, Q2, HQ2, HHQ2)."""
+    assert list(fold_source_index(16, 1)[:8]) == list(range(8, 16))
+    assert list(fold_source_index(16, 2)[:4]) == list(range(4, 8))
+    assert list(fold_source_index(16, 3)[:2]) == [2, 3]
+    assert list(fold_source_index(16, 4)[:1]) == [1]
+    assert all(s == -1 for s in fold_source_index(16, 4)[1:])
+
+
+def test_fold_pattern_b_adjacent():
+    """Fig 2(b): after fold-1, PE 2i holds PE 2i + PE 2i+1."""
+    src = fold_source_index(8, 1, pattern="b")
+    assert list(src[::2]) == [1, 3, 5, 7]
+
+
+@pytest.mark.parametrize("block", [8, 16, 32])
+@pytest.mark.parametrize("pattern", ["a", "b"])
+def test_fold_reduce_sums_block(block, pattern):
+    rng = _rng(block)
+    width = 16  # headroom included
+    vals = rng.integers(-200, 200, size=block)
+    bits = to_bits(jnp.asarray(vals), width)
+    out = fold_reduce_block(bits, pattern=pattern)
+    assert int(from_bits(out)[0]) == int(vals.sum())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(-100, 100), min_size=16, max_size=16))
+def test_fold_reduce_property(vals):
+    bits = to_bits(jnp.asarray(vals), 16)
+    out = fold_reduce_block(bits)
+    assert int(from_bits(out)[0]) == sum(vals)
+
+
+def test_fold_operand_zero_fill():
+    bits = to_bits(jnp.arange(16), 8)
+    y = fold_operand(bits, 1)
+    # lanes 8..15 must read 0 (Table III: Y = {0, A[H2]})
+    np.testing.assert_array_equal(np.asarray(from_bits(y[8:])), np.zeros(8))
+    np.testing.assert_array_equal(np.asarray(from_bits(y[:8])), np.arange(8, 16))
+
+
+# ----------------------------------------------------------------- network --
+def test_node_roles_level0_fig3():
+    roles = node_roles(8, 0)
+    assert roles[0] == "R" and roles[1] == "T"
+    assert roles[2] == "R" and roles[3] == "T"
+
+
+def test_node_roles_level1_passthrough():
+    roles = node_roles(8, 1)
+    assert roles[0] == "R" and roles[2] == "T" and roles[1] == "P"
+
+
+@pytest.mark.parametrize("n_blocks", [2, 4, 8, 16])
+def test_network_reduce_sums_blocks(n_blocks):
+    rng = _rng(n_blocks)
+    width = 20
+    vals = rng.integers(-1000, 1000, size=n_blocks)
+    out = network_reduce_bits(to_bits(jnp.asarray(vals), width))
+    assert int(from_bits(out)[0]) == int(vals.sum())

@@ -1,0 +1,85 @@
+"""Hypothesis property tests on system invariants (cost models, quant,
+mapping, schedules)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.core.archmodels import ARCHS
+from repro.core.mapping import matvec_cycles
+from repro.optim import cosine_schedule
+from repro.quant import dequantize, quantize_symmetric
+from repro.runtime import plan_elastic_remesh
+
+pow2 = st.integers(1, 7).map(lambda e: 2**e)
+widths = st.sampled_from([4, 8, 16, 32])
+
+
+@given(q=st.integers(1, 6).map(lambda e: 2 ** (e + 4)), n=widths)
+def test_picaso_accumulation_never_slower_than_spar2(q, n):
+    assert cm.accum_cycles_picaso(q, n) < cm.accum_cycles_spar2(q, n)
+
+
+@given(q=st.integers(1, 6).map(lambda e: 2 ** (e + 4)), n=widths)
+def test_amod_accum_faster_than_custom(q, n):
+    """The paper's §V-A claim holds at every (q, N): OpMux removes copies."""
+    assert cm.accum_cycles_amod(q, n) < cm.accum_cycles_custom(q, n)
+
+
+@given(n=widths)
+def test_memory_efficiency_ordering(n):
+    """Fig 7 ordering CCB < CoMeFa < A-Mod <= PiCaSO at every precision."""
+    ccb = ARCHS["CCB"].memory_efficiency(n)
+    comefa = ARCHS["CoMeFa-A"].memory_efficiency(n)
+    amod = ARCHS["A-Mod"].memory_efficiency(n)
+    picaso = ARCHS["PiCaSO-F"].memory_efficiency(n)
+    assert ccb < comefa < amod <= picaso
+
+
+@given(n=widths)
+def test_accum_formulas_positive_monotone(n):
+    prev = 0
+    for q in (16, 32, 64, 128, 256):
+        c = cm.accum_cycles_picaso(q, n)
+        assert c > prev
+        prev = c
+
+
+@given(m=st.integers(1, 64), k=pow2.map(lambda v: v * 16), n=widths)
+def test_matvec_cycles_scales_with_waves(m, k, n):
+    one = matvec_cycles(1, k, n, total_pes=k)
+    many = matvec_cycles(m, k, n, total_pes=k)
+    assert many == m * one
+
+
+@settings(max_examples=20)
+@given(
+    seed=st.integers(0, 10_000),
+    bits=st.sampled_from([4, 8]),
+    rows=st.integers(2, 32),
+    cols=st.integers(2, 16),
+)
+def test_quantize_error_bounded_by_half_step(seed, bits, rows, cols):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+    q = quantize_symmetric(w, bits=bits, axis=0)
+    err = jnp.abs(dequantize(q) - w)
+    assert float(jnp.max(err / (q.scale / 2 + 1e-12))) <= 1.0 + 1e-3
+
+
+@given(step=st.integers(0, 2000))
+def test_cosine_schedule_bounded(step):
+    s = float(cosine_schedule(step, 100, 1000))
+    assert 0.0 <= s <= 1.0 + 1e-6
+
+
+@given(hosts=st.integers(16, 512))
+def test_elastic_plan_invariants(hosts):
+    plan = plan_elastic_remesh(hosts, model_parallel=16, nominal_data=32)
+    assert plan.hosts_used <= hosts
+    assert plan.model == 16
+    total_rows = plan.pods * plan.data
+    assert total_rows & (total_rows - 1) == 0  # power of two
+    assert 0 < plan.batch_scale <= 1.0

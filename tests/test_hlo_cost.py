@@ -1,0 +1,98 @@
+"""Trip-count-aware HLO cost analyzer: scan == unrolled invariants."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo, parse_module
+
+
+def _cost(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze_hlo(txt)
+
+
+W = jnp.zeros((256, 256))
+X = jnp.ones((32, 256))
+
+
+def test_unrolled_matmul_flops_exact():
+    def f(x, w):
+        for _ in range(4):
+            x = x @ w
+        return x
+
+    c = _cost(f, X, W)
+    assert c.flops == 4 * 2 * 32 * 256 * 256
+
+
+def test_scan_matches_unrolled():
+    def unrolled(x, w):
+        for _ in range(8):
+            x = x @ w
+        return x
+
+    def scanned(x, w):
+        return jax.lax.scan(lambda h, _: (h @ w, None), x, None, length=8)[0]
+
+    cu, cs = _cost(unrolled, X, W), _cost(scanned, X, W)
+    assert cs.flops == cu.flops
+    # scan bookkeeping adds some bytes but must be the same order
+    assert cs.bytes_accessed < 3 * cu.bytes_accessed
+
+
+def test_nested_scan_multiplies():
+    def nested(x, w):
+        def outer(h, _):
+            inner = jax.lax.scan(lambda g, _: (g @ w, None), h, None, length=4)[0]
+            return inner, None
+
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    c = _cost(nested, X, W)
+    assert c.flops == 12 * 2 * 32 * 256 * 256
+
+
+def test_remat_counts_recompute():
+    """jax.checkpoint recompute must show up as extra flops in the bwd."""
+
+    def loss(x, w):
+        h = x
+        for _ in range(2):
+            h = jnp.tanh(h @ w)
+        return jnp.sum(h)
+
+    def loss_remat(x, w):
+        f = jax.checkpoint(lambda h: jnp.tanh(jnp.tanh(h @ w) @ w))
+        return jnp.sum(f(x))
+
+    g_plain = _cost(jax.grad(loss), X, W)
+    g_remat = _cost(jax.grad(loss_remat), X, W)
+    assert g_remat.flops >= g_plain.flops  # recompute adds work
+
+
+def test_collectives_inside_scan_scaled():
+    """A psum inside a scanned body must count trip-count times."""
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    devs = np.array(jax.devices()[:1]).reshape(1)
+    mesh = Mesh(devs, ("d",))
+
+    # single-device: no real collectives emitted — just check the parser
+    # handles a scanned module without crashing and finds the loop.
+    def scanned(x, w):
+        return jax.lax.scan(lambda h, _: (h @ w, None), x, None, length=6)[0]
+
+    txt = jax.jit(scanned).lower(X, W).compile().as_text()
+    c = analyze_hlo(txt)
+    assert any(m >= 6 for m in c.loops.values())
+
+
+def test_parse_module_finds_entry_and_regions():
+    def scanned(x, w):
+        return jax.lax.scan(lambda h, _: (h @ w, None), x, None, length=8)[0]
+
+    txt = jax.jit(scanned).lower(X, W).compile().as_text()
+    comps = parse_module(txt)
+    assert any(n.startswith("main") for n in comps)
+    assert any("region" in n for n in comps)

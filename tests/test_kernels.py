@@ -1,0 +1,160 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+sweeping shapes and dtypes as required."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bitplane import bitplane_matmul
+from repro.kernels.fold_reduce import fold_reduce
+from repro.kernels.pim_matmul import pim_matmul
+from repro.quant import (
+    dequantize,
+    from_bitplanes,
+    pack_int4,
+    quantize_symmetric,
+    to_bitplanes,
+    unpack_int4,
+)
+
+INTERP = dict(interpret=True)
+
+
+def _mk(m, k, n, seed=0, dtype=jnp.float32):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k), dtype=dtype)
+    w = jax.random.normal(kw, (k, n), dtype=jnp.float32)
+    return x, w
+
+
+# ------------------------------------------------------------------- quant --
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantize_roundtrip_error_bounded(bits):
+    _, w = _mk(1, 64, 32)
+    q = quantize_symmetric(w, bits=bits, axis=0)
+    err = jnp.abs(dequantize(q) - w)
+    step = q.scale  # max quantization step per column
+    assert float(jnp.max(err / (step / 2 + 1e-9))) <= 1.001
+
+
+def test_int4_pack_roundtrip():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(-8, 8, size=(64, 16)), dtype=jnp.int8)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(codes))), codes)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_bitplane_roundtrip(bits):
+    rng = np.random.default_rng(1)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1))
+    codes = jnp.asarray(rng.integers(lo, hi, size=(32, 8)), dtype=jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(from_bitplanes(to_bitplanes(codes, bits))), codes
+    )
+
+
+# -------------------------------------------------------------- pim_matmul --
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (8, 32, 16, 8, 16, 16),
+        (16, 128, 64, 8, 32, 32),
+        (32, 256, 128, 16, 128, 64),
+        (128, 512, 256, 128, 128, 512),  # full MXU-aligned tiles
+        (4, 64, 8, 4, 8, 64),  # single-tile K
+    ],
+)
+def test_pim_matmul_int8_matches_ref(m, k, n, bm, bn, bk):
+    x, w = _mk(m, k, n, seed=m + k + n)
+    q = quantize_symmetric(w, bits=8, axis=0)
+    got = pim_matmul(x, q.codes, q.scale, bits=8, bm=bm, bn=bn, bk=bk, **INTERP)
+    want = ref.pim_matmul_int8_ref(x, q.codes, q.scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "m,k,n,bk", [(8, 64, 16, 32), (16, 128, 32, 64), (32, 256, 64, 256)]
+)
+def test_pim_matmul_int4_matches_ref(m, k, n, bk):
+    x, w = _mk(m, k, n, seed=7)
+    q = quantize_symmetric(w, bits=4, axis=0)
+    packed = pack_int4(q.codes)
+    got = pim_matmul(x, packed, q.scale, bits=4, bm=8, bn=16, bk=bk, **INTERP)
+    want = ref.pim_matmul_int4_ref(x, packed, q.scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pim_matmul_dtypes(dtype):
+    x, w = _mk(16, 64, 32, seed=3, dtype=dtype)
+    q = quantize_symmetric(w, bits=8, axis=0)
+    got = pim_matmul(x, q.codes, q.scale, bits=8, bm=16, bn=32, bk=32, **INTERP)
+    want = ref.pim_matmul_int8_ref(x, q.codes, q.scale)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=tol, atol=tol * 10
+    )
+
+
+def test_pim_matmul_int8_end_to_end_accuracy():
+    """Dequant-fused output must track the f32 matmul within quant error."""
+    x, w = _mk(32, 512, 64, seed=11)
+    q = quantize_symmetric(w, bits=8, axis=0)
+    got = pim_matmul(x, q.codes, q.scale, bits=8, bm=32, bn=64, bk=128, **INTERP)
+    exact = x @ w
+    rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    assert rel < 1.5e-2, rel  # int8 per-channel quant error at K=512
+
+
+# ---------------------------------------------------------- bitplane matmul -
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("m,k,n,bk", [(8, 32, 16, 16), (16, 128, 32, 64)])
+def test_bitplane_matmul_matches_ref(bits, m, k, n, bk):
+    x, w = _mk(m, k, n, seed=bits * 100 + m)
+    q = quantize_symmetric(w, bits=bits, axis=0)
+    planes = to_bitplanes(q.codes, bits)
+    got = bitplane_matmul(x, planes, q.scale, bm=8, bn=16, bk=bk, **INTERP)
+    want = ref.bitplane_matmul_ref(x, planes, q.scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_bitplane_equals_packed_path():
+    """The PIM-semantic plane kernel and the packed kernel agree exactly."""
+    x, w = _mk(16, 64, 32, seed=21)
+    q = quantize_symmetric(w, bits=8, axis=0)
+    planes = to_bitplanes(q.codes, 8)
+    a = bitplane_matmul(x, planes, q.scale, bm=16, bn=32, bk=32, **INTERP)
+    b = pim_matmul(x, q.codes, q.scale, bits=8, bm=16, bn=32, bk=32, **INTERP)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------------- fold_reduce --
+@pytest.mark.parametrize("rows,q,br", [(8, 16, 8), (64, 128, 32), (256, 64, 256)])
+def test_fold_reduce_matches_ref(rows, q, br):
+    x = jax.random.normal(jax.random.PRNGKey(rows + q), (rows, q))
+    got = fold_reduce(x, br=br, **INTERP)
+    want = ref.fold_reduce_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(jnp.sum(x, axis=-1)), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(1, 5).map(lambda e: 2**e),
+    st.integers(0, 1000),
+)
+def test_fold_reduce_property(qexp, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, qexp * 2))
+    got = fold_reduce(x, br=4, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(jnp.sum(x, axis=-1)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_fold_reduce_rejects_non_pow2():
+    with pytest.raises(AssertionError):
+        fold_reduce(jnp.ones((4, 12)), interpret=True)

@@ -1,0 +1,46 @@
+"""int8 KV cache (kv_cache_bits=8): correctness + storage accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.serving.engine import pim_bytes
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "llama3.2-3b", "zamba2-1.2b"])
+def test_int8_cache_decode_matches_forward(arch):
+    cfg = get_reduced(arch).replace(kv_cache_bits=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    full, _ = forward(params, cfg, {"tokens": toks})
+    cache = init_cache(cfg, 2, 8)
+    outs = []
+    for pos in range(8):
+        lg, cache = decode_step(params, cfg, toks[:, pos : pos + 1], cache,
+                                jnp.int32(pos))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    agree = (np.asarray(dec).argmax(-1) == np.asarray(full).argmax(-1)).mean()
+    assert agree > 0.95, agree
+    rel = float(jnp.linalg.norm(dec - full) / jnp.linalg.norm(full))
+    assert rel < 0.05, rel
+
+
+def test_int8_cache_halves_storage():
+    cfg = get_reduced("llama3.2-3b")
+    c16 = init_cache(cfg, 4, 128)
+    c8 = init_cache(cfg.replace(kv_cache_bits=8), 4, 128)
+    # int8 codes + f32/(D=16) scales vs f32 (reduced configs are f32):
+    # expect >= 3x smaller; on bf16 production dtype it is ~1.9x.
+    assert pim_bytes(c16) / pim_bytes(c8) > 3.0
+
+
+def test_int8_cache_structure():
+    cfg = get_reduced("qwen2-1.5b").replace(kv_cache_bits=8)
+    cache = init_cache(cfg, 2, 16)
+    layer = cache["layers"]
+    assert layer["k"].dtype == jnp.int8
+    assert layer["k_scale"].dtype == jnp.float32
+    assert layer["k"].shape[-2] == 16  # (L, B, KV, S, D) head-major

@@ -1,0 +1,167 @@
+"""Substrate tests: data determinism, optimizer, compression, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_tree, save_tree
+from repro.configs import SHAPES, get_reduced
+from repro.data import DataConfig, make_batch, token_stream
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    compress_gradients,
+    cosine_schedule,
+    decompress_gradients,
+    error_feedback_update,
+    global_norm,
+)
+
+
+# --------------------------------------------------------------------- data -
+def test_data_deterministic_and_restart_safe():
+    dc = DataConfig(seed=7, vocab=128)
+    a = token_stream(dc, step=3, shape=(4, 64))
+    b = token_stream(dc, step=3, shape=(4, 64))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = token_stream(dc, step=4, shape=(4, 64))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_data_shard_disjoint():
+    dc = DataConfig(seed=7, vocab=128)
+    a = token_stream(dc, step=0, shape=(2, 32), shard=0)
+    b = token_stream(dc, step=0, shape=(2, 32), shard=1)
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_make_batch_families():
+    for arch in ("qwen2-1.5b", "seamless-m4t-medium", "llama-3.2-vision-90b"):
+        cfg = get_reduced(arch)
+        b = make_batch(cfg, SHAPES["train_4k"], batch_override=2, seq_override=16)
+        key = "dec_tokens" if cfg.family == "encdec" else "tokens"
+        assert b[key].shape == (2, 16)
+        assert int(b[key].max()) < cfg.vocab
+
+
+# ---------------------------------------------------------------- optimizer -
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array([1.0])}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0)
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adamw_bf16_params_f32_master():
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = adamw_init(params)
+    assert state["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4, 4), 1e-3, jnp.bfloat16)}
+    p2, state, _ = adamw_update(params, g, state, AdamWConfig())
+    assert p2["w"].dtype == jnp.bfloat16
+    assert int(state["step"]) == 1
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros((3,))}
+    state = adamw_init(params)
+    g = {"w": jnp.array([1e6, 1e6, 1e6])}
+    _, _, m = adamw_update(params, g, state, AdamWConfig(grad_clip=1.0))
+    assert float(m["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_cosine_schedule_shape():
+    s0 = float(cosine_schedule(0, 100, 1000))
+    s_warm = float(cosine_schedule(100, 100, 1000))
+    s_end = float(cosine_schedule(1000, 100, 1000))
+    assert s0 < 0.02 and abs(s_warm - 1.0) < 1e-5 and 0.09 < s_end < 0.11
+
+
+# -------------------------------------------------------------- compression -
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_compression_roundtrip_error_small(seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (8, 16))
+    comp = compress_gradients({"g": g})
+    rec = decompress_gradients(comp)["g"]
+    denom = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    assert float(jnp.max(jnp.abs(rec - g) / (denom + 1e-9))) < 1 / 120
+
+
+def test_error_feedback_accumulates():
+    """With error feedback, the *running sum* of decompressed grads tracks
+    the true running sum (unbiased-in-the-limit compression)."""
+    key = jax.random.PRNGKey(0)
+    true_sum = jnp.zeros((4, 8))
+    rec_sum = jnp.zeros((4, 8))
+    residual = None
+    for i in range(30):
+        g = {"g": jax.random.normal(jax.random.fold_in(key, i), (4, 8)) * 1e-4}
+        comp, residual = error_feedback_update(g, residual)
+        rec = decompress_gradients(comp)["g"]
+        true_sum = true_sum + g["g"]
+        rec_sum = rec_sum + rec
+    err = float(jnp.max(jnp.abs(rec_sum - true_sum)))
+    # residual carries at most one quantization step
+    assert err < 2e-4, err
+
+
+# ------------------------------------------------------------- checkpoints --
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.bfloat16), "step": jnp.int32(7)},
+    }
+    d = str(tmp_path / "ck")
+    save_tree(tree, d)
+    out = restore_tree(jax.tree.map(jnp.zeros_like, tree), d)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+        assert x.dtype == y.dtype
+
+
+def test_checkpoint_manager_atomic_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"w": jnp.zeros((4,))}
+    for s in (10, 20, 30):
+        mgr.save(s, {"w": jnp.full((4,), float(s))})
+    assert latest_step(str(tmp_path)) == 30
+    # GC keeps only the last two
+    assert not os.path.exists(mgr.dir_for(10))
+    step, restored = mgr.restore_latest(tree)
+    assert step == 30
+    assert float(restored["w"][0]) == 30.0
+
+
+def test_checkpoint_crash_mid_save_preserves_previous(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    mgr.save(1, {"w": jnp.ones((2,))})
+    # simulate a crash: a stale .tmp directory exists for step 2
+    os.makedirs(mgr.dir_for(2) + ".tmp", exist_ok=True)
+    assert latest_step(str(tmp_path)) == 1
+    step, restored = mgr.restore_latest({"w": jnp.zeros((2,))})
+    assert step == 1 and float(restored["w"][0]) == 1.0
+
+
+def test_restore_missing_key_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    save_tree({"a": jnp.ones((2,))}, d)
+    with pytest.raises(ValueError, match="missing keys"):
+        restore_tree({"a": jnp.zeros((2,)), "b": jnp.zeros((2,))}, d)
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    assert abs(float(global_norm(t)) - np.sqrt(3 + 16)) < 1e-5

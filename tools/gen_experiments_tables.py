@@ -1,0 +1,43 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline markdown tables from
+results/dryrun_all.json."""
+import json
+import sys
+
+
+def main(path="results/dryrun_all.json"):
+    with open(path) as f:
+        data = json.load(f)
+    ok = data["ok"]
+    print(f"## cells: {len(ok)} ok, {len(data['failed'])} failed\n")
+
+    print("| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+          "bottleneck | useful | roofline frac | mem/dev (GiB) |")
+    print("|---|---|---|---:|---:|---:|---|---:|---:|---:|")
+    for c in ok:
+        print(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {c['t_compute_s']*1e3:.2f} | {c['t_memory_s']*1e3:.2f} "
+            f"| {c['t_collective_s']*1e3:.2f} | {c['bottleneck']} "
+            f"| {c['useful_ratio']:.2f} | {c['roofline_fraction']:.3f} "
+            f"| {c['bytes_per_device_gb']:.2f} |"
+        )
+
+    # summary stats
+    from collections import Counter
+    bn = Counter(c["bottleneck"] for c in ok)
+    print(f"\nbottleneck distribution: {dict(bn)}")
+    worst = sorted(ok, key=lambda c: c["roofline_fraction"])[:6]
+    print("\nworst roofline fractions:")
+    for c in worst:
+        print(f"  {c['arch']} {c['shape']} {c['mesh']}: "
+              f"{c['roofline_fraction']:.4f} ({c['bottleneck']})")
+    collbound = sorted(ok, key=lambda c: -(c["t_collective_s"] /
+                       max(c["t_compute_s"] + c["t_memory_s"], 1e-12)))[:6]
+    print("\nmost collective-bound:")
+    for c in collbound:
+        print(f"  {c['arch']} {c['shape']} {c['mesh']}: "
+              f"x/{'{c+m}'}={c['t_collective_s']/max(c['t_compute_s']+c['t_memory_s'],1e-12):.2f}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,44 @@
+"""Top byte/flop contributors of a cached HLO — the dry-run 'profiler'."""
+import gzip
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.hlo_cost import (
+    _MEM_OPS,
+    compute_multipliers,
+    _find_entry,
+    instr_bytes,
+    parse_module,
+)
+
+
+def main(path, top=20):
+    with gzip.open(path, "rt") as f:
+        hlo = f.read()
+    comps = parse_module(hlo)
+    entry = _find_entry(hlo, comps)
+    mult, trips = compute_multipliers(comps, entry)
+
+    rows = []
+    for cname, comp in comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue
+        symtab = {i.name: i.shape_str for i in comp.instrs}
+        for ins in comp.instrs:
+            if ins.opcode not in _MEM_OPS:
+                continue
+            b = instr_bytes(ins, symtab, trips.get(cname, 0))
+            rows.append((m * b, m, b, cname, ins.name, ins.opcode,
+                         ins.shape_str[:60]))
+
+    rows.sort(reverse=True)
+    print(f"{'m*bytes':>14s} {'mult':>8s} {'bytes':>12s}  comp/instr (op) shape")
+    for mb, m, b, cname, iname, op, shape in rows[:int(top)]:
+        print(f"{mb:14.3e} {m:8.0f} {b:12.3e}  {cname[:28]}/{iname[:40]} "
+              f"({op}) {shape}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

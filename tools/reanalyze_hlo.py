@@ -1,0 +1,75 @@
+"""Re-derive roofline terms for every cached HLO (results/hlo/*.hlo.gz)
+with the CURRENT hlo_cost analyzer — no recompilation.
+
+Merges with the existing dryrun json (keeps mem/dev + compile times) and
+rewrites results/dryrun_all.json.
+"""
+import glob
+import gzip
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops_for
+
+
+def main(hlo_dir="results/hlo", json_path="results/dryrun_all.json",
+         extra_jsons=("results/dry_vlm.json",)):
+    old = {}
+    for path in (json_path,) + tuple(extra_jsons):
+        if os.path.exists(path):
+            with open(path) as f:
+                for c in json.load(f).get("ok", []):
+                    old[(c["arch"], c["shape"], c["mesh"])] = c
+
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(hlo_dir, "*.hlo.gz"))):
+        base = os.path.basename(fn)[: -len(".hlo.gz")]
+        m = re.match(r"(.+)_(train_4k|prefill_32k|decode_32k|long_500k)_(.+)$", base)
+        if not m:
+            print("skip", base)
+            continue
+        arch, shape_name, mesh = m.groups()
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        with gzip.open(fn, "rt") as f:
+            cost = analyze_hlo(f.read())
+        n_dev = 512 if mesh == "2x16x16" else 256
+        t_c = cost.flops / PEAK_FLOPS
+        t_m = cost.bytes_accessed / HBM_BW
+        t_x = cost.collective_bytes / ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        prev = old.get((arch, shape_name, mesh), {})
+        mf = model_flops_for(cfg, shape)
+        rows.append({
+            "arch": arch, "shape": shape_name, "mesh": mesh,
+            "kind": prev.get("kind", shape.kind), "ok": True,
+            "lower_s": prev.get("lower_s"), "compile_s": prev.get("compile_s"),
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "bottleneck": max(terms, key=terms.get),
+            "hlo_gflops": cost.flops / 1e9,
+            "hlo_gbytes": cost.bytes_accessed / 1e9,
+            "coll_gbytes": cost.collective_bytes / 1e9,
+            "model_gflops": mf / 1e9,
+            "useful_ratio": mf / (cost.flops * n_dev) if cost.flops else 0.0,
+            "roofline_fraction": t_c / max(terms.values()) if max(terms.values()) else 0.0,
+            "bytes_per_device_gb": prev.get("bytes_per_device_gb", 0.0),
+            "collectives": {k: {"bytes": int(v)} for k, v in
+                            cost.collective_by_kind.items()},
+        })
+        print(f"{arch:24s} {shape_name:12s} {mesh:8s} "
+              f"c={t_c*1e3:10.2f} m={t_m*1e3:12.2f} x={t_x*1e3:10.2f} ms "
+              f"useful={rows[-1]['useful_ratio']:.2f}")
+
+    with open(json_path, "w") as f:
+        json.dump({"ok": rows, "failed": []}, f, indent=1)
+    print(f"\nwrote {json_path} with {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])
