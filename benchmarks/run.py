@@ -3,14 +3,18 @@ roofline report.  Prints ``name,us_per_call,derived`` CSV."""
 from __future__ import annotations
 
 import sys
+from pathlib import Path
 
-sys.path.insert(0, "src")
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT))  # make `benchmarks` importable as a package
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, paper_tables, roofline_report
+    from benchmarks import decode_bench, kernel_bench, paper_tables, roofline_report
 
-    suites = paper_tables.ALL + kernel_bench.ALL + roofline_report.ALL
+    suites = (paper_tables.ALL + kernel_bench.ALL + roofline_report.ALL
+              + decode_bench.ALL)
     print("name,us_per_call,derived")
     failures = 0
     for suite in suites:

@@ -10,7 +10,9 @@ this kernel exists to keep the paper's execution semantics runnable and
 testable end-to-end.
 
 Grid: (M/bm, N/bn, K/bk); the B planes of each (bk, bn) weight tile arrive
-as one (B, bk, bn) block.
+as one (B, bk, bn) block.  Non-multiple shapes are zero-padded to tile; the
+final K step applies the same fused epilogue as ``pim_matmul``
+(scale [+ bias] -> activation [+ residual], see kernels.epilogue).
 """
 from __future__ import annotations
 
@@ -20,8 +22,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .epilogue import (
+    apply_epilogue,
+    build_epilogue_inputs,
+    normalize_bias,
+    pad_axis,
+    round_up,
+    unpack_epilogue_refs,
+)
 
-def _bitplane_kernel(x_ref, p_ref, s_ref, o_ref, *, n_k: int, bits: int):
+
+def _bitplane_kernel(x_ref, p_ref, s_ref, *rest, n_k: int, bits: int,
+                     activation: str, has_bias: bool, has_residual: bool):
+    o_ref, b_ref, r_ref = unpack_epilogue_refs(rest, has_bias, has_residual)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -38,37 +51,66 @@ def _bitplane_kernel(x_ref, p_ref, s_ref, o_ref, *, n_k: int, bits: int):
 
     @pl.when(k == n_k - 1)
     def _flush():
-        o_ref[...] *= s_ref[...]
+        o_ref[...] = apply_epilogue(
+            o_ref[...], s_ref[...],
+            b_ref[...] if has_bias else None,
+            r_ref[...] if has_residual else None,
+            activation,
+        )
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "bk", "interpret")
+)
 def bitplane_matmul(
     x: jnp.ndarray,
     planes: jnp.ndarray,
     scale: jnp.ndarray,
     *,
+    bias: jnp.ndarray | None = None,
+    activation: str = "none",
+    residual: jnp.ndarray | None = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 256,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """x (M,K) @ bitplanes (B,K,N) * scale (1,N) -> (M,N) f32."""
+    """x (M,K) @ bitplanes (B,K,N) * scale (1,N) -> (M,N) f32, epilogue fused."""
     m, k_dim = x.shape
     bits, k_w, n = planes.shape
     assert k_w == k_dim
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k_dim)
-    assert m % bm == 0 and n % bn == 0 and k_dim % bk == 0
-    n_k = k_dim // bk
+    m_pad, n_pad, k_pad = round_up(m, bm), round_up(n, bn), round_up(k_dim, bk)
+    n_k = k_pad // bk
 
-    return pl.pallas_call(
-        functools.partial(_bitplane_kernel, n_k=n_k, bits=bits),
-        grid=(m // bm, n // bn, n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bits, bk, bn), lambda i, j, k: (0, k, j)),
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
-        ],
+    bias = normalize_bias(bias, n)
+    x = pad_axis(pad_axis(x, 1, k_pad), 0, m_pad)
+    planes = pad_axis(pad_axis(planes, 1, k_pad), 2, n_pad)
+    scale = pad_axis(scale, 1, n_pad)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bits, bk, bn), lambda i, j, k: (0, k, j)),
+        pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+    ]
+    operands = [x, planes, scale]
+    ep_specs, ep_ops = build_epilogue_inputs(
+        bias, residual, m=m, n=n, m_pad=m_pad, n_pad=n_pad, bm=bm, bn=bn,
+        row_map=lambda i, j, k: (0, j), tile_map=lambda i, j, k: (i, j))
+    in_specs += ep_specs
+    operands += ep_ops
+
+    out = pl.pallas_call(
+        functools.partial(
+            _bitplane_kernel, n_k=n_k, bits=bits, activation=activation,
+            has_bias=bias is not None, has_residual=residual is not None,
+        ),
+        grid=(m_pad // bm, n_pad // bn, n_k),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
         interpret=interpret,
-    )(x, planes, scale)
+    )(*operands)
+    if m_pad != m or n_pad != n:
+        out = out[:m, :n]
+    return out

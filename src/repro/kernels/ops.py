@@ -13,6 +13,7 @@ from repro.quant import QuantizedTensor, pack_int4, quantize_symmetric, to_bitpl
 from .bitplane import bitplane_matmul
 from .fold_reduce import fold_reduce
 from .pim_matmul import pim_matmul
+from .pim_matvec import pim_matvec
 
 
 def _interpret() -> bool:
@@ -34,6 +35,15 @@ def pim_dense(x: jnp.ndarray, q: QuantizedTensor, **kw) -> jnp.ndarray:
     )
 
 
+def pim_matvec_dense(x: jnp.ndarray, q: QuantizedTensor, *, bias=None,
+                     activation: str = "none", residual=None, **kw) -> jnp.ndarray:
+    """Decode-shaped (M<=8) quantized matvec with the fused epilogue."""
+    return pim_matvec(
+        x, q.codes, q.scale, bits=q.bits, bias=bias, activation=activation,
+        residual=residual, interpret=_interpret(), **kw
+    )
+
+
 def pim_dense_bitplane(x: jnp.ndarray, w: jnp.ndarray, bits: int = 4, **kw) -> jnp.ndarray:
     """PIM-semantic path: quantize + bit-plane decompose + plane-wise matmul."""
     q = quantize_symmetric(w, bits=bits, axis=0)
@@ -47,6 +57,7 @@ def fold_sum(x: jnp.ndarray, **kw) -> jnp.ndarray:
 
 
 __all__ = [
-    "pim_matmul", "bitplane_matmul", "fold_reduce",
-    "quantize_for_pim", "pim_dense", "pim_dense_bitplane", "fold_sum",
+    "pim_matmul", "pim_matvec", "bitplane_matmul", "fold_reduce",
+    "quantize_for_pim", "pim_dense", "pim_matvec_dense",
+    "pim_dense_bitplane", "fold_sum",
 ]

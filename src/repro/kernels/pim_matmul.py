@@ -13,7 +13,12 @@ Tiling: grid (M/bm, N/bn, K/bk), K innermost; the output BlockSpec ignores k,
 so the f32 accumulator tile stays resident in VMEM across the K sweep (zero
 spill) — exactly like PiCaSO keeping partial sums in the PE register file
 during a row MAC.  MXU alignment: bm/bn/bk multiples of 128 for full-size
-inputs (smaller shapes shrink the tile).
+inputs (smaller shapes shrink the tile); shapes that are not multiples of
+the chosen blocks are zero-padded to tile and the output sliced back.
+
+Epilogue: the final K step applies scale × acc [+ bias] → activation
+[+ residual] while the tile is still in VMEM (see kernels.epilogue), so the
+per-output ops never round-trip through HBM.
 """
 from __future__ import annotations
 
@@ -23,8 +28,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .epilogue import (
+    apply_epilogue,
+    build_epilogue_inputs,
+    normalize_bias,
+    pad_axis,
+    quant_accumulate,
+    round_up,
+    unpack_epilogue_refs,
+)
 
-def _mm_int8_kernel(x_ref, w_ref, s_ref, o_ref, *, n_k: int):
+
+def _mm_kernel(x_ref, w_ref, s_ref, *rest, n_k: int, bits: int,
+               activation: str, has_bias: bool, has_residual: bool):
+    o_ref, b_ref, r_ref = unpack_epilogue_refs(rest, has_bias, has_residual)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -32,57 +49,47 @@ def _mm_int8_kernel(x_ref, w_ref, s_ref, o_ref, *, n_k: int):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     # Dequantize the weight tile at the VMEM boundary (the 'BRAM port').
-    w = w_ref[...].astype(jnp.float32)
-    o_ref[...] += jnp.dot(
-        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
-    )
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += quant_accumulate(x, w_ref[...], bits)
 
     @pl.when(k == n_k - 1)
     def _flush():
-        o_ref[...] *= s_ref[...]
-
-
-def _mm_int4_kernel(x_ref, w_ref, s_ref, o_ref, *, n_k: int):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    packed = w_ref[...]  # (bk//2, bn) int8: two K rows per byte
-    lo = (((packed & 0xF) ^ 8) - 8).astype(jnp.float32)
-    hi = ((((packed >> 4) & 0xF) ^ 8) - 8).astype(jnp.float32)
-    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
-    # Even K rows hit the low nibbles, odd K rows the high nibbles.
-    o_ref[...] += jnp.dot(x[:, 0::2], lo, preferred_element_type=jnp.float32)
-    o_ref[...] += jnp.dot(x[:, 1::2], hi, preferred_element_type=jnp.float32)
-
-    @pl.when(k == n_k - 1)
-    def _flush():
-        o_ref[...] *= s_ref[...]
+        o_ref[...] = apply_epilogue(
+            o_ref[...], s_ref[...],
+            b_ref[...] if has_bias else None,
+            r_ref[...] if has_residual else None,
+            activation,
+        )
 
 
 def _pick(block: int, dim: int) -> int:
     return min(block, dim)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "activation", "bm", "bn", "bk", "interpret"),
+)
 def pim_matmul(
     x: jnp.ndarray,
     w_codes: jnp.ndarray,
     scale: jnp.ndarray,
     *,
     bits: int = 8,
+    bias: jnp.ndarray | None = None,
+    activation: str = "none",
+    residual: jnp.ndarray | None = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """x (M,K) f32/bf16 @ quantized w -> (M,N) f32.
+    """x (M,K) f32/bf16 @ quantized w -> (M,N) f32, epilogue fused.
 
     bits=8: ``w_codes`` is (K, N) int8.  bits=4: ``w_codes`` is the
     nibble-packed (K//2, N) int8 from ``quant.pack_int4``.
-    ``scale``: (1, N) f32 per-output-channel scale.
+    ``scale``: (1, N) f32 per-output-channel scale.  ``bias``: (N,) or
+    (1, N); ``residual``: (M, N); ``activation``: none|relu|silu|gelu.
     """
     m, k_dim = x.shape
     if bits == 8:
@@ -95,27 +102,44 @@ def pim_matmul(
         raise ValueError(f"bits must be 4 or 8, got {bits}")
 
     bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, k_dim)
-    assert m % bm == 0 and n % bn == 0 and k_dim % bk == 0, (m, n, k_dim, bm, bn, bk)
-    if bits == 4:
-        assert bk % 2 == 0
-    n_k = k_dim // bk
-    grid = (m // bm, n // bn, n_k)
+    if bits == 4 and bk % 2:
+        bk += 1  # keep nibble pairs whole
+    m_pad, n_pad, k_pad = round_up(m, bm), round_up(n, bn), round_up(k_dim, bk)
+    n_k = k_pad // bk
+    grid = (m_pad // bm, n_pad // bn, n_k)
+
+    bias = normalize_bias(bias, n)
+    x = pad_axis(pad_axis(x, 1, k_pad), 0, m_pad)
+    scale = pad_axis(scale, 1, n_pad)
 
     x_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
     if bits == 8:
+        w_codes = pad_axis(pad_axis(w_codes, 0, k_pad), 1, n_pad)
         w_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
-        kernel = functools.partial(_mm_int8_kernel, n_k=n_k)
     else:
+        w_codes = pad_axis(pad_axis(w_codes, 0, k_pad // 2), 1, n_pad)
         w_spec = pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j))
-        kernel = functools.partial(_mm_int4_kernel, n_k=n_k)
     s_spec = pl.BlockSpec((1, bn), lambda i, j, k: (0, j))
-    o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
 
-    return pl.pallas_call(
-        kernel,
+    in_specs = [x_spec, w_spec, s_spec]
+    operands = [x, w_codes, scale]
+    ep_specs, ep_ops = build_epilogue_inputs(
+        bias, residual, m=m, n=n, m_pad=m_pad, n_pad=n_pad, bm=bm, bn=bn,
+        row_map=lambda i, j, k: (0, j), tile_map=lambda i, j, k: (i, j))
+    in_specs += ep_specs
+    operands += ep_ops
+
+    out = pl.pallas_call(
+        functools.partial(
+            _mm_kernel, n_k=n_k, bits=bits, activation=activation,
+            has_bias=bias is not None, has_residual=residual is not None,
+        ),
         grid=grid,
-        in_specs=[x_spec, w_spec, s_spec],
-        out_specs=o_spec,
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
         interpret=interpret,
-    )(x, w_codes, scale)
+    )(*operands)
+    if m_pad != m or n_pad != n:
+        out = out[:m, :n]
+    return out

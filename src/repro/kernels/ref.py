@@ -3,6 +3,35 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .epilogue import apply_epilogue
+
+
+def _unpack_int4(w_packed: jnp.ndarray) -> jnp.ndarray:
+    """(K//2, N) nibble-packed int8 -> (K, N) f32 codes (sign-extended)."""
+    lo = (((w_packed & 0xF) ^ 8) - 8).astype(jnp.float32)
+    hi = ((((w_packed >> 4) & 0xF) ^ 8) - 8).astype(jnp.float32)
+    k2, n = w_packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
+
+
+def pim_matvec_ref(
+    x: jnp.ndarray,
+    w_codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    bits: int = 8,
+    bias=None,
+    activation: str = "none",
+    residual=None,
+) -> jnp.ndarray:
+    """Oracle for kernels.pim_matvec: unscaled code matmul, then the same
+    fused-epilogue order (scale [+ bias] -> activation [+ residual])."""
+    w = w_codes.astype(jnp.float32) if bits == 8 else _unpack_int4(w_codes)
+    acc = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    bias = None if bias is None else jnp.asarray(bias, jnp.float32).reshape(1, -1)
+    res = None if residual is None else residual.astype(jnp.float32)
+    return apply_epilogue(acc, scale, bias, res, activation)
+
 
 def pim_matmul_int8_ref(
     x: jnp.ndarray, w_codes: jnp.ndarray, scale: jnp.ndarray

@@ -8,24 +8,30 @@ from __future__ import annotations
 import jax
 
 
+def _axis_kwargs(n_axes: int) -> dict:
+    """axis_types=Auto where the installed jax has it (>= 0.4.38); older
+    jax only has Auto behavior, so no kwarg is needed."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model).
     Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    from jax.sharding import AxisType
-
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_mesh_from_plan(plan):
     """Mesh for an ElasticPlan (runtime.plan_elastic_remesh)."""
-    from jax.sharding import AxisType
-
     return jax.make_mesh(
         plan.shape,
         ("pod", "data", "model")[-len(plan.shape):],
-        axis_types=(AxisType.Auto,) * len(plan.shape),
+        **_axis_kwargs(len(plan.shape)),
     )
 
 

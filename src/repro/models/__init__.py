@@ -1,4 +1,15 @@
 """Model zoo: functional JAX implementations of the assigned architectures."""
-from .lm import decode_step, encode, forward, init_cache, init_params, loss_fn
+from .lm import (
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
 
-__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step", "encode"]
+__all__ = [
+    "init_params", "forward", "loss_fn", "init_cache", "decode_step",
+    "encode", "prefill",
+]

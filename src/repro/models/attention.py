@@ -156,6 +156,65 @@ def attn_apply(
     return linear(o, p["wo"])
 
 
+# ---------------------------------------------------------------- prefill ---
+def attn_prefill(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D)
+    cache: dict,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 0.0,
+    kv_chunk: int = KV_CHUNK,
+) -> tuple[jnp.ndarray, dict]:
+    """Single-pass prefill: full-sequence causal attention that also writes
+    all S prompt tokens' K/V into the preallocated decode cache at once.
+
+    Replaces S sequential ``attn_decode`` calls with one lowered program —
+    the host-dispatch overhead the paper's PIM argument says must not
+    dominate the memory-bound regime.  Numerics match the per-token path:
+    with an int8 cache the prompt attends against the quantize->dequantize
+    K/V, i.e. exactly what later decode steps will read back.
+    """
+    b, s, _ = x.shape
+    q = _split_heads(linear(x, p["wq"], p.get("bq")), n_heads, head_dim)
+    k = _split_heads(linear(x, p["wk"], p.get("bk")), n_kv, head_dim)
+    v = _split_heads(linear(x, p["wv"], p.get("bv")), n_kv, head_dim)
+    if rope_theta:
+        positions = jnp.arange(s)
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    k_t = k.transpose(0, 2, 1, 3)  # (B, KV, S, D) — the cache layout
+    v_t = v.transpose(0, 2, 1, 3)
+    if "k_scale" in cache:
+        k_codes, k_sc = _quant_kv(k_t)
+        v_codes, v_sc = _quant_kv(v_t)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k_codes, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v_codes, (0, 0, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], k_sc, (0, 0, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], v_sc, (0, 0, 0)),
+        }
+        k = (k_codes.astype(x.dtype) * k_sc[..., None].astype(x.dtype)).transpose(0, 2, 1, 3)
+        v = (v_codes.astype(x.dtype) * v_sc[..., None].astype(x.dtype)).transpose(0, 2, 1, 3)
+    else:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k_t.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v_t.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        }
+    g = n_heads // n_kv
+    qg = q.reshape(b, s, n_kv, g, head_dim)
+    if k.shape[1] > CHUNKED_THRESHOLD:
+        o = _chunked_attention(qg, k, v, causal=True, kv_chunk=kv_chunk)
+    else:
+        o = _direct_attention(qg, k, v, causal=True)
+    o = o.reshape(b, s, n_heads * head_dim)
+    return linear(o, p["wo"]), new_cache
+
+
 # ----------------------------------------------------------------- decode ---
 def kv_cache_init(batch: int, max_seq: int, n_kv: int, head_dim: int, dtype,
                   bits: int = 16) -> dict:

@@ -9,9 +9,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 
 from . import mamba as mb
-from .attention import attn_apply, attn_decode, attn_init
+from .attention import attn_apply, attn_decode, attn_init, attn_prefill
 from .common import mlp_apply, mlp_init, rmsnorm, rmsnorm_init, split_keys
-from .mla import mla_apply, mla_decode, mla_init
+from .mla import mla_apply, mla_decode, mla_init, mla_prefill
 from .moe import moe_apply, moe_init
 
 
@@ -36,6 +36,17 @@ def dense_block_apply(p, x, cfg: ModelConfig, causal: bool = True):
     )
     x = x + h
     return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+
+
+def dense_block_prefill(p, x, cache, cfg: ModelConfig):
+    """Single-pass prefill: full-seq attention that also fills the KV cache."""
+    h, cache = attn_prefill(
+        p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cache,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, kv_chunk=cfg.kv_chunk,
+    )
+    x = x + h
+    return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps)), cache
 
 
 def dense_block_decode(p, x, cache, pos, cfg: ModelConfig):
@@ -78,6 +89,20 @@ def moe_block_apply(p, x, cfg: ModelConfig):
     return x + y, aux
 
 
+def moe_block_prefill(p, x, cache, cfg: ModelConfig):
+    xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        h, cache = mla_prefill(p["attn"], xin, cache, n_heads=cfg.n_heads,
+                               m=cfg.mla, rope_theta=cfg.rope_theta)
+    else:
+        h, cache = attn_prefill(p["attn"], xin, cache, n_heads=cfg.n_heads,
+                                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                                rope_theta=cfg.rope_theta, kv_chunk=cfg.kv_chunk)
+    x = x + h
+    y, _ = moe_apply(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.moe)
+    return x + y, cache
+
+
 def moe_block_decode(p, x, cache, pos, cfg: ModelConfig):
     xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.mla:
@@ -102,6 +127,12 @@ def ssm_block_init(key, cfg: ModelConfig, dtype) -> dict:
 def ssm_block_apply(p, x, cfg: ModelConfig):
     f = mb.mamba1_apply if cfg.ssm.version == 1 else mb.mamba2_apply
     return x + f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cfg.ssm)
+
+
+def ssm_block_prefill(p, x, cache, cfg: ModelConfig):
+    f = mb.mamba1_prefill if cfg.ssm.version == 1 else mb.mamba2_prefill
+    y, cache = f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cache, cfg.ssm)
+    return x + y, cache
 
 
 def ssm_block_decode(p, x, cache, cfg: ModelConfig):

@@ -1,6 +1,7 @@
 """Shared functional building blocks: init, norms, RoPE, PIM-aware linear."""
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -20,15 +21,74 @@ def split_keys(key, n):
 
 
 # ------------------------------------------------------------ PIM linear ----
+# Decode-shaped (M <= MATVEC_MAX_M rows) quantized matmuls can route through
+# the epilogue-fused kernels.pim_matvec instead of the XLA overlay path:
+#   "auto"  — dispatch only on real TPU (compiled Mosaic; CPU interpret mode
+#             is orders of magnitude slower than XLA, so never auto on CPU)
+#   "force" — dispatch everywhere (interpret mode off-TPU; used by tests)
+#   "off"   — always use the XLA overlay path
+MATVEC_MAX_M = 8
+_MATVEC_DISPATCH = "auto"
+
+
+def set_matvec_dispatch(mode: str) -> str:
+    """Set the pim_matvec dispatch mode; returns the previous mode.
+
+    The mode is read at trace time, so cached jitted programs would keep
+    their baked-in path — clear the jit caches on a mode change so the next
+    call re-traces under the new mode."""
+    global _MATVEC_DISPATCH
+    if mode not in ("auto", "off", "force"):
+        raise ValueError(f"matvec dispatch must be auto|off|force, got {mode!r}")
+    prev, _MATVEC_DISPATCH = _MATVEC_DISPATCH, mode
+    if prev != mode:
+        jax.clear_caches()
+    return prev
+
+
+def _matvec_enabled() -> bool:
+    if _MATVEC_DISPATCH == "off":
+        return False
+    if _MATVEC_DISPATCH == "force":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _linear_matvec(x: jnp.ndarray, w: dict, b) -> jnp.ndarray:
+    """Route a decode-shaped quantized linear through kernels.pim_matvec
+    (bias fused into the kernel epilogue — no HBM round-trip)."""
+    from repro.kernels.ops import _interpret
+    from repro.kernels.pim_matvec import pim_matvec
+
+    bits = 4 if ("nibbles" in w or "nibbles_odd" in w) else 8
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if "nibbles_odd" in w:
+        # The packed weight carries one zero pad row (odd true K); a zero
+        # activation column keeps the contraction aligned and contributes 0.
+        x2 = jnp.pad(x2, ((0, 0), (0, 1)))
+    n = w["codes"].shape[-1]
+    y = pim_matvec(
+        x2, w["codes"], w["scale"].reshape(1, n),
+        bits=bits, bias=b, interpret=_interpret(),
+    )
+    return y.reshape(lead + (n,)).astype(x.dtype)
+
+
 def linear(x: jnp.ndarray, w, b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Matmul against a dense weight or a PIM-quantized leaf.
 
     A PIM leaf is ``{"codes": int8 (..., K, N), "scale": f32}`` produced by
     ``serving.quantize_tree``; the dequant happens at the matmul operand (XLA
-    fuses it into the producing fusion — the 'overlay' path).  On real TPU,
-    hot layers route through kernels.pim_dense (the 'overhaul' path) instead.
+    fuses it into the producing fusion — the 'overlay' path).  Decode-shaped
+    calls (<= MATVEC_MAX_M activation rows, 2-D weight) route through the
+    epilogue-fused kernels.pim_matvec (the 'overhaul' path) when the
+    dispatch mode allows it — see ``set_matvec_dispatch``.
     """
     if isinstance(w, dict) and "codes" in w:
+        if (w["codes"].ndim == 2 and _matvec_enabled()
+                and math.prod(x.shape[:-1]) <= MATVEC_MAX_M):
+            return _linear_matvec(x, w, b)
         y = x @ dq(w, x.dtype)
     else:
         y = x @ w
@@ -48,6 +108,8 @@ def weight_shape(w) -> tuple:
         s = w["codes"].shape
         if "nibbles" in w:  # int4: two K rows per byte
             return s[:-2] + (2 * s[-2], s[-1])
+        if "nibbles_odd" in w:  # int4, odd true K: last byte's high nibble is pad
+            return s[:-2] + (2 * s[-2] - 1, s[-1])
         return s
     return w.shape
 
@@ -56,16 +118,21 @@ def dq(w, dtype=None) -> jnp.ndarray:
     """Densify a weight leaf (dequantize PIM codes) for matmul/einsum use.
 
     Handles nibble-packed int4 ('nibbles' marker): two K rows per byte,
-    unpacked with sign extension at the compute boundary.
+    unpacked with sign extension at the compute boundary.  The
+    'nibbles_odd' marker flags an odd true K — the zero pad row added by
+    ``serving.quantize_tree`` before packing is dropped after unpack (a
+    static slice, so this stays scan/jit-safe).
     """
     if isinstance(w, dict) and "codes" in w:
         codes = w["codes"]
-        if "nibbles" in w:
+        if "nibbles" in w or "nibbles_odd" in w:
             lo = ((codes & 0xF) ^ 8) - 8
             hi = (((codes >> 4) & 0xF) ^ 8) - 8
             k2 = codes.shape[-2]
             stacked = jnp.stack([lo, hi], axis=-2)  # (..., K//2, 2, N)
             codes = stacked.reshape(codes.shape[:-2] + (2 * k2, codes.shape[-1]))
+            if "nibbles_odd" in w:
+                codes = codes[..., :-1, :]
         out = codes.astype(w["scale"].dtype) * w["scale"]
         return out.astype(dtype) if dtype is not None else out
     return w.astype(dtype) if dtype is not None else w

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 
 from . import blocks as bk
-from .attention import attn_apply, attn_decode, attn_init, kv_cache_init
+from .attention import attn_apply, attn_decode, attn_init, attn_prefill, kv_cache_init
 from .common import (
     cross_entropy,
     dtype_of,
@@ -237,6 +237,114 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict):
     loss = ce + aux.get("aux_total", 0.0)
     metrics = {"loss": loss, "ce": ce, **{k: v for k, v in aux.items()}}
     return loss, metrics
+
+
+# -------------------------------------------------------------- prefill -----
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S)
+    cache: dict,
+    extras: Optional[dict] = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Single-pass prefill: lowers the full-sequence forward ONCE over the
+    whole prompt while filling the decode cache for all S positions.
+
+    Replaces S sequential ``decode_step`` calls (the seed hot path): one XLA
+    program instead of S Python dispatches, and the prompt's weight reads are
+    amortised over S tokens — prefill runs compute-bound while decode stays
+    in the paper's memory-bound regime.  ``cache`` must be fresh from
+    ``init_cache`` (positions 0..S-1 empty).  Returns (logits (B,S,V), cache).
+    """
+    extras = extras or {}
+    fam = cfg.family
+    x = embed_lookup(params["embed"], tokens)
+    new_cache = dict(cache)
+
+    if fam == "dense":
+        x, cs = _scan_cached(
+            params["layers"], cache["layers"], x,
+            lambda lp, h, c: bk.dense_block_prefill(lp, h, c, cfg),
+        )
+        new_cache["layers"] = cs
+    elif fam == "moe":
+        if params.get("dense_layers") is not None:
+            x, cs = _scan_cached(
+                params["dense_layers"], cache["dense_layers"], x,
+                lambda lp, h, c: bk.dense_block_prefill(lp, h, c, cfg),
+            )
+            new_cache["dense_layers"] = cs
+        x, cs = _scan_cached(
+            params["layers"], cache["layers"], x,
+            lambda lp, h, c: bk.moe_block_prefill(lp, h, c, cfg),
+        )
+        new_cache["layers"] = cs
+    elif fam == "ssm":
+        x, cs = _scan_cached(
+            params["layers"], cache["layers"], x,
+            lambda lp, h, c: bk.ssm_block_prefill(lp, h, c, cfg),
+        )
+        new_cache["layers"] = cs
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def f(h, xs):
+            gp, sc, ac = xs
+            h, ssm_new = _scan_cached(
+                gp, sc, h, lambda lp, hh, cc: bk.ssm_block_prefill(lp, hh, cc, cfg)
+            )
+            h, attn_new = bk.dense_block_prefill(shared, h, ac, cfg)
+            return h, (ssm_new, attn_new)
+
+        x, (ssm_cs, attn_cs) = jax.lax.scan(
+            f, x, (params["groups"], cache["groups_ssm"], cache["groups_attn"])
+        )
+        new_cache["groups_ssm"], new_cache["groups_attn"] = ssm_cs, attn_cs
+        if params.get("tail") is not None:
+            x, cs = _scan_cached(
+                params["tail"], cache["tail"], x,
+                lambda lp, h, c: bk.ssm_block_prefill(lp, h, c, cfg),
+            )
+            new_cache["tail"] = cs
+    elif fam == "vlm":
+        img = extras["image_embeds"].astype(x.dtype)
+
+        def f(h, xs):
+            gp, c = xs
+            h, cs = _scan_cached(
+                gp["self"], c, h,
+                lambda lp, hh, cc: bk.dense_block_prefill(lp, hh, cc, cfg),
+            )
+            h = bk.cross_block_apply(gp["cross"], h, img, cfg)
+            return h, cs
+
+        x, cs = jax.lax.scan(f, x, (params["groups"], cache["groups_self"]))
+        new_cache["groups_self"] = cs
+    elif fam == "encdec":
+        enc_out = extras["enc_out"].astype(x.dtype)
+
+        def dec_block_prefill(lp, h, c):
+            hh, c_new = attn_prefill(
+                lp["self"], rmsnorm(h, lp["ln1"], cfg.norm_eps), c,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta,
+            )
+            h = h + hh
+            hh = attn_apply(
+                lp["cross"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=0.0, causal=False, kv_input=enc_out,
+            )
+            h = h + hh
+            return h + mlp_apply(lp["mlp"], rmsnorm(h, lp["ln3"], cfg.norm_eps)), c_new
+
+        x, cs = _scan_cached(params["decoder"], cache["decoder"], x, dec_block_prefill)
+        new_cache["decoder"] = cs
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(x, params.get("head", params["embed"])), new_cache
 
 
 # --------------------------------------------------------------- decode -----

@@ -71,27 +71,46 @@ def _ssm_chunk_scan(dA, dBx, h0):
 
 def mamba1_apply(p: dict, x: jnp.ndarray, s: SSMConfig) -> jnp.ndarray:
     """Full-sequence Mamba1. x: (B, S, D)."""
+    d_in = weight_shape(p["dt_proj"])[1]
+    y, _ = mamba1_prefill(p, x, mamba1_cache_init(x.shape[0], d_in, s), s)
+    return y
+
+
+def mamba1_prefill(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
+    """Full-sequence Mamba1 that also returns the decode cache (final SSM
+    state + conv tail) — the single-pass prefill form. x: (B, S, D)."""
     b, seq, d = x.shape
     d_in = weight_shape(p["dt_proj"])[1]
     n = s.state_dim
     chunk = min(s.chunk, seq)
-    assert seq % chunk == 0, (seq, chunk)
+    pad = -seq % chunk
 
     xz = linear(x, p["in_proj"])
     xs, z = jnp.split(xz, 2, axis=-1)
-    xs, _ = _causal_conv(xs, p["conv_w"], None)
+    xs, conv_state = _causal_conv(xs, p["conv_w"], cache["conv"])
+    conv_state = conv_state.astype(cache["conv"].dtype)  # stable scan carry
     xs = jax.nn.silu(xs + p["conv_b"])
 
     A = -jnp.exp(p["A_log"])  # (d_in, N)
 
-    def chunk_body(h, xc):
+    # Zero-pad S to a chunk multiple (keeps the chunked scan for any prompt
+    # length, incl. primes).  Pad steps carry dt=0 via the mask, so dA=1 and
+    # dBx=0 — the state passes through them unchanged.
+    mask = jnp.ones((b, seq), jnp.float32)
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    seq_p = seq + pad
+
+    def chunk_body(h, xs_c):
         """h: (B, d_in, N); xc: (B, L, d_in) conv'd input chunk."""
+        xc, mc = xs_c
         dbc = linear(xc, p["x_proj"])
         dt_rank = weight_shape(p["dt_proj"])[0]
         dt = jax.nn.softplus(linear(dbc[..., :dt_rank], p["dt_proj"]) + p["dt_bias"].astype(jnp.float32))
         bmat = dbc[..., dt_rank : dt_rank + n].astype(jnp.float32)  # (B,L,N)
         cmat = dbc[..., dt_rank + n :].astype(jnp.float32)  # (B,L,N)
-        dtf = dt.astype(jnp.float32)  # (B,L,d_in)
+        dtf = dt.astype(jnp.float32) * mc[..., None]  # (B,L,d_in)
         dA = jnp.exp(dtf[..., None] * A)  # (B,L,d_in,N)
         dBx = (dtf * xc.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
         hs, h_last = _ssm_chunk_scan(dA, dBx, h)
@@ -99,12 +118,12 @@ def mamba1_apply(p: dict, x: jnp.ndarray, s: SSMConfig) -> jnp.ndarray:
         y = y + p["D"] * xc.astype(jnp.float32)
         return h_last, y.astype(x.dtype)
 
-    xs_c = xs.reshape(b, seq // chunk, chunk, d_in).transpose(1, 0, 2, 3)
-    h0 = jnp.zeros((b, d_in, n), jnp.float32)
-    _, ys = jax.lax.scan(chunk_body, h0, xs_c)
-    y = ys.transpose(1, 0, 2, 3).reshape(b, seq, d_in)
+    xs_c = xs.reshape(b, seq_p // chunk, chunk, d_in).transpose(1, 0, 2, 3)
+    m_c = mask.reshape(b, seq_p // chunk, chunk).transpose(1, 0, 2)
+    h_last, ys = jax.lax.scan(chunk_body, cache["h"], (xs_c, m_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, seq_p, d_in)[:, :seq]
     y = y * jax.nn.silu(z)
-    return linear(y, p["out_proj"])
+    return linear(y, p["out_proj"]), {"h": h_last, "conv": conv_state}
 
 
 def mamba1_cache_init(batch: int, d_in: int, s: SSMConfig) -> dict:
@@ -134,7 +153,8 @@ def mamba1_decode(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
     h = cache["h"] * dA + dBx
     y = jnp.einsum("bcn,bn->bc", h, cmat[:, 0]) + p["D"] * xs[:, 0].astype(jnp.float32)
     y = y[:, None, :].astype(x.dtype) * jax.nn.silu(z)
-    return linear(y, p["out_proj"]), {"h": h, "conv": conv_state}
+    return linear(y, p["out_proj"]), {
+        "h": h, "conv": conv_state.astype(cache["conv"].dtype)}
 
 
 # ---------------------------------------------------------------- Mamba 2 ---
@@ -181,19 +201,28 @@ def _ssd_chunk(xh, bmat, cmat, dt_a, h0):
 
 def mamba2_apply(p: dict, x: jnp.ndarray, s: SSMConfig) -> jnp.ndarray:
     """Full-sequence Mamba2 (SSD). x: (B, S, D)."""
+    d_in = weight_shape(p["out_proj"])[0]
+    y, _ = mamba2_prefill(p, x, mamba2_cache_init(x.shape[0], d_in, s), s)
+    return y
+
+
+def mamba2_prefill(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
+    """Full-sequence SSD that also returns the decode cache (final state +
+    conv tail) — the single-pass prefill form. x: (B, S, D)."""
     b, seq, d = x.shape
     d_in = weight_shape(p["out_proj"])[0]
     nh = p["A_log"].shape[0]
     hd = d_in // nh
     n = s.state_dim
     chunk = min(s.chunk, seq)
-    assert seq % chunk == 0
+    pad = -seq % chunk
 
     zxbcdt = linear(x, p["in_proj"])
     z = zxbcdt[..., :d_in]
     xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
     dt_raw = zxbcdt[..., 2 * d_in + 2 * n :]  # (B,S,nh)
-    xbc, _ = _causal_conv(xbc, p["conv_w"], None)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], cache["conv"])
+    conv_state = conv_state.astype(cache["conv"].dtype)  # stable scan carry
     xbc = jax.nn.silu(xbc + p["conv_b"])
     xs, bmat, cmat = (
         xbc[..., :d_in],
@@ -205,23 +234,34 @@ def mamba2_apply(p: dict, x: jnp.ndarray, s: SSMConfig) -> jnp.ndarray:
     dt_a = dt * a  # (B,S,nh), negative
 
     xh = xs.reshape(b, seq, nh, hd).astype(jnp.float32)
-    n_chunks = seq // chunk
+
+    # Zero-pad S to a chunk multiple (keeps the chunked SSD path for any
+    # prompt length).  Pad steps have dt_a=0 (decay exp(0)=1) and xh=0 (no
+    # state contribution), so the carried state passes through unchanged.
+    if pad:
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt_a = jnp.pad(dt_a, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xh_p = xh
+    seq_p = seq + pad
+    n_chunks = seq_p // chunk
 
     def body(h, xs_c):
         xh_c, b_c, c_c, dta_c = xs_c
         y, h_last = _ssd_chunk(xh_c, b_c, c_c, dta_c, h)
         return h_last, y
 
-    xh_cs = xh.reshape(b, n_chunks, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+    xh_cs = xh_p.reshape(b, n_chunks, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
     b_cs = bmat.reshape(b, n_chunks, chunk, n).transpose(1, 0, 2, 3)
     c_cs = cmat.reshape(b, n_chunks, chunk, n).transpose(1, 0, 2, 3)
     dta_cs = dt_a.reshape(b, n_chunks, chunk, nh).transpose(1, 0, 2, 3)
-    h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
-    _, ys = jax.lax.scan(body, h0, (xh_cs, b_cs, c_cs, dta_cs))
-    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, seq, nh, hd)
+    h_last, ys = jax.lax.scan(body, cache["h"], (xh_cs, b_cs, c_cs, dta_cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, seq_p, nh, hd)[:, :seq]
     y = y + p["D"][:, None] * xh
     y = y.reshape(b, seq, d_in).astype(x.dtype) * jax.nn.silu(z)
-    return linear(y, p["out_proj"])
+    return linear(y, p["out_proj"]), {"h": h_last, "conv": conv_state}
 
 
 def mamba2_cache_init(batch: int, d_in: int, s: SSMConfig) -> dict:
@@ -258,4 +298,5 @@ def mamba2_decode(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
     h = cache["h"] * decay[..., None, None] + dbx
     y = jnp.einsum("bhpn,bn->bhp", h, cmat[:, 0]) + p["D"][:, None] * xh
     y = y.reshape(b, 1, d_in).astype(x.dtype) * jax.nn.silu(z)
-    return linear(y, p["out_proj"]), {"h": h, "conv": conv_state}
+    return linear(y, p["out_proj"]), {
+        "h": h, "conv": conv_state.astype(cache["conv"].dtype)}

@@ -29,7 +29,22 @@ def mla_init(key, d: int, n_heads: int, m: MLAConfig, dtype) -> dict:
 
 
 def mla_apply(p, x, *, n_heads: int, m: MLAConfig, rope_theta: float) -> jnp.ndarray:
-    """Training/prefill: expand the latent into per-head K/V."""
+    """Training/prefill: expand the latent into per-head K/V.
+
+    Delegates to ``mla_prefill`` with a throwaway zero cache — the unused
+    cache writes are dead code XLA eliminates, so apply and prefill can
+    never drift numerically."""
+    b, s, _ = x.shape
+    cache = mla_cache_init(b, s, m, x.dtype)
+    y, _ = mla_prefill(p, x, cache, n_heads=n_heads, m=m, rope_theta=rope_theta)
+    return y
+
+
+# ---------------------------------------------------------------- prefill ---
+def mla_prefill(p, x, cache, *, n_heads: int, m: MLAConfig, rope_theta: float):
+    """Single-pass prefill: full-sequence MLA that also fills the latent
+    cache for all S prompt positions at once (rope-applied ``kr``, raw ``c``
+    — the exact storage ``mla_decode`` reads back)."""
     b, s, _ = x.shape
     qh = m.qk_nope_dim + m.qk_rope_dim
     q = linear(x, p["wq"]).reshape(b, s, n_heads, qh)
@@ -39,6 +54,13 @@ def mla_apply(p, x, *, n_heads: int, m: MLAConfig, rope_theta: float) -> jnp.nda
     pos = jnp.arange(s)
     q_rope = apply_rope(q_rope, pos, rope_theta)
     k_rope = apply_rope(k_rope[:, :, None, :], pos, rope_theta)  # (B,S,1,rope)
+
+    new_cache = {
+        "c": jax.lax.dynamic_update_slice(
+            cache["c"], c.astype(cache["c"].dtype), (0, 0, 0)),
+        "kr": jax.lax.dynamic_update_slice(
+            cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype), (0, 0, 0)),
+    }
 
     k_nope = jnp.einsum("bsc,hcd->bshd", c, dq(p["w_uk"], c.dtype))
     v = jnp.einsum("bsc,hcd->bshd", c, dq(p["w_uv"], c.dtype))
@@ -53,7 +75,7 @@ def mla_apply(p, x, *, n_heads: int, m: MLAConfig, rope_theta: float) -> jnp.nda
     scores = jnp.where(qi >= ki, scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     o = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, s, -1)
-    return linear(o, p["wo"])
+    return linear(o, p["wo"]), new_cache
 
 
 # ----------------------------------------------------------------- decode ---

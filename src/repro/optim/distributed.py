@@ -46,8 +46,11 @@ def compressed_psum_mean(grads, mesh, axis: str = "data"):
 
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     specs = tuple(P(*((None,) * l.ndim)) for l in leaves)
+    # check_rep=False: jax 0.4.37's static replication checker cannot see
+    # through the integer-psum + gathered-scale reconstruction; the outputs
+    # ARE replicated (each shard computes the same weighted sum).
     out = shard_map(
-        body, mesh=mesh, in_specs=(specs,), out_specs=specs,
+        body, mesh=mesh, in_specs=(specs,), out_specs=specs, check_rep=False,
     )(leaves)
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -86,6 +89,7 @@ def dp_train_step_factory(loss_fn, mesh, axis: str = "data"):
             per_shard, mesh=mesh,
             in_specs=(pspec, bspec, rspec),
             out_specs=(pspec, rspec, P()),
+            check_rep=False,
         )(params, batch, residual)
 
     return step

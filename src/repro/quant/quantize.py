@@ -48,8 +48,14 @@ def dequantize(q: QuantizedTensor) -> jnp.ndarray:
 def pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
     """Pack int4 codes pairwise along axis 0: (K, ...) int8 -> (K//2, ...) int8.
 
-    Row 2i goes to the low nibble, row 2i+1 to the high nibble.
+    Row 2i goes to the low nibble, row 2i+1 to the high nibble.  K must be
+    even — callers with an odd K pad one zero-code row first (that is what
+    ``serving.quantize_tree`` does, flagging it with ``nibbles_odd``).
     """
+    if codes.shape[0] % 2:
+        raise ValueError(
+            f"pack_int4 requires an even K, got K={codes.shape[0]}; "
+            "pad one zero code row (see serving.quantize_tree)")
     lo = codes[0::2] & 0xF
     hi = codes[1::2] & 0xF
     return (lo | (hi << 4)).astype(jnp.int8)

@@ -1,4 +1,4 @@
-"""Batched serving with PIM-quantized weights.
+"""Batched serving with PIM-quantized weights — the decode fast path.
 
 ``quantize_tree`` converts a trained parameter tree into PIM-mode storage:
 every large matmul weight becomes ``{"codes": int8, "scale": f32}`` — the
@@ -7,16 +7,25 @@ weight HBM traffic 2x vs bf16 / 4x vs f32 at decode time, which is the
 memory-bound regime the paper targets (§I: MLP/RNN inference dominated by
 memory).  Per-arch quantized-vs-dense logit agreement is tested in
 tests/test_serving.py.
+
+``ServingEngine.generate`` is ONE lowered XLA program: a single-pass prefill
+over the whole prompt (``models.prefill``) followed by a ``lax.scan`` over
+the decode steps.  The seed engine re-entered Python once per token for both
+phases; per Gómez-Luna et al.'s UPMEM study (PAPERS.md), that host-side
+dispatch overhead is exactly what erases PIM's memory-bandwidth win.  The
+seed loop survives as ``generate_reference`` — the parity oracle and the
+benchmark baseline (benchmarks/decode_bench.py).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, forward, init_cache
+from repro.models import decode_step, init_cache, prefill
 from repro.quant import quantize_symmetric
 
 # Leaves that stay dense: norms/gains/biases/scalars, router (accuracy-
@@ -44,19 +53,28 @@ def quantize_tree(params, bits: int = 8):
 
     bits=4 packs two codes per byte along the K (contraction) dim — the
     storage actually shipped to HBM; ``models.common.linear``/``dq`` unpack
-    at the matmul (the 'nibbles' marker leaf flags the packing)."""
+    at the matmul.  An odd K is zero-padded by one code row before packing
+    and flagged with the ``nibbles_odd`` marker key so ``dq``/``weight_shape``
+    drop the pad row statically (the seed silently fell back to INT8 storage
+    for odd K).  The marker leaf ("nibbles" / "nibbles_odd") carries any
+    leading stack dims so ``lax.scan`` can slice it."""
 
     def conv(path, leaf):
         if not _should_quantize(path, leaf):
             return leaf
         q = quantize_symmetric(leaf.astype(jnp.float32), bits=bits, axis=-2)
-        if bits == 4 and q.codes.shape[-2] % 2 == 0:
-            lo = q.codes[..., 0::2, :] & 0xF
-            hi = q.codes[..., 1::2, :] & 0xF
+        if bits == 4:
+            codes = q.codes
+            odd = codes.shape[-2] % 2
+            if odd:
+                codes = jnp.concatenate(
+                    [codes, jnp.zeros_like(codes[..., :1, :])], axis=-2)
+            lo = codes[..., 0::2, :] & 0xF
+            hi = codes[..., 1::2, :] & 0xF
             packed = (lo | (hi << 4)).astype(jnp.int8)
-            # marker carries any leading stack dims so lax.scan can slice it
+            marker = "nibbles_odd" if odd else "nibbles"
             return {"codes": packed, "scale": q.scale,
-                    "nibbles": jnp.zeros(packed.shape[:-2], jnp.int8)}
+                    marker: jnp.zeros(packed.shape[:-2], jnp.int8)}
         return {"codes": q.codes, "scale": q.scale}
 
     return jax.tree_util.tree_map_with_path(conv, params)
@@ -72,7 +90,7 @@ def pim_bytes(params) -> int:
 
 def prefill_cache(params, cfg: ModelConfig, tokens, cache, extras: Optional[dict] = None):
     """Sequential prefill via decode steps (reference path; the production
-    prefill lowers forward() once over the whole prompt)."""
+    prefill is ``models.prefill`` — one lowered program over the prompt)."""
     pos = 0
     for i in range(tokens.shape[1]):
         _, cache = decode_step(params, cfg, tokens[:, i : i + 1], cache,
@@ -81,8 +99,55 @@ def prefill_cache(params, cfg: ModelConfig, tokens, cache, extras: Optional[dict
     return cache, pos
 
 
+# ---------------------------------------------------------------- sampling --
+def sample_logits(logits, key, *, greedy: bool, temperature, top_k: int):
+    """logits (..., V) -> int32 token ids (...): greedy argmax or
+    temperature/top-k categorical sampling."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / jnp.maximum(
+        jnp.asarray(temperature, jnp.float32), 1e-6)
+    top_k = min(top_k, lg.shape[-1])  # top_k >= vocab is plain sampling
+    if top_k:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "n_new", "max_seq", "greedy", "top_k")
+)
+def _generate_scan(params, cfg: ModelConfig, prompt, extras, key, temperature,
+                   *, n_new: int, max_seq: int, greedy: bool, top_k: int):
+    """The whole generation — prefill + n_new decode steps + sampling — as a
+    single XLA program (zero per-token Python dispatch)."""
+    b, s = prompt.shape
+    if n_new == 0:
+        return jnp.zeros((b, 0), jnp.int32)
+    cache = init_cache(cfg, b, max_seq)
+    logits, cache = prefill(params, cfg, prompt, cache, extras)
+    key, k0 = jax.random.split(key)
+    tok0 = sample_logits(logits[:, -1, :], k0, greedy=greedy,
+                         temperature=temperature, top_k=top_k)[:, None]
+
+    # Emit AFTER stepping: n_new-1 scan iterations produce tok1..tok_{n-1}
+    # (tok0 comes from the prefill logits), so no decode step's output is
+    # ever discarded.
+    def body(carry, i):
+        tok, cache, key = carry
+        lg, cache = decode_step(params, cfg, tok, cache, jnp.int32(s) + i, extras)
+        key, sub = jax.random.split(key)
+        nxt = sample_logits(lg[:, -1, :], sub, greedy=greedy,
+                            temperature=temperature, top_k=top_k)[:, None]
+        return (nxt, cache, key), nxt[:, 0]
+
+    _, toks = jax.lax.scan(body, (tok0, cache, key),
+                           jnp.arange(n_new - 1, dtype=jnp.int32))
+    return jnp.concatenate([tok0, toks.T], axis=1)  # (B, n_new)
+
+
 class ServingEngine:
-    """Minimal batched engine: prefill once, then step the whole batch."""
+    """Batched engine: single-pass prefill, then a scan-compiled decode loop."""
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int, pim_bits: int = 0):
         self.cfg = cfg
@@ -90,7 +155,38 @@ class ServingEngine:
         self.max_seq = max_seq
 
     def generate(self, prompt_tokens, n_new: int, extras: Optional[dict] = None,
-                 greedy: bool = True):
+                 greedy: bool = True, temperature: float = 1.0, top_k: int = 0,
+                 key=None):
+        """Generate ``n_new`` tokens for the whole batch in one XLA program.
+
+        greedy=True reproduces the seed engine's argmax decoding; for
+        dense/SSM/hybrid families the tokens are bit-identical to
+        ``generate_reference`` (tests/test_decode_fastpath.py).  MLA archs
+        use the absorbed decode form, whose float-association order differs
+        from the expanded prefill by ~1e-3 logit units — argmax can flip at
+        near-ties (only observable on untrained models, where top-2 margins
+        are that small).  greedy=False samples with ``temperature`` and
+        optional ``top_k`` filtering, driven by ``key`` (defaults to
+        PRNGKey(0) for reproducibility)."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        s = prompt_tokens.shape[1]
+        if s + n_new > self.max_seq:
+            raise ValueError(
+                f"prompt ({s}) + n_new ({n_new}) exceeds max_seq "
+                f"({self.max_seq}); cache writes past max_seq would "
+                "silently clamp")
+        return _generate_scan(
+            self.params, self.cfg, prompt_tokens, extras, key,
+            jnp.float32(temperature), n_new=int(n_new), max_seq=self.max_seq,
+            greedy=bool(greedy), top_k=int(top_k),
+        )
+
+    def generate_reference(self, prompt_tokens, n_new: int,
+                           extras: Optional[dict] = None):
+        """The seed per-token loop: one Python dispatch per prompt AND per
+        generated token.  Kept as the parity oracle for the scan-compiled
+        path and as the dispatch-bound baseline in decode_bench."""
         cfg = self.cfg
         b, s = prompt_tokens.shape
         cache = init_cache(cfg, b, self.max_seq)
@@ -98,7 +194,6 @@ class ServingEngine:
         step_fn = jax.jit(
             lambda p, t, c, pos: decode_step(p, cfg, t, c, pos, extras)
         )
-        # Prefill by stepping the prompt (keeps one lowered program).
         logits = None
         for i in range(s):
             logits, cache = step_fn(self.params, prompt_tokens[:, i : i + 1],

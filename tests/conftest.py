@@ -2,14 +2,70 @@
 
 NOTE: do NOT set XLA_FLAGS/device-count here — smoke tests and benches must
 see the single real CPU device; only launch/dryrun.py forces 512 host devices.
-"""
-from hypothesis import HealthCheck, settings
 
-# JIT compilation makes first examples slow; wall-clock deadlines are noise.
-settings.register_profile(
-    "repro",
-    deadline=None,
-    max_examples=25,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("repro")
+``hypothesis`` is an optional dev dependency (see requirements-dev.txt).
+When it is absent we install a minimal stub module so test files that do
+``from hypothesis import given, settings, strategies as st`` still collect;
+every ``@given``-decorated test is then skipped instead of erroring.
+"""
+import sys
+import types
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    # JIT compilation makes first examples slow; wall-clock deadlines are noise.
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("repro")
+except ModuleNotFoundError:  # pragma: no cover - exercised only without dev deps
+
+    class _Strategy:
+        """Inert strategy: supports the combinators our tests use."""
+
+        def map(self, fn):
+            return self
+
+        def filter(self, fn):
+            return self
+
+    def _strategy(*args, **kwargs):
+        return _Strategy()
+
+    def _given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def _settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    _settings.register_profile = lambda *a, **k: None
+    _settings.load_profile = lambda *a, **k: None
+
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                  "tuples", "just", "one_of", "text", "composite"):
+        setattr(_st, _name, _strategy)
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None
+    )
+    _hyp.assume = lambda *a, **k: True
+    _hyp.__stub__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

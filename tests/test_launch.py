@@ -47,14 +47,13 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, sys
 import jax
-from jax.sharding import AxisType
 from repro.configs import get_reduced
 from repro.configs.base import ShapeConfig
+from repro.launch.mesh import _axis_kwargs
 from repro.launch.steps import lower_cell
 from repro.launch.roofline import analyze
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"), **_axis_kwargs(2))
 out = []
 for arch in sys.argv[1].split(","):
     cfg = get_reduced(arch)
