@@ -4,12 +4,14 @@ from .lm import (
     encode,
     forward,
     init_cache,
+    init_paged_cache,
     init_params,
     loss_fn,
+    paged_insert,
     prefill,
 )
 
 __all__ = [
     "init_params", "forward", "loss_fn", "init_cache", "decode_step",
-    "encode", "prefill",
+    "encode", "prefill", "init_paged_cache", "paged_insert",
 ]

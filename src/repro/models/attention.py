@@ -248,6 +248,132 @@ def _quant_kv(x):
     return codes, scale
 
 
+# ------------------------------------------------------------ paged cache ---
+def paged_kv_cache_init(num_pages: int, page_size: int, n_kv: int,
+                        head_dim: int, dtype, bits: int = 16) -> dict:
+    """Page-pool KV storage: ``(P, KV, page_size, D)`` instead of the dense
+    ``(B, KV, max_seq, D)``.  Page ``i`` of a slot's block table covers that
+    slot's positions ``[i*page_size, (i+1)*page_size)``; the pool is shared
+    across batch slots, so cache memory scales with live tokens (pages in
+    use), not ``B * max_seq``.  Page 0 is reserved as the trash page for
+    inactive slots."""
+    if bits == 8:
+        return {
+            "k": jnp.zeros((num_pages, n_kv, page_size, head_dim), jnp.int8),
+            "v": jnp.zeros((num_pages, n_kv, page_size, head_dim), jnp.int8),
+            "k_scale": jnp.zeros((num_pages, n_kv, page_size), jnp.float32),
+            "v_scale": jnp.zeros((num_pages, n_kv, page_size), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((num_pages, n_kv, page_size, head_dim), dtype),
+        "v": jnp.zeros((num_pages, n_kv, page_size, head_dim), dtype),
+    }
+
+
+def paged_kv_insert(pool: dict, dense: dict, pages: jnp.ndarray,
+                    lead: int = 0) -> dict:
+    """Scatter a batch-1 dense cache (filled by ``attn_prefill``) into pool
+    pages ``pages`` (n,).  ``lead`` counts leading stack dims (layer/group
+    axes) shared by both trees; the dense seq length must be
+    ``n * page_size``."""
+    idx = (slice(None),) * lead
+    n = pages.shape[0]
+    ps = pool["k"].shape[lead + 2]
+    out = {}
+    for key in ("k", "v"):
+        d = dense[key][idx + (0,)]  # lead + (KV, n*ps, D)
+        kv, dd = d.shape[lead], d.shape[-1]
+        d = d.reshape(d.shape[:lead] + (kv, n, ps, dd))
+        d = jnp.moveaxis(d, lead + 1, lead)  # lead + (n, KV, ps, D)
+        out[key] = pool[key].at[idx + (pages,)].set(d.astype(pool[key].dtype))
+    for key in ("k_scale", "v_scale"):
+        if key in pool:
+            d = dense[key][idx + (0,)]  # lead + (KV, n*ps)
+            kv = d.shape[lead]
+            d = d.reshape(d.shape[:lead] + (kv, n, ps))
+            d = jnp.moveaxis(d, lead + 1, lead)
+            out[key] = pool[key].at[idx + (pages,)].set(d)
+    return out
+
+
+def attn_decode_paged(
+    p: dict,
+    x: jnp.ndarray,  # (B, 1, D)
+    cache: dict,  # paged pool leaves, see paged_kv_cache_init
+    block_tables: jnp.ndarray,  # (B, W) int32 page ids
+    pos: jnp.ndarray,  # (B,) int32 per-slot lengths
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 0.0,
+    page_size: int,
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step against the paged KV pool: scatter the new token's
+    K/V into its slot's current page, gather the slot's pages at the
+    contraction.  Per-slot ``pos`` makes every batch slot independent — the
+    carry the continuous-batching scheduler steps."""
+    b = x.shape[0]
+    ps = page_size
+    q = _split_heads(linear(x, p["wq"], p.get("bq")), n_heads, head_dim)
+    k = _split_heads(linear(x, p["wk"], p.get("bk")), n_kv, head_dim)
+    v = _split_heads(linear(x, p["wv"], p.get("bv")), n_kv, head_dim)
+    if rope_theta:
+        pvec = pos[:, None]  # (B, 1)
+        q = apply_rope(q, pvec, rope_theta)
+        k = apply_rope(k, pvec, rope_theta)
+    k_t = k.transpose(0, 2, 1, 3)  # (B, KV, 1, D)
+    v_t = v.transpose(0, 2, 1, 3)
+    page = jnp.take_along_axis(block_tables, (pos // ps)[:, None], axis=1)[:, 0]
+    off = pos % ps
+    quantized = "k_scale" in cache
+    new_cache = dict(cache)
+    if quantized:
+        k_codes, k_sc = _quant_kv(k_t)
+        v_codes, v_sc = _quant_kv(v_t)
+        new_cache["k"] = cache["k"].at[page, :, off, :].set(k_codes[:, :, 0, :])
+        new_cache["v"] = cache["v"].at[page, :, off, :].set(v_codes[:, :, 0, :])
+        new_cache["k_scale"] = cache["k_scale"].at[page, :, off].set(k_sc[:, :, 0])
+        new_cache["v_scale"] = cache["v_scale"].at[page, :, off].set(v_sc[:, :, 0])
+    else:
+        new_cache["k"] = cache["k"].at[page, :, off, :].set(
+            k_t[:, :, 0, :].astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[page, :, off, :].set(
+            v_t[:, :, 0, :].astype(cache["v"].dtype))
+    # Gather the slot's pages: (B, W, KV, ps, D) -> (B, KV, W*ps, D) — the
+    # same head-major layout the dense contraction reads, just assembled from
+    # the block table.  The gather is a transient; only the pool persists.
+    w_pages = block_tables.shape[1]
+    seq = w_pages * ps
+
+    def gather(pool):
+        g = pool[block_tables]  # (B, W, KV, ps, ...)
+        g = jnp.moveaxis(g, 1, 2)  # (B, KV, W, ps, ...)
+        return g.reshape((b, n_kv, seq) + g.shape[4:])
+
+    if quantized:
+        ck = gather(new_cache["k"]).astype(x.dtype) \
+            * gather(new_cache["k_scale"])[..., None].astype(x.dtype)
+        cv = gather(new_cache["v"]).astype(x.dtype) \
+            * gather(new_cache["v_scale"])[..., None].astype(x.dtype)
+    else:
+        ck = gather(new_cache["k"])
+        cv = gather(new_cache["v"])
+    g = n_heads // n_kv
+    qg = q.reshape(b, 1, n_kv, g, head_dim).astype(ck.dtype)
+    s = jnp.einsum("bqhgd,bhkd->bhgqk", qg, ck,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(head_dim)
+    valid = jnp.arange(seq)[None, None, None, None, :] \
+        <= pos[:, None, None, None, None]
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bqhgd", w.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
+    return linear(o, p["wo"]), new_cache
+
+
 def attn_decode(
     p: dict,
     x: jnp.ndarray,  # (B, 1, D)

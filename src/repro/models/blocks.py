@@ -9,9 +9,15 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 
 from . import mamba as mb
-from .attention import attn_apply, attn_decode, attn_init, attn_prefill
+from .attention import (
+    attn_apply,
+    attn_decode,
+    attn_decode_paged,
+    attn_init,
+    attn_prefill,
+)
 from .common import mlp_apply, mlp_init, rmsnorm, rmsnorm_init, split_keys
-from .mla import mla_apply, mla_decode, mla_init, mla_prefill
+from .mla import mla_apply, mla_decode, mla_decode_paged, mla_init, mla_prefill
 from .moe import moe_apply, moe_init
 
 
@@ -54,6 +60,17 @@ def dense_block_decode(p, x, cache, pos, cfg: ModelConfig):
         p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cache, pos,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
         rope_theta=cfg.rope_theta,
+    )
+    x = x + h
+    return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps)), cache
+
+
+def dense_block_decode_paged(p, x, cache, block_tables, pos, cfg: ModelConfig,
+                             page_size: int):
+    h, cache = attn_decode_paged(
+        p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cache, block_tables,
+        pos, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, page_size=page_size,
     )
     x = x + h
     return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps)), cache
@@ -117,6 +134,23 @@ def moe_block_decode(p, x, cache, pos, cfg: ModelConfig):
     return x + y, cache
 
 
+def moe_block_decode_paged(p, x, cache, block_tables, pos, cfg: ModelConfig,
+                           page_size: int):
+    xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        h, cache = mla_decode_paged(
+            p["attn"], xin, cache, block_tables, pos, n_heads=cfg.n_heads,
+            m=cfg.mla, rope_theta=cfg.rope_theta, page_size=page_size)
+    else:
+        h, cache = attn_decode_paged(
+            p["attn"], xin, cache, block_tables, pos, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, page_size=page_size)
+    x = x + h
+    y, _ = moe_apply(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.moe)
+    return x + y, cache
+
+
 # -------------------------------------------------------------- SSM block ---
 def ssm_block_init(key, cfg: ModelConfig, dtype) -> dict:
     init = mb.mamba1_init if cfg.ssm.version == 1 else mb.mamba2_init
@@ -129,9 +163,10 @@ def ssm_block_apply(p, x, cfg: ModelConfig):
     return x + f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cfg.ssm)
 
 
-def ssm_block_prefill(p, x, cache, cfg: ModelConfig):
+def ssm_block_prefill(p, x, cache, cfg: ModelConfig, length=None):
     f = mb.mamba1_prefill if cfg.ssm.version == 1 else mb.mamba2_prefill
-    y, cache = f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cache, cfg.ssm)
+    y, cache = f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cache, cfg.ssm,
+                 length=length)
     return x + y, cache
 
 

@@ -24,7 +24,16 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 
 from . import blocks as bk
-from .attention import attn_apply, attn_decode, attn_init, attn_prefill, kv_cache_init
+from .attention import (
+    attn_apply,
+    attn_decode,
+    attn_decode_paged,
+    attn_init,
+    attn_prefill,
+    kv_cache_init,
+    paged_kv_cache_init,
+    paged_kv_insert,
+)
 from .common import (
     cross_entropy,
     dtype_of,
@@ -246,6 +255,7 @@ def prefill(
     tokens: jnp.ndarray,  # (B, S)
     cache: dict,
     extras: Optional[dict] = None,
+    length=None,  # scalar int32: true prompt length for right-padded prompts
 ) -> tuple[jnp.ndarray, dict]:
     """Single-pass prefill: lowers the full-sequence forward ONCE over the
     whole prompt while filling the decode cache for all S positions.
@@ -255,6 +265,12 @@ def prefill(
     amortised over S tokens — prefill runs compute-bound while decode stays
     in the paper's memory-bound regime.  ``cache`` must be fresh from
     ``init_cache`` (positions 0..S-1 empty).  Returns (logits (B,S,V), cache).
+
+    ``length`` supports right-padded prompts (the continuous-batching admit
+    path pads to a page multiple): causal attention already ignores trailing
+    pads for the valid positions' logits and their K/V rows are overwritten
+    or masked downstream, but SSM/conv state is sequential — ``length``
+    masks pad steps so the carried state equals an unpadded prefill.
     """
     extras = extras or {}
     fam = cfg.family
@@ -282,7 +298,7 @@ def prefill(
     elif fam == "ssm":
         x, cs = _scan_cached(
             params["layers"], cache["layers"], x,
-            lambda lp, h, c: bk.ssm_block_prefill(lp, h, c, cfg),
+            lambda lp, h, c: bk.ssm_block_prefill(lp, h, c, cfg, length=length),
         )
         new_cache["layers"] = cs
     elif fam == "hybrid":
@@ -291,7 +307,9 @@ def prefill(
         def f(h, xs):
             gp, sc, ac = xs
             h, ssm_new = _scan_cached(
-                gp, sc, h, lambda lp, hh, cc: bk.ssm_block_prefill(lp, hh, cc, cfg)
+                gp, sc, h,
+                lambda lp, hh, cc: bk.ssm_block_prefill(lp, hh, cc, cfg,
+                                                        length=length)
             )
             h, attn_new = bk.dense_block_prefill(shared, h, ac, cfg)
             return h, (ssm_new, attn_new)
@@ -303,7 +321,8 @@ def prefill(
         if params.get("tail") is not None:
             x, cs = _scan_cached(
                 params["tail"], cache["tail"], x,
-                lambda lp, h, c: bk.ssm_block_prefill(lp, h, c, cfg),
+                lambda lp, h, c: bk.ssm_block_prefill(lp, h, c, cfg,
+                                                      length=length),
             )
             new_cache["tail"] = cs
     elif fam == "vlm":
@@ -397,36 +416,170 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
     raise ValueError(fam)
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                     num_pages: int, page_size: int) -> dict:
+    """Paged decode cache: the attention/MLA sequence state lives in
+    per-layer page pools of ``num_pages`` pages of ``page_size`` tokens,
+    shared across the ``batch`` slots; SSM/conv state stays per-slot dense
+    (it is O(1) per slot — there is nothing to page).
+
+    ``block_tables`` (batch, ceil(max_seq/page_size)) maps each slot's
+    logical page i to a pool page id; ``decode_step`` dispatches to the
+    paged attention path whenever this key is present.  Page 0 is the trash
+    page for inactive slots, so usable capacity is ``num_pages - 1`` pages.
+    Structure mirrors ``init_cache`` family-by-family."""
+    if max_seq % page_size:
+        max_seq += page_size - max_seq % page_size
+    width = max_seq // page_size
+    dtype = dtype_of(cfg.param_dtype)
+    fam = cfg.family
+    bits = cfg.kv_cache_bits
+    out: dict[str, Any] = {
+        "block_tables": jnp.zeros((batch, width), jnp.int32)}
+    if fam == "dense":
+        c = paged_kv_cache_init(num_pages, page_size, cfg.n_kv_heads,
+                                cfg.head_dim, dtype, bits=bits)
+        out["layers"] = _stack_cache(c, cfg.n_layers)
+    elif fam == "moe":
+        if cfg.mla:
+            from .mla import mla_paged_cache_init
+
+            c = mla_paged_cache_init(num_pages, page_size, cfg.mla, dtype)
+        else:
+            c = paged_kv_cache_init(num_pages, page_size, cfg.n_kv_heads,
+                                    cfg.head_dim, dtype)
+        out["layers"] = _stack_cache(c, cfg.n_layers - cfg.n_dense_layers)
+        if cfg.n_dense_layers:
+            cd = paged_kv_cache_init(num_pages, page_size, cfg.n_kv_heads,
+                                     cfg.head_dim, dtype, bits=bits)
+            out["dense_layers"] = _stack_cache(cd, cfg.n_dense_layers)
+    elif fam == "ssm":
+        out["layers"] = _stack_cache(bk.ssm_cache_init(cfg, batch), cfg.n_layers)
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - g * cfg.attn_every
+        ssm_c = bk.ssm_cache_init(cfg, batch)
+        attn_c = paged_kv_cache_init(num_pages, page_size, cfg.n_kv_heads,
+                                     cfg.head_dim, dtype, bits=bits)
+        out["groups_ssm"] = _stack_cache(_stack_cache(ssm_c, cfg.attn_every), g)
+        out["groups_attn"] = _stack_cache(attn_c, g)
+        if tail:
+            out["tail"] = _stack_cache(ssm_c, tail)
+    elif fam == "vlm":
+        every = cfg.vision.cross_attn_every
+        g = cfg.n_layers // every
+        c = paged_kv_cache_init(num_pages, page_size, cfg.n_kv_heads,
+                                cfg.head_dim, dtype, bits=bits)
+        out["groups_self"] = _stack_cache(_stack_cache(c, every - 1), g)
+    elif fam == "encdec":
+        c = paged_kv_cache_init(num_pages, page_size, cfg.n_kv_heads,
+                                cfg.head_dim, dtype, bits=bits)
+        out["decoder"] = _stack_cache(c, cfg.dec_layers)
+    else:
+        raise ValueError(fam)
+    return out
+
+
+def _copy_slot(paged_tree, dense_tree, slot, lead: int):
+    """Copy a batch-1 dense state tree into per-slot state at ``slot``.
+    ``lead`` counts leading stack dims before the batch axis."""
+    idx = (slice(None),) * lead
+
+    def cp(pt, dt):
+        return pt.at[idx + (slot,)].set(dt[idx + (0,)].astype(pt.dtype))
+
+    return jax.tree.map(cp, paged_tree, dense_tree)
+
+
+def paged_insert(cfg: ModelConfig, paged: dict, dense: dict, slot,
+                 pages) -> dict:
+    """Insert a freshly prefilled batch-1 dense cache into the paged cache:
+    sequence leaves (attention K/V, MLA latents) are scattered into pool
+    pages ``pages`` (n,) — the slot's block-table entries — and per-slot
+    state leaves (SSM h / conv tail) are copied into row ``slot``.  The
+    admit half of the continuous-batching scheduler."""
+    fam = cfg.family
+    out = dict(paged)
+    if fam == "dense":
+        out["layers"] = paged_kv_insert(paged["layers"], dense["layers"],
+                                        pages, lead=1)
+    elif fam == "moe":
+        if cfg.mla:
+            from .mla import mla_paged_insert
+
+            out["layers"] = mla_paged_insert(paged["layers"], dense["layers"],
+                                             pages, lead=1)
+        else:
+            out["layers"] = paged_kv_insert(paged["layers"], dense["layers"],
+                                            pages, lead=1)
+        if "dense_layers" in paged:
+            out["dense_layers"] = paged_kv_insert(
+                paged["dense_layers"], dense["dense_layers"], pages, lead=1)
+    elif fam == "ssm":
+        out["layers"] = _copy_slot(paged["layers"], dense["layers"], slot,
+                                   lead=1)
+    elif fam == "hybrid":
+        out["groups_ssm"] = _copy_slot(paged["groups_ssm"],
+                                       dense["groups_ssm"], slot, lead=2)
+        out["groups_attn"] = paged_kv_insert(paged["groups_attn"],
+                                             dense["groups_attn"], pages,
+                                             lead=1)
+        if "tail" in paged:
+            out["tail"] = _copy_slot(paged["tail"], dense["tail"], slot,
+                                     lead=1)
+    elif fam == "vlm":
+        out["groups_self"] = paged_kv_insert(paged["groups_self"],
+                                             dense["groups_self"], pages,
+                                             lead=2)
+    elif fam == "encdec":
+        out["decoder"] = paged_kv_insert(paged["decoder"], dense["decoder"],
+                                         pages, lead=1)
+    else:
+        raise ValueError(fam)
+    return out
+
+
 def decode_step(
     params: dict,
     cfg: ModelConfig,
     tokens: jnp.ndarray,  # (B, 1)
     cache: dict,
-    pos: jnp.ndarray,  # scalar int32
+    pos: jnp.ndarray,  # scalar int32; paged cache: (B,) per-slot lengths
     extras: Optional[dict] = None,
+    page_size: int = 0,
 ) -> tuple[jnp.ndarray, dict]:
+    """One decode step.  With a dense cache (``init_cache``) ``pos`` is a
+    scalar shared by the whole batch.  With a paged cache
+    (``init_paged_cache`` — detected by its ``block_tables`` key) ``pos`` is
+    a per-slot (B,) vector and ``page_size`` must match the pool's page
+    size: attention scatters/gathers through the block tables, which is what
+    lets the continuous-batching scheduler step slots at different depths in
+    one program."""
     extras = extras or {}
     fam = cfg.family
+    bt = cache.get("block_tables")
     x = embed_lookup(params["embed"], tokens)
     new_cache = dict(cache)
 
+    if bt is None:
+        dense_body = lambda lp, h, c: bk.dense_block_decode(lp, h, c, pos, cfg)
+        moe_body = lambda lp, h, c: bk.moe_block_decode(lp, h, c, pos, cfg)
+    else:
+        dense_body = lambda lp, h, c: bk.dense_block_decode_paged(
+            lp, h, c, bt, pos, cfg, page_size)
+        moe_body = lambda lp, h, c: bk.moe_block_decode_paged(
+            lp, h, c, bt, pos, cfg, page_size)
+
     if fam == "dense":
-        x, cs = _scan_cached(
-            params["layers"], cache["layers"], x,
-            lambda lp, h, c: bk.dense_block_decode(lp, h, c, pos, cfg),
-        )
+        x, cs = _scan_cached(params["layers"], cache["layers"], x, dense_body)
         new_cache["layers"] = cs
     elif fam == "moe":
         if params.get("dense_layers") is not None:
             x, cs = _scan_cached(
-                params["dense_layers"], cache["dense_layers"], x,
-                lambda lp, h, c: bk.dense_block_decode(lp, h, c, pos, cfg),
+                params["dense_layers"], cache["dense_layers"], x, dense_body,
             )
             new_cache["dense_layers"] = cs
-        x, cs = _scan_cached(
-            params["layers"], cache["layers"], x,
-            lambda lp, h, c: bk.moe_block_decode(lp, h, c, pos, cfg),
-        )
+        x, cs = _scan_cached(params["layers"], cache["layers"], x, moe_body)
         new_cache["layers"] = cs
     elif fam == "ssm":
         x, cs = _scan_cached(
@@ -442,7 +595,11 @@ def decode_step(
             h, ssm_new = _scan_cached(
                 gp, ssm_c, h, lambda lp, hh, cc: bk.ssm_block_decode(lp, hh, cc, cfg)
             )
-            h, attn_new = bk.dense_block_decode(shared, h, attn_c, pos, cfg)
+            if bt is None:
+                h, attn_new = bk.dense_block_decode(shared, h, attn_c, pos, cfg)
+            else:
+                h, attn_new = bk.dense_block_decode_paged(
+                    shared, h, attn_c, bt, pos, cfg, page_size)
             return h, (ssm_new, attn_new)
 
         def f(h, xs):
@@ -465,10 +622,7 @@ def decode_step(
 
         def f(h, xs):
             gp, c = xs
-            h, cs = _scan_cached(
-                gp["self"], c, h,
-                lambda lp, hh, cc: bk.dense_block_decode(lp, hh, cc, pos, cfg),
-            )
+            h, cs = _scan_cached(gp["self"], c, h, dense_body)
             h = bk.cross_block_apply(gp["cross"], h, img, cfg)
             return h, cs
 
@@ -478,11 +632,20 @@ def decode_step(
         enc_out = extras["enc_out"].astype(x.dtype)
 
         def dec_block_decode(lp, h, c):
-            hh, c_new = attn_decode(
-                lp["self"], rmsnorm(h, lp["ln1"], cfg.norm_eps), c, pos,
-                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
-                rope_theta=cfg.rope_theta,
-            )
+            h_in = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            if bt is None:
+                hh, c_new = attn_decode(
+                    lp["self"], h_in, c, pos,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                )
+            else:
+                hh, c_new = attn_decode_paged(
+                    lp["self"], h_in, c, bt, pos,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                    page_size=page_size,
+                )
             h = h + hh
             hh = attn_apply(
                 lp["cross"], rmsnorm(h, lp["ln2"], cfg.norm_eps),

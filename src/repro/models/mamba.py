@@ -20,8 +20,13 @@ from .common import dense_init, linear, split_keys, weight_shape
 
 
 # ------------------------------------------------------------------ conv ----
-def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray = None):
-    """Depthwise causal conv over seq. x: (B,S,C), w: (C,K). state: (B,K-1,C)."""
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray = None,
+                 length=None):
+    """Depthwise causal conv over seq. x: (B,S,C), w: (C,K). state: (B,K-1,C).
+
+    ``length`` (scalar int32, <= S) returns the conv state as of that many
+    real tokens — the tail a right-padded prompt would have produced without
+    the pads (positions >= length never enter the carried state)."""
     k = w.shape[-1]
     if state is None:
         pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
@@ -29,7 +34,12 @@ def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray = None):
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
     out = sum(xp[:, i : i + x.shape[1], :] * w[:, i] for i in range(k))
-    new_state = xp[:, -(k - 1) :, :] if k > 1 else pad
+    if k <= 1:
+        new_state = pad
+    elif length is None:
+        new_state = xp[:, -(k - 1) :, :]
+    else:
+        new_state = jax.lax.dynamic_slice_in_dim(xp, length, k - 1, axis=1)
     return out, new_state
 
 
@@ -76,9 +86,15 @@ def mamba1_apply(p: dict, x: jnp.ndarray, s: SSMConfig) -> jnp.ndarray:
     return y
 
 
-def mamba1_prefill(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
+def mamba1_prefill(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig,
+                   length=None):
     """Full-sequence Mamba1 that also returns the decode cache (final SSM
-    state + conv tail) — the single-pass prefill form. x: (B, S, D)."""
+    state + conv tail) — the single-pass prefill form. x: (B, S, D).
+
+    ``length`` (scalar int32) treats positions >= length as right padding:
+    masked steps carry dt=0 (state passes through) and the conv tail is
+    taken at ``length``, so the returned cache equals an unpadded prefill —
+    what the continuous-batching admit path needs for page-aligned prompts."""
     b, seq, d = x.shape
     d_in = weight_shape(p["dt_proj"])[1]
     n = s.state_dim
@@ -87,7 +103,7 @@ def mamba1_prefill(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
 
     xz = linear(x, p["in_proj"])
     xs, z = jnp.split(xz, 2, axis=-1)
-    xs, conv_state = _causal_conv(xs, p["conv_w"], cache["conv"])
+    xs, conv_state = _causal_conv(xs, p["conv_w"], cache["conv"], length=length)
     conv_state = conv_state.astype(cache["conv"].dtype)  # stable scan carry
     xs = jax.nn.silu(xs + p["conv_b"])
 
@@ -97,6 +113,8 @@ def mamba1_prefill(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
     # length, incl. primes).  Pad steps carry dt=0 via the mask, so dA=1 and
     # dBx=0 — the state passes through them unchanged.
     mask = jnp.ones((b, seq), jnp.float32)
+    if length is not None:
+        mask = mask * (jnp.arange(seq)[None, :] < length)
     if pad:
         xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
         mask = jnp.pad(mask, ((0, 0), (0, pad)))
@@ -206,9 +224,14 @@ def mamba2_apply(p: dict, x: jnp.ndarray, s: SSMConfig) -> jnp.ndarray:
     return y
 
 
-def mamba2_prefill(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
+def mamba2_prefill(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig,
+                   length=None):
     """Full-sequence SSD that also returns the decode cache (final state +
-    conv tail) — the single-pass prefill form. x: (B, S, D)."""
+    conv tail) — the single-pass prefill form. x: (B, S, D).
+
+    ``length`` masks positions >= length as right padding (dt_a=0 so decay
+    is 1, xh=0 so no state contribution, conv tail taken at ``length``) —
+    the cache then matches an unpadded prefill exactly."""
     b, seq, d = x.shape
     d_in = weight_shape(p["out_proj"])[0]
     nh = p["A_log"].shape[0]
@@ -221,7 +244,7 @@ def mamba2_prefill(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
     z = zxbcdt[..., :d_in]
     xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
     dt_raw = zxbcdt[..., 2 * d_in + 2 * n :]  # (B,S,nh)
-    xbc, conv_state = _causal_conv(xbc, p["conv_w"], cache["conv"])
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], cache["conv"], length=length)
     conv_state = conv_state.astype(cache["conv"].dtype)  # stable scan carry
     xbc = jax.nn.silu(xbc + p["conv_b"])
     xs, bmat, cmat = (
@@ -234,6 +257,10 @@ def mamba2_prefill(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
     dt_a = dt * a  # (B,S,nh), negative
 
     xh = xs.reshape(b, seq, nh, hd).astype(jnp.float32)
+    if length is not None:
+        valid = (jnp.arange(seq) < length).astype(jnp.float32)
+        dt_a = dt_a * valid[None, :, None]
+        xh = xh * valid[None, :, None, None]
 
     # Zero-pad S to a chunk multiple (keeps the chunked SSD path for any
     # prompt length).  Pad steps have dt_a=0 (decay exp(0)=1) and xh=0 (no

@@ -85,6 +85,67 @@ def mla_cache_init(batch: int, max_seq: int, m: MLAConfig, dtype) -> dict:
             "kr": jnp.zeros((batch, max_seq, m.qk_rope_dim), dtype)}
 
 
+def mla_paged_cache_init(num_pages: int, page_size: int, m: MLAConfig,
+                         dtype) -> dict:
+    """Paged latent cache: ``(P, page_size, lora/rope)`` pools shared across
+    batch slots (see attention.paged_kv_cache_init for the page discipline)."""
+    return {"c": jnp.zeros((num_pages, page_size, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros((num_pages, page_size, m.qk_rope_dim), dtype)}
+
+
+def mla_paged_insert(pool: dict, dense: dict, pages: jnp.ndarray,
+                     lead: int = 0) -> dict:
+    """Scatter a batch-1 dense latent cache into pool pages ``pages`` (n,)."""
+    idx = (slice(None),) * lead
+    n = pages.shape[0]
+    ps = pool["c"].shape[lead + 1]
+    out = {}
+    for key in ("c", "kr"):
+        d = dense[key][idx + (0,)]  # lead + (n*ps, dim)
+        d = d.reshape(d.shape[:lead] + (n, ps, d.shape[-1]))
+        out[key] = pool[key].at[idx + (pages,)].set(d.astype(pool[key].dtype))
+    return out
+
+
+def mla_decode_paged(p, x, cache, block_tables, pos, *, n_heads: int,
+                     m: MLAConfig, rope_theta: float, page_size: int):
+    """Absorbed decode against the paged latent pool: scatter the new
+    latent/rope rows into the slot's current page, gather pages at the
+    score contraction.  ``pos`` is per-slot (B,)."""
+    b = x.shape[0]
+    ps = page_size
+    qh = m.qk_nope_dim + m.qk_rope_dim
+    q = linear(x, p["wq"]).reshape(b, 1, n_heads, qh)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    pvec = pos[:, None]
+    q_rope = apply_rope(q_rope, pvec, rope_theta)
+    q_lat = jnp.einsum("bqhd,hcd->bqhc", q_nope, dq(p["w_uk"], q_nope.dtype))
+
+    ckv = linear(x, p["w_dkv"])
+    c_new, kr_new = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    kr_new = apply_rope(kr_new[:, :, None, :], pvec, rope_theta)[:, :, 0, :]
+    page = jnp.take_along_axis(block_tables, (pos // ps)[:, None], axis=1)[:, 0]
+    off = pos % ps
+    cc_pool = cache["c"].at[page, off, :].set(c_new[:, 0].astype(cache["c"].dtype))
+    ckr_pool = cache["kr"].at[page, off, :].set(kr_new[:, 0].astype(cache["kr"].dtype))
+
+    seq = block_tables.shape[1] * ps
+    cc = cc_pool[block_tables].reshape(b, seq, m.kv_lora_rank)
+    ckr = ckr_pool[block_tables].reshape(b, seq, m.qk_rope_dim)
+
+    scale = 1.0 / jnp.sqrt(qh)
+    s_lat = jnp.einsum("bqhc,bkc->bhqk", q_lat.astype(jnp.float32), cc.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32), ckr.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    valid = jnp.arange(seq)[None, None, None, :] <= pos[:, None, None, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkc->bqhc", w, cc.astype(jnp.float32))
+    o = jnp.einsum("bqhc,hcd->bqhd", o_lat, dq(p["w_uv"], jnp.float32))
+    o = o.reshape(b, 1, -1).astype(x.dtype)
+    return linear(o, p["wo"]), {"c": cc_pool, "kr": ckr_pool}
+
+
 def mla_decode(p, x, cache, pos, *, n_heads: int, m: MLAConfig, rope_theta: float):
     """Absorbed decode: scores in latent space, W_uk/W_uv folded in."""
     b = x.shape[0]

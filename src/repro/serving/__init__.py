@@ -1,4 +1,15 @@
-"""Serving substrate: PIM weight conversion + batched prefill/decode engine."""
-from .engine import ServingEngine, prefill_cache, quantize_tree
+"""Serving substrate: PIM weight conversion + fixed-batch and
+continuous-batching (paged KV cache) engines."""
+from .engine import (
+    ContinuousBatchingEngine,
+    Request,
+    ServingEngine,
+    mask_after_stop,
+    pim_bytes,
+    quantize_tree,
+)
 
-__all__ = ["ServingEngine", "quantize_tree", "prefill_cache"]
+__all__ = [
+    "ServingEngine", "ContinuousBatchingEngine", "Request", "quantize_tree",
+    "pim_bytes", "mask_after_stop",
+]

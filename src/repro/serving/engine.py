@@ -1,4 +1,5 @@
-"""Batched serving with PIM-quantized weights — the decode fast path.
+"""Serving with PIM-quantized weights: fixed-batch fast path + a
+continuous-batching scheduler on a paged KV cache.
 
 ``quantize_tree`` converts a trained parameter tree into PIM-mode storage:
 every large matmul weight becomes ``{"codes": int8, "scale": f32}`` — the
@@ -8,24 +9,64 @@ memory-bound regime the paper targets (§I: MLP/RNN inference dominated by
 memory).  Per-arch quantized-vs-dense logit agreement is tested in
 tests/test_serving.py.
 
-``ServingEngine.generate`` is ONE lowered XLA program: a single-pass prefill
-over the whole prompt (``models.prefill``) followed by a ``lax.scan`` over
-the decode steps.  The seed engine re-entered Python once per token for both
-phases; per Gómez-Luna et al.'s UPMEM study (PAPERS.md), that host-side
-dispatch overhead is exactly what erases PIM's memory-bandwidth win.  The
-seed loop survives as ``generate_reference`` — the parity oracle and the
-benchmark baseline (benchmarks/decode_bench.py).
+Two engines share the model-side decode path:
+
+``ServingEngine.generate`` — ONE lowered XLA program for a fixed batch: a
+single-pass prefill over the whole prompt (``models.prefill``) followed by a
+``lax.scan`` over the decode steps.  The seed per-token loop survives as
+``generate_reference`` — the single parity oracle (prefill AND decode
+per-token) and the dispatch-bound baseline in benchmarks/decode_bench.py.
+Its weakness is request-level: every sequence rides until the longest one
+finishes, and the dense cache preallocates ``B * max_seq`` tokens.
+
+``ContinuousBatchingEngine`` — request-level scheduling on a paged cache:
+
+* **Page / block-table layout** (``models.init_paged_cache``): each layer's
+  K/V (or MLA latent) store is a pool of ``num_pages`` fixed-size pages of
+  ``page_size`` tokens, shaped ``(P, KV, page_size, D)`` (latents:
+  ``(P, page_size, rank)``), shared across all batch slots.  A slot's
+  ``block_tables`` row (width ``max_seq / page_size``) maps its logical page
+  ``i`` — positions ``[i*page_size, (i+1)*page_size)`` — to a pool page id.
+  Decode scatters the new token's K/V through the table and gathers the
+  slot's pages at the contraction (``models.attention.attn_decode_paged``).
+  Page 0 is reserved as the trash page: inactive slots write there, so
+  freed pages can be re-issued without cross-slot corruption.  Cache memory
+  therefore scales with live tokens (pages in use), not ``B * max_seq``.
+  SSM/conv state is O(1) per slot and stays per-slot dense.
+
+* **Scheduler states**: a request is QUEUED until a batch slot and enough
+  pages for its (page-aligned) prompt are free; ADMITTED by a batch-1
+  single-pass prefill into a temporary dense cache that is scattered into
+  its pages (``models.paged_insert``) and yields its first token; RUNNING
+  while the jit-compiled decode chunk (``lax.scan`` over ``chunk`` steps,
+  per-slot ``pos``/``done``/``n_out`` carried) advances all live slots;
+  FINISHED when it emits a stop token or reaches ``max_new``, at which
+  point its pages return to the free list and the slot admits the next
+  queued request — short requests no longer wait on the longest.  If the
+  free list runs dry mid-flight the youngest running request is PREEMPTED
+  (pages freed, requeued for recompute), matching vLLM-style recompute
+  preemption.  The host only intervenes at chunk boundaries (admit /
+  page top-up / retire); the inner loop stays one compiled program.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from collections import deque
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, init_cache, prefill
+from repro.models import (
+    decode_step,
+    init_cache,
+    init_paged_cache,
+    paged_insert,
+    prefill,
+)
 from repro.quant import quantize_symmetric
 
 # Leaves that stay dense: norms/gains/biases/scalars, router (accuracy-
@@ -33,6 +74,9 @@ from repro.quant import quantize_symmetric
 _DENSE_KEYS = {"ln", "ln1", "ln2", "ln3", "ln_f", "conv_w", "conv_b", "A_log",
                "dt_bias", "D", "router", "gate_attn", "gate_mlp",
                "bq", "bk", "bv", "scale"}
+
+# int4 packing metadata leaves — markers, not shipped storage.
+_MARKER_KEYS = ("nibbles", "nibbles_odd")
 
 
 def _should_quantize(path, leaf) -> bool:
@@ -81,22 +125,17 @@ def quantize_tree(params, bits: int = 8):
 
 
 def pim_bytes(params) -> int:
-    """HBM bytes of a (possibly quantized) parameter tree."""
+    """HBM bytes of a (possibly quantized) parameter tree.
+
+    The int4 ``nibbles``/``nibbles_odd`` leaves are packing *markers* —
+    metadata for ``dq``/``weight_shape``, never shipped to HBM — so they are
+    excluded from the byte count."""
     total = 0
-    for leaf in jax.tree.leaves(params):
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        if path and str(getattr(path[-1], "key", "")) in _MARKER_KEYS:
+            continue
         total += leaf.size * leaf.dtype.itemsize
     return total
-
-
-def prefill_cache(params, cfg: ModelConfig, tokens, cache, extras: Optional[dict] = None):
-    """Sequential prefill via decode steps (reference path; the production
-    prefill is ``models.prefill`` — one lowered program over the prompt)."""
-    pos = 0
-    for i in range(tokens.shape[1]):
-        _, cache = decode_step(params, cfg, tokens[:, i : i + 1], cache,
-                               jnp.int32(pos), extras)
-        pos += 1
-    return cache, pos
 
 
 # ---------------------------------------------------------------- sampling --
@@ -112,6 +151,20 @@ def sample_logits(logits, key, *, greedy: bool, temperature, top_k: int):
         kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
         lg = jnp.where(lg < kth, -jnp.inf, lg)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+def mask_after_stop(tokens, stop_tokens: Sequence[int], pad_id: int = 0):
+    """Replace every token emitted *after* a row's first stop token with
+    ``pad_id`` (the stop token itself is kept).  tokens: (B, N) int32."""
+    stop_tokens = tuple(stop_tokens)
+    if not stop_tokens:
+        return tokens
+    hit = jnp.zeros(tokens.shape, bool)
+    for s in stop_tokens:
+        hit = hit | (tokens == s)
+    h = hit.astype(jnp.int32)
+    stopped_before = (jnp.cumsum(h, axis=1) - h) > 0
+    return jnp.where(stopped_before, jnp.int32(pad_id), tokens)
 
 
 @functools.partial(
@@ -147,7 +200,9 @@ def _generate_scan(params, cfg: ModelConfig, prompt, extras, key, temperature,
 
 
 class ServingEngine:
-    """Batched engine: single-pass prefill, then a scan-compiled decode loop."""
+    """Fixed-batch engine: single-pass prefill, then a scan-compiled decode
+    loop — one XLA program end-to-end.  The baseline the continuous-batching
+    engine is benchmarked against (benchmarks/serving_bench.py)."""
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int, pim_bits: int = 0):
         self.cfg = cfg
@@ -156,7 +211,7 @@ class ServingEngine:
 
     def generate(self, prompt_tokens, n_new: int, extras: Optional[dict] = None,
                  greedy: bool = True, temperature: float = 1.0, top_k: int = 0,
-                 key=None):
+                 key=None, stop_tokens: Sequence[int] = (), pad_id: int = 0):
         """Generate ``n_new`` tokens for the whole batch in one XLA program.
 
         greedy=True reproduces the seed engine's argmax decoding; for
@@ -167,7 +222,14 @@ class ServingEngine:
         near-ties (only observable on untrained models, where top-2 margins
         are that small).  greedy=False samples with ``temperature`` and
         optional ``top_k`` filtering, driven by ``key`` (defaults to
-        PRNGKey(0) for reproducibility)."""
+        PRNGKey(0) for reproducibility).
+
+        ``stop_tokens`` masks every token a row emits after its first stop
+        token with ``pad_id`` (the stop token itself is kept) — pure
+        post-processing on the emitted tokens, so varying stop sets never
+        recompile the generation program.  The scan still runs ``n_new``
+        steps — a fixed batch cannot retire rows early; that is exactly
+        what ``ContinuousBatchingEngine`` adds."""
         if key is None:
             key = jax.random.PRNGKey(0)
         s = prompt_tokens.shape[1]
@@ -176,19 +238,29 @@ class ServingEngine:
                 f"prompt ({s}) + n_new ({n_new}) exceeds max_seq "
                 f"({self.max_seq}); cache writes past max_seq would "
                 "silently clamp")
-        return _generate_scan(
+        toks = _generate_scan(
             self.params, self.cfg, prompt_tokens, extras, key,
             jnp.float32(temperature), n_new=int(n_new), max_seq=self.max_seq,
             greedy=bool(greedy), top_k=int(top_k),
         )
+        return mask_after_stop(toks, tuple(stop_tokens), int(pad_id))
 
     def generate_reference(self, prompt_tokens, n_new: int,
-                           extras: Optional[dict] = None):
+                           extras: Optional[dict] = None, greedy: bool = True,
+                           temperature: float = 1.0, top_k: int = 0, key=None,
+                           stop_tokens: Sequence[int] = (), pad_id: int = 0):
         """The seed per-token loop: one Python dispatch per prompt AND per
-        generated token.  Kept as the parity oracle for the scan-compiled
-        path and as the dispatch-bound baseline in decode_bench."""
+        generated token.  THE parity oracle — it exercises both the
+        per-token prefill path and the per-token decode path that the
+        scan-compiled ``generate`` replaces — and the dispatch-bound
+        baseline in decode_bench.  Mirrors ``generate``'s sampling options
+        and key-split order, so matching keys give matching samples."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
         cfg = self.cfg
         b, s = prompt_tokens.shape
+        if n_new == 0:
+            return jnp.zeros((b, 0), jnp.int32)
         cache = init_cache(cfg, b, self.max_seq)
 
         step_fn = jax.jit(
@@ -198,10 +270,375 @@ class ServingEngine:
         for i in range(s):
             logits, cache = step_fn(self.params, prompt_tokens[:, i : i + 1],
                                     cache, jnp.int32(i))
-        out = []
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        for j in range(n_new):
-            out.append(tok)
+        key, k0 = jax.random.split(key)
+        tok = sample_logits(logits[:, -1, :], k0, greedy=greedy,
+                            temperature=jnp.float32(temperature),
+                            top_k=int(top_k))[:, None]
+        out = [tok]
+        for j in range(n_new - 1):
             logits, cache = step_fn(self.params, tok, cache, jnp.int32(s + j))
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jnp.concatenate(out, axis=1)
+            key, sub = jax.random.split(key)
+            tok = sample_logits(logits[:, -1, :], sub, greedy=greedy,
+                                temperature=jnp.float32(temperature),
+                                top_k=int(top_k))[:, None]
+            out.append(tok)
+        toks = jnp.concatenate(out, axis=1)
+        return mask_after_stop(toks, tuple(stop_tokens), int(pad_id))
+
+
+# ===================================================== continuous batching ==
+@dataclasses.dataclass
+class Request:
+    """One generation request for ``ContinuousBatchingEngine.serve``.
+
+    ``extras`` are this request's per-slot model inputs (vlm image embeds,
+    encdec encoder output) WITHOUT a batch dim; every request in a trace
+    must share the same extras structure/shapes (or all pass None)."""
+
+    prompt: np.ndarray  # (len,) int32 token ids
+    max_new: int  # emit at most this many tokens (>= 1)
+    stop_tokens: tuple = ()  # retire early after emitting any of these
+    extras: Optional[dict] = None
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "spad", "page_size", "greedy", "top_k"),
+    donate_argnames=("cache",),
+)
+def _admit_prefill(params, cfg: ModelConfig, cache, prompt, length, slot,
+                   pages, key, temperature, extras, *, spad: int,
+                   page_size: int, greedy: bool, top_k: int):
+    """Admit one request: batch-1 single-pass prefill into a temporary dense
+    cache, scatter it into the slot's pages (``models.paged_insert``), and
+    sample the first token from the logits at the true prompt end.  Compiled
+    once per padded prompt length ``spad`` (a page multiple)."""
+    tmp = init_cache(cfg, 1, spad)
+    logits, tmp = prefill(params, cfg, prompt, tmp, extras, length=length)
+    cache = paged_insert(cfg, cache, tmp, slot, pages)
+    lg = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
+                                      keepdims=False)[0]  # (V,)
+    tok0 = sample_logits(lg, key, greedy=greedy, temperature=temperature,
+                         top_k=top_k)
+    return cache, tok0
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "chunk", "page_size", "greedy", "top_k", "pad_id"),
+    donate_argnames=("cache",),
+)
+def _decode_chunk(params, cfg: ModelConfig, cache, tok, pos, n_out, done,
+                  max_new, stops, key, temperature, extras, *, chunk: int,
+                  page_size: int, greedy: bool, top_k: int, pad_id: int):
+    """``chunk`` decode steps over all batch slots as one compiled scan.
+
+    Per-slot carry: current token, position (cached length), emitted count,
+    and done flag.  Done/inactive slots keep stepping (their writes land in
+    their own pages or the trash page — harmless) but their emissions are
+    masked; the host retires/admits at the chunk boundary."""
+
+    def body(carry, _):
+        tok, cache, pos, n_out, done, key = carry
+        lg, cache = decode_step(params, cfg, tok, cache, pos, extras,
+                                page_size=page_size)
+        key, sub = jax.random.split(key)
+        nxt = sample_logits(lg[:, -1, :], sub, greedy=greedy,
+                            temperature=temperature, top_k=top_k)
+        live = ~done
+        emit = jnp.where(live, nxt, jnp.int32(pad_id))
+        pos = jnp.where(live, pos + 1, pos)
+        n_out = jnp.where(live, n_out + 1, n_out)
+        hit = jnp.any(emit[:, None] == stops, axis=1)
+        done = done | (live & hit) | (n_out >= max_new)
+        return (emit[:, None], cache, pos, n_out, done, key), (emit, live)
+
+    carry, (emits, lives) = jax.lax.scan(
+        body, (tok, cache, pos, n_out, done, key), None, length=chunk)
+    tok, cache, pos, n_out, done, key = carry
+    return cache, tok, pos, n_out, done, key, emits, lives
+
+
+class ContinuousBatchingEngine:
+    """Continuous-batching scheduler over a paged KV cache (see module
+    docstring for the page/block-table layout and scheduler states).
+
+    ``slots`` is the decode batch width; ``num_pages`` bounds total cache
+    memory (pages are ``page_size`` tokens each, page 0 is the trash page);
+    ``max_seq`` caps a single request's ``prompt + max_new``; ``chunk`` is
+    how many decode steps run per compiled program between host scheduling
+    points.  Per-request model inputs (vlm image embeds, encdec encoder
+    output) ride on ``Request.extras``: admit writes them into the
+    request's slot row of a per-slot device buffer, so a request keeps its
+    own conditioning no matter which slot it lands in.
+
+    ``page_alloc_seed`` shuffles the free list so block tables become random
+    permutations of physical pages — decode must be layout-independent
+    (tests/test_paged_serving.py exercises this)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int, max_seq: int,
+                 page_size: int = 8, num_pages: Optional[int] = None,
+                 chunk: int = 8, pim_bits: int = 0, pad_id: int = 0,
+                 page_alloc_seed: Optional[int] = None):
+        self.cfg = cfg
+        self.params = quantize_tree(params, pim_bits) if pim_bits else params
+        self.slots = int(slots)
+        self.page_size = int(page_size)
+        self.max_seq = -(-int(max_seq) // self.page_size) * self.page_size
+        self.width = self.max_seq // self.page_size
+        if num_pages is None:
+            num_pages = self.slots * self.width + 1  # worst case + trash page
+        self.num_pages = int(num_pages)
+        self.chunk = int(chunk)
+        self.pad_id = int(pad_id)
+        self._rng = (np.random.default_rng(page_alloc_seed)
+                     if page_alloc_seed is not None else None)
+        self.peak_pages_in_use = 0
+        self.preemptions = 0
+
+    # ------------------------------------------------------------- helpers --
+    def _spad(self, length: int) -> int:
+        """Prompt length padded up to a whole number of pages."""
+        ps = self.page_size
+        return max(ps, -(-length // ps) * ps)
+
+    def _set_slot_extras(self, slot: int, extras: Optional[dict]):
+        """Write a request's extras into its slot row of the per-slot
+        buffer the decode chunk reads; returns the batch-1 view for the
+        admit prefill."""
+        if extras is None:
+            return None
+        ex = jax.tree.map(jnp.asarray, extras)
+        if self._extras_slots is None:
+            self._extras_slots = jax.tree.map(
+                lambda v: jnp.zeros((self.slots,) + v.shape, v.dtype), ex)
+        self._extras_slots = jax.tree.map(
+            lambda buf, v: buf.at[slot].set(v), self._extras_slots, ex)
+        return jax.tree.map(lambda v: v[None], ex)
+
+    def pages_in_use(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def _alloc_pages(self, n: int) -> list[int]:
+        if self._rng is not None:
+            self._rng.shuffle(self._free)
+        pages, self._free = self._free[:n], self._free[n:]
+        return pages
+
+    def _free_pages(self, pages: list[int]) -> None:
+        self._free.extend(pages)
+
+    # ------------------------------------------------------------ lifecycle --
+    def _reset(self, requests, n_stops: int):
+        b, w = self.slots, self.width
+        self._cache = init_paged_cache(self.cfg, b, self.max_seq,
+                                       self.num_pages, self.page_size)
+        self._free = list(range(1, self.num_pages))  # page 0 = trash
+        self._bt = np.zeros((b, w), np.int32)
+        self._pos = np.zeros(b, np.int32)
+        self._n_out = np.zeros(b, np.int32)
+        self._done = np.ones(b, bool)  # inactive slots are "done"
+        self._max_new = np.zeros(b, np.int32)
+        self._stops = np.full((b, n_stops), -1, np.int32)
+        self._tok = np.zeros((b, 1), np.int32)
+        self._slot_req = [-1] * b
+        self._slot_pages: list[list[int]] = [[] for _ in range(b)]
+        self._admit_seq = [-1] * b
+        self._seq = 0
+        self._outputs = [[] for _ in requests]
+        self._queue = deque(range(len(requests)))
+        self._extras_slots = None
+
+    def _admit(self, requests, slot: int, ridx: int, greedy, temperature,
+               top_k) -> None:
+        req = requests[ridx]
+        ps = self.page_size
+        length = len(req.prompt)
+        spad = self._spad(length)
+        pages = self._alloc_pages(spad // ps)
+        self._bt[slot, :] = 0
+        self._bt[slot, : len(pages)] = pages
+        prompt = np.zeros((1, spad), np.int32)
+        prompt[0, :length] = np.asarray(req.prompt, np.int32)
+        self._key, sub = jax.random.split(self._key)
+        self._cache, tok0 = _admit_prefill(
+            self.params, self.cfg, self._cache, jnp.asarray(prompt),
+            jnp.int32(length), jnp.int32(slot), jnp.asarray(pages, jnp.int32),
+            sub, jnp.float32(temperature),
+            self._set_slot_extras(slot, req.extras),
+            spad=spad, page_size=ps, greedy=bool(greedy), top_k=int(top_k))
+        tok0 = int(tok0)
+        self._outputs[ridx].append(tok0)
+        self._pos[slot] = length
+        self._n_out[slot] = 1
+        self._max_new[slot] = req.max_new
+        self._stops[slot, :] = -1
+        st = tuple(req.stop_tokens)
+        self._stops[slot, : len(st)] = st
+        self._tok[slot, 0] = tok0
+        self._done[slot] = req.max_new <= 1 or tok0 in st
+        self._slot_req[slot] = ridx
+        self._slot_pages[slot] = list(pages)
+        self._admit_seq[slot] = self._seq
+        self._seq += 1
+
+    def _retire(self, slot: int) -> None:
+        self._free_pages(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self._slot_req[slot] = -1
+        self._admit_seq[slot] = -1
+        self._bt[slot, :] = 0
+        self._pos[slot] = 0
+        self._n_out[slot] = 0
+        self._max_new[slot] = 0
+        self._stops[slot, :] = -1
+        self._done[slot] = True
+
+    def _preempt_youngest(self, protect: int) -> bool:
+        """Recompute preemption: requeue the most recently admitted live
+        request (except ``protect``) and free its pages."""
+        live = [s for s in range(self.slots)
+                if self._slot_req[s] >= 0 and s != protect]
+        if not live:
+            return False
+        victim = max(live, key=lambda s: self._admit_seq[s])
+        ridx = self._slot_req[victim]
+        self._outputs[ridx].clear()
+        self._queue.appendleft(ridx)
+        self._retire(victim)
+        self.preemptions += 1
+        return True
+
+    def _top_up(self, requests, slot: int) -> None:
+        """Extend the slot's block table to cover the next chunk's writes,
+        preempting younger requests if the free list runs dry."""
+        req = requests[self._slot_req[slot]]
+        ps = self.page_size
+        length = len(req.prompt)
+        spad = self._spad(length)
+        # Live writes in the next chunk land at pos .. pos+chunk-1, bounded
+        # by the last live write position length + max_new - 2; prefill
+        # already covered spad - 1.
+        last = min(int(self._pos[slot]) + self.chunk - 1,
+                   length + req.max_new - 2)
+        need = max(last, spad - 1) // ps + 1
+        have = len(self._slot_pages[slot])
+        if need <= have:
+            return
+        while len(self._free) < need - have:
+            if not self._preempt_youngest(protect=slot):
+                raise RuntimeError(
+                    f"page pool exhausted ({self.num_pages} pages of "
+                    f"{ps} tokens) with a single live request; increase "
+                    "num_pages")
+        pages = self._alloc_pages(need - have)
+        self._bt[slot, have:need] = pages
+        self._slot_pages[slot].extend(pages)
+
+    # --------------------------------------------------------------- serve --
+    def serve(self, requests: Sequence[Request], *, greedy: bool = True,
+              temperature: float = 1.0, top_k: int = 0, key=None
+              ) -> list[np.ndarray]:
+        """Run every request through the scheduler; returns one int32 array
+        of emitted tokens per request (<= max_new; ends at the stop token
+        if one fired).  Deterministic for a fixed key."""
+        ex_struct = jax.tree.structure(requests[0].extras) if requests else None
+        for r in requests:
+            if len(r.prompt) < 1 or r.max_new < 1:
+                raise ValueError("requests need len(prompt) >= 1, max_new >= 1")
+            if len(r.prompt) + r.max_new > self.max_seq:
+                raise ValueError(
+                    f"prompt ({len(r.prompt)}) + max_new ({r.max_new}) "
+                    f"exceeds max_seq ({self.max_seq})")
+            if jax.tree.structure(r.extras) != ex_struct:
+                raise ValueError(
+                    "all requests in a trace must share the same extras "
+                    "structure (the decode chunk is one compiled program)")
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        n_stops = max((len(r.stop_tokens) for r in requests), default=0)
+        self._reset(requests, n_stops)
+        self.peak_pages_in_use = 0
+
+        while self._queue or any(r >= 0 for r in self._slot_req):
+            # Admit queued requests into free slots while pages last.
+            for slot in range(self.slots):
+                if not self._queue or self._slot_req[slot] >= 0:
+                    continue
+                nxt = requests[self._queue[0]]
+                if len(self._free) < self._spad(len(nxt.prompt)) // self.page_size:
+                    break
+                self._admit(requests, slot, self._queue.popleft(), greedy,
+                            temperature, top_k)
+            # Retire anything that finished at admit (max_new==1 / instant
+            # stop) so its slot and pages free up immediately.
+            for slot in range(self.slots):
+                if self._slot_req[slot] >= 0 and self._done[slot]:
+                    self._retire(slot)
+            live = [s for s in range(self.slots) if self._slot_req[s] >= 0]
+            if not live:
+                if self._queue and not any(
+                        r >= 0 for r in self._slot_req):
+                    # Nothing running and the head request could not admit.
+                    raise RuntimeError(
+                        "page pool too small to admit "
+                        f"request with prompt {len(requests[self._queue[0]].prompt)}"
+                        f" tokens; increase num_pages")
+                continue
+            for slot in live:
+                # An earlier top-up in this round may have preempted this
+                # slot — it is no longer live, don't grow a retired slot.
+                if self._slot_req[slot] >= 0:
+                    self._top_up(requests, slot)
+            self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                         self.pages_in_use())
+
+            self._cache["block_tables"] = jnp.asarray(self._bt)
+            (self._cache, tok, pos, n_out, done, self._key, emits, lives) = \
+                _decode_chunk(
+                    self.params, self.cfg, self._cache, jnp.asarray(self._tok),
+                    jnp.asarray(self._pos), jnp.asarray(self._n_out),
+                    jnp.asarray(self._done), jnp.asarray(self._max_new),
+                    jnp.asarray(self._stops), self._key,
+                    jnp.float32(temperature), self._extras_slots,
+                    chunk=self.chunk, page_size=self.page_size,
+                    greedy=bool(greedy), top_k=int(top_k),
+                    pad_id=self.pad_id)
+            self._tok = np.array(tok)  # np.array: writable host copies
+            self._pos = np.array(pos)
+            self._n_out = np.array(n_out)
+            self._done = np.array(done)
+            emits, lives = np.asarray(emits), np.asarray(lives)
+            for t in range(self.chunk):
+                for slot in range(self.slots):
+                    if lives[t, slot] and self._slot_req[slot] >= 0:
+                        self._outputs[self._slot_req[slot]].append(
+                            int(emits[t, slot]))
+            for slot in range(self.slots):
+                if self._slot_req[slot] >= 0 and self._done[slot]:
+                    self._retire(slot)
+
+        return [np.asarray(toks, np.int32) for toks in self._outputs]
+
+    def generate(self, prompt_tokens, n_new: int, *,
+                 extras: Optional[dict] = None, greedy: bool = True,
+                 temperature: float = 1.0, top_k: int = 0, key=None,
+                 stop_tokens: Sequence[int] = ()):
+        """Old fixed-batch API as a thin wrapper over the scheduler: each
+        batch row becomes a Request (row i of ``extras`` — batched like
+        ``ServingEngine.generate``'s — becomes its per-request extras);
+        rows retiring early are padded with ``pad_id`` to keep the
+        (B, n_new) shape."""
+        prompts = np.asarray(prompt_tokens, np.int32)
+        reqs = [
+            Request(prompt=row, max_new=int(n_new),
+                    stop_tokens=tuple(stop_tokens),
+                    extras=(None if extras is None
+                            else jax.tree.map(lambda a: a[i], extras)))
+            for i, row in enumerate(prompts)
+        ]
+        outs = self.serve(reqs, greedy=greedy, temperature=temperature,
+                          top_k=top_k, key=key)
+        full = np.full((len(reqs), int(n_new)), self.pad_id, np.int32)
+        for i, o in enumerate(outs):
+            full[i, : len(o)] = o
+        return jnp.asarray(full)

@@ -14,7 +14,16 @@ from repro.models import decode_step, forward, init_cache, init_params, prefill
 from repro.models.common import dq, linear, set_matvec_dispatch, weight_shape
 from repro.quant import pack_int4, quantize_symmetric
 from repro.serving import ServingEngine, quantize_tree
-from repro.serving.engine import prefill_cache
+
+
+def _token_loop_cache(params, cfg, tokens, cache):
+    """Per-token prefill oracle: feed the prompt one token at a time through
+    decode_step (the seed-era reference path, now inlined here — the engine
+    keeps a single oracle, ``ServingEngine.generate_reference``)."""
+    for i in range(tokens.shape[1]):
+        _, cache = decode_step(params, cfg, tokens[:, i : i + 1], cache,
+                               jnp.int32(i))
+    return cache
 
 
 def _mk(m, k, n, seed=0):
@@ -91,7 +100,7 @@ def test_prefill_matches_forward_and_token_loop(arch):
     fwd, _ = forward(params, cfg, {"tokens": tokens})
     np.testing.assert_allclose(np.asarray(logits), np.asarray(fwd),
                                rtol=1e-5, atol=1e-5)
-    ref_cache, _ = prefill_cache(params, cfg, tokens, init_cache(cfg, b, s + 4))
+    ref_cache = _token_loop_cache(params, cfg, tokens, init_cache(cfg, b, s + 4))
     nt = jnp.zeros((b, 1), jnp.int32)
     l1, _ = decode_step(params, cfg, nt, cache, jnp.int32(s))
     l2, _ = decode_step(params, cfg, nt, ref_cache, jnp.int32(s))
@@ -107,7 +116,7 @@ def test_prefill_int8_kv_cache():
     b, s = 2, 8
     tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
     _, cache = prefill(params, cfg, tokens, init_cache(cfg, b, s + 4))
-    ref_cache, _ = prefill_cache(params, cfg, tokens, init_cache(cfg, b, s + 4))
+    ref_cache = _token_loop_cache(params, cfg, tokens, init_cache(cfg, b, s + 4))
     got = np.asarray(cache["layers"]["k"], np.int32)
     want = np.asarray(ref_cache["layers"]["k"], np.int32)
     # int8 codes of identical values; allow off-by-one rounding at the edge

@@ -1,0 +1,243 @@
+"""Continuous batching on the paged KV cache.
+
+Parity: paged-cache decode must be token-identical (greedy) to dense-cache
+decode across all six families, under random block-table permutations
+(``page_alloc_seed`` shuffles the free list, so physical page placement is
+arbitrary), and under staggered admit/retire (each request's tokens equal a
+solo run).  Scheduler: stop-token retirement, page accounting, recompute
+preemption.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import encode, init_params
+from repro.serving import (
+    ContinuousBatchingEngine,
+    Request,
+    ServingEngine,
+    pim_bytes,
+    quantize_tree,
+)
+
+# One arch per family (moe is covered both with and without MLA).
+FAMILY_ARCHS = [
+    "qwen2-1.5b",            # dense
+    "deepseek-v2-lite-16b",  # moe + MLA (paged latent cache)
+    "moonshot-v1-16b-a3b",   # moe, plain GQA
+    "falcon-mamba-7b",       # ssm (per-slot dense state)
+    "zamba2-1.2b",           # hybrid (paged shared-attn + dense ssm state)
+    "llama-3.2-vision-90b",  # vlm
+    "seamless-m4t-medium",   # encdec
+]
+
+
+def _setup(arch, b=2, s=8, key=0):
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(key))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    extras = None
+    if cfg.family == "vlm":
+        extras = {"image_embeds": jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.vision.n_image_tokens, cfg.d_model))}
+    elif cfg.family == "encdec":
+        frames = jax.random.normal(
+            jax.random.PRNGKey(3), (b, cfg.audio.n_frames, cfg.d_model))
+        extras = {"enc_out": encode(params, cfg, frames)}
+    return cfg, params, prompt, extras
+
+
+# ------------------------------------------------------- paged/dense parity -
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_paged_matches_dense_all_families(arch):
+    """Greedy tokens from the paged continuous engine == the dense
+    fixed-batch engine, with the free list shuffled so block tables are a
+    random permutation of physical pages."""
+    cfg, params, prompt, extras = _setup(arch)
+    dense = ServingEngine(cfg, params, max_seq=16)
+    want = np.asarray(dense.generate(prompt, n_new=5, extras=extras))
+    paged = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_seq=16, page_size=4, chunk=4,
+        page_alloc_seed=7)
+    got = np.asarray(paged.generate(prompt, n_new=5, extras=extras))
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_paged_block_table_permutations(seed):
+    """Decode is layout-independent: any permutation of physical pages
+    behind the block tables yields identical tokens."""
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    base = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                    page_size=4, chunk=4)
+    want = np.asarray(base.generate(prompt, n_new=6))
+    perm = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                    page_size=4, chunk=4,
+                                    page_alloc_seed=seed)
+    np.testing.assert_array_equal(want, np.asarray(perm.generate(prompt, n_new=6)))
+
+
+def test_paged_matches_dense_int8_kv_and_pim_weights():
+    """The quantized serving stack end-to-end: int8 KV page pools + int8 PIM
+    weights still decode token-identically to the dense engine."""
+    cfg = get_reduced("qwen2-1.5b").replace(kv_cache_bits=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    dense = ServingEngine(cfg, params, max_seq=16, pim_bits=8)
+    want = np.asarray(dense.generate(prompt, n_new=5))
+    paged = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                     page_size=4, chunk=4, pim_bits=8,
+                                     page_alloc_seed=11)
+    np.testing.assert_array_equal(want, np.asarray(paged.generate(prompt, n_new=5)))
+
+
+# ------------------------------------------------------- scheduler behavior -
+def test_per_request_extras_follow_the_request():
+    """extras ride on the Request, not the slot: with more requests than
+    slots, a request admitted into a freed slot must still be conditioned
+    on its own image embeds — each output equals a solo dense run with that
+    request's extras."""
+    cfg = get_reduced("llama-3.2-vision-90b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 4
+    embeds = jax.random.normal(
+        jax.random.PRNGKey(2),
+        (n_req, cfg.vision.n_image_tokens, cfg.d_model))
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=8).astype(np.int32),
+                    max_new=m, extras={"image_embeds": embeds[i]})
+            for i, m in enumerate([3, 6, 4, 5])]
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                   page_size=4, chunk=2)
+    outs = eng.serve(reqs)
+    dense = ServingEngine(cfg, params, max_seq=16)
+    for i, (r, got) in enumerate(zip(reqs, outs)):
+        want = np.asarray(dense.generate(
+            jnp.asarray(r.prompt)[None], r.max_new,
+            extras={"image_embeds": embeds[i : i + 1]}))[0]
+        np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "falcon-mamba-7b"])
+def test_scheduler_staggered_matches_solo(arch):
+    """More requests than slots, mixed (non-page-multiple) prompt lengths
+    and max_new: every request's tokens must equal running it alone on the
+    dense engine — admit/retire staggering and padded-prompt prefill
+    (length-masked SSM state) must not leak across slots."""
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    shapes = [(5, 4), (7, 6), (3, 3), (9, 5), (4, 7)]
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=L).astype(np.int32),
+                    max_new=m) for L, m in shapes]
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=24,
+                                   page_size=4, chunk=3, page_alloc_seed=1)
+    outs = eng.serve(reqs)
+    dense = ServingEngine(cfg, params, max_seq=24)
+    for r, got in zip(reqs, outs):
+        want = np.asarray(
+            dense.generate(jnp.asarray(r.prompt)[None], r.max_new))[0]
+        np.testing.assert_array_equal(want, got)
+    # With 2 slots over 5 mixed-length requests the pool never needs the
+    # dense worst case (slots * max_seq tokens of cache).
+    assert eng.peak_pages_in_use < eng.slots * eng.width
+
+
+def test_scheduler_stop_token_retires_early():
+    """A stop token ends the request's output at the stop token and frees
+    its slot/pages (the continuous engine's real early-exit, vs the fixed
+    engine's post-masking)."""
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    dense = ServingEngine(cfg, params, max_seq=16)
+    base = np.asarray(dense.generate(prompt, n_new=6))
+    stop = int(base[0, 3])
+    first = int(np.argmax(base[0] == stop))  # first occurrence in row 0
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                   page_size=4, chunk=2)
+    outs = eng.serve([
+        Request(prompt=np.asarray(prompt[0]), max_new=6, stop_tokens=(stop,)),
+        Request(prompt=np.asarray(prompt[1]), max_new=6),
+    ])
+    np.testing.assert_array_equal(outs[0], base[0, : first + 1])
+    assert outs[0][-1] == stop
+    np.testing.assert_array_equal(outs[1], base[1])
+    assert eng.pages_in_use() == 0  # everything retired -> pages freed
+
+
+def test_scheduler_preemption_recomputes():
+    """A pool too small for both requests triggers recompute preemption of
+    the younger one; outputs still match solo runs exactly."""
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=32,
+                                   page_size=4, num_pages=9, chunk=4)
+    reqs = [Request(prompt=np.asarray(prompt[0]), max_new=20),
+            Request(prompt=np.asarray(prompt[1]), max_new=20)]
+    outs = eng.serve(reqs)
+    assert eng.preemptions > 0
+    dense = ServingEngine(cfg, params, max_seq=32)
+    for r, got in zip(reqs, outs):
+        want = np.asarray(
+            dense.generate(jnp.asarray(r.prompt)[None], r.max_new))[0]
+        np.testing.assert_array_equal(want, got)
+
+
+def test_scheduler_rejects_oversized_request():
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    eng = ContinuousBatchingEngine(cfg, params, slots=1, max_seq=16,
+                                   page_size=4)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.serve([Request(prompt=np.asarray(prompt[0]), max_new=100)])
+
+
+# ------------------------------------------------- fixed-engine stop tokens -
+def test_fixed_engine_stop_tokens_mask_after_stop():
+    """ServingEngine.generate masks post-stop emissions with pad_id; the
+    per-token oracle agrees."""
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=16)
+    base = np.asarray(eng.generate(prompt, n_new=6))
+    stop = int(base[0, 0])
+    got = np.asarray(eng.generate(prompt, n_new=6, stop_tokens=(stop,),
+                                  pad_id=-1))
+    ref = np.asarray(eng.generate_reference(prompt, n_new=6,
+                                            stop_tokens=(stop,), pad_id=-1))
+    np.testing.assert_array_equal(got, ref)
+    for row_base, row in zip(base, got):
+        hits = np.flatnonzero(row_base == stop)
+        if hits.size:  # stop kept, everything after masked
+            t = hits[0]
+            np.testing.assert_array_equal(row[: t + 1], row_base[: t + 1])
+            assert (row[t + 1 :] == -1).all()
+        else:
+            np.testing.assert_array_equal(row, row_base)
+
+
+def test_reference_sampling_matches_scan():
+    """generate_reference mirrors generate's sampling options and key-split
+    order — one parity oracle for greedy AND sampled decoding."""
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=16, pim_bits=8)
+    k = jax.random.PRNGKey(5)
+    a = np.asarray(eng.generate(prompt, n_new=6, greedy=False,
+                                temperature=0.8, top_k=8, key=k))
+    b = np.asarray(eng.generate_reference(prompt, n_new=6, greedy=False,
+                                          temperature=0.8, top_k=8, key=k))
+    np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------- pim_bytes ----
+def test_pim_bytes_skips_int4_markers():
+    """The nibbles/nibbles_odd marker leaves are packing metadata, not
+    shipped HBM storage — pim_bytes must count codes + scales only."""
+    w = {"odd": jnp.zeros((33, 16)), "even": jnp.zeros((32, 16))}
+    q = quantize_tree(w, bits=4)
+    assert "nibbles_odd" in q["odd"] and "nibbles" in q["even"]
+    want = sum(
+        leaf.size * leaf.dtype.itemsize
+        for sub in q.values()
+        for name, leaf in sub.items()
+        if name in ("codes", "scale")
+    )
+    assert pim_bytes(q) == want
