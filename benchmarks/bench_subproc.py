@@ -1,0 +1,42 @@
+"""Shared runner for the benches' --devices axis.
+
+``--xla_force_host_platform_device_count`` must precede the first jax
+import, and forcing it in the parent process would also split the CPU
+across the virtual devices for the single-device sections — silently
+skewing the PR-over-PR trajectory of the main numbers.  So the sharded
+section re-runs the calling script in a SUBPROCESS (its ``--sharded-only``
+mode) with the flag in the environment and reads one ``RESULT <json>``
+line back.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+
+def run_sharded_subprocess(script_file: str, script_args: list[str],
+                           devices: int):
+    """Re-invoke ``script_file --sharded-only *script_args`` under a forced
+    ``devices``-wide virtual host platform; returns the parsed RESULT
+    payload, or None on failure / nothing measured.  A device count already
+    forced in the parent's XLA_FLAGS is respected, not duplicated."""
+    env = dict(os.environ)
+    if "xla_force_host_platform_device_count" not in env.get("XLA_FLAGS", ""):
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={devices}").strip()
+    r = subprocess.run([sys.executable, os.path.abspath(script_file),
+                        "--sharded-only"] + script_args,
+                       capture_output=True, text=True, env=env)
+    if r.returncode != 0:
+        print(f"sharded axis failed:\n{r.stderr[-2000:]}")
+        return None
+    print("\n".join(l for l in r.stdout.splitlines()
+                    if not l.startswith("RESULT ")))
+    lines = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")]
+    if not lines:
+        print("sharded axis produced no RESULT line")
+        return None
+    return json.loads(lines[0][len("RESULT "):]) or None

@@ -11,7 +11,14 @@ TPU time):
     quantity PIM storage actually improves (paper Fig 7);
   * the head-to-head vs the seed per-token Python loop
     (``generate_reference``) at batch 4, prompt 64, 32 new tokens — the
-    dispatch-overhead tax the tentpole removes.
+    dispatch-overhead tax the tentpole removes;
+  * the ``--devices N`` axis: the INT8 engine single-device vs
+    tensor-sharded over an N-virtual-device ``"model"`` mesh
+    (``--xla_force_host_platform_device_count``), recording tokens/sec AND
+    weight-bytes-streamed-per-device — on real hardware the per-device
+    weight stream is what bounds memory-bound decode, so its 1/N drop is
+    the PiCaSO scaling story (virtual CPU devices share one socket, so the
+    tokens/sec column is a collectives-overhead proxy, not a speedup).
 
 Writes ``BENCH_decode.json`` (repo root) for the PR-over-PR perf trajectory.
 Run: ``python benchmarks/decode_bench.py`` (add ``--quick`` for CI smoke).
@@ -113,15 +120,61 @@ def bench_fastpath_vs_seed(arch: str, batch: int, prompt_len: int, n_new: int,
     return out
 
 
+def bench_sharded(archs, batch: int, prompt_len: int, n_new: int, reps: int,
+                  devices: int):
+    """The multi-device axis: the INT8 engine on one device vs tensor-
+    sharded over a ``devices``-wide 'model' mesh — tokens/sec plus the
+    weight bytes ONE device holds/streams per token (total and per-device
+    must differ by ~devices x for the distributed leaves)."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serving import ServingEngine, make_decode_mesh, pim_bytes
+
+    if len(jax.devices()) < devices:
+        print(f"only {len(jax.devices())} devices visible; skipping the "
+              f"--devices {devices} axis (set XLA_FLAGS before any jax import)")
+        return []
+    mesh = make_decode_mesh(devices)
+    rows = []
+    for arch in archs:
+        cfg = get_reduced(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        prompt = jax.random.randint(
+            jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab)
+        for dc in (1, devices):
+            eng = ServingEngine(cfg, params, max_seq=prompt_len + n_new,
+                                pim_bits=8, mesh=None if dc == 1 else mesh)
+            dt = _timed(lambda: eng.generate(prompt, n_new=n_new), reps)
+            rows.append({
+                "arch": arch,
+                "devices": dc,
+                "tokens_per_sec": batch * n_new / dt,
+                "weight_bytes_total": pim_bytes(eng.params),
+                "weight_bytes_per_device": pim_bytes(eng.params,
+                                                     per_device=True),
+            })
+            r = rows[-1]
+            print(f"{arch:16s} devices={dc}  {r['tokens_per_sec']:10.1f} tok/s"
+                  f"  {r['weight_bytes_per_device']/1e6:8.3f} MB weights/device")
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="width of the sharded-decode mesh axis (runs in a "
+                    "subprocess with that many virtual host devices; "
+                    "0/1 disables)")
     ap.add_argument("--out", default=str(_ROOT / "BENCH_decode.json"))
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: one arch, tiny shapes")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help=argparse.SUPPRESS)  # subprocess entry point
     args = ap.parse_args(argv)
 
     if args.quick:
@@ -130,17 +183,34 @@ def main(argv=None) -> None:
         archs, batch, prompt, new, reps = (ARCHS, args.batch, args.prompt,
                                            args.new_tokens, args.reps)
 
+    if args.sharded_only:
+        rows = bench_sharded(archs, batch, prompt, new, reps, args.devices)
+        print("RESULT " + json.dumps(rows))
+        return
+
     import jax
 
     result = {
         "bench": "decode_fastpath",
         "backend": jax.default_backend(),
         "note": ("reduced configs on CPU are a dispatch-overhead proxy; "
-                 "weight_bytes_per_token is the HBM quantity PIM improves"),
+                 "weight_bytes_per_token is the HBM quantity PIM improves; "
+                 "sharded.weight_bytes_per_device is what the mesh divides"),
         "grid": bench_grid(archs, batch, prompt, new, reps),
         "fastpath_vs_seed": bench_fastpath_vs_seed(
             archs[0], batch, prompt, new, reps),
     }
+    if args.devices > 1:
+        from bench_subproc import run_sharded_subprocess
+
+        sub_args = ["--devices", str(args.devices), "--batch", str(args.batch),
+                    "--prompt", str(args.prompt),
+                    "--new-tokens", str(args.new_tokens),
+                    "--reps", str(args.reps)] + (
+                        ["--quick"] if args.quick else [])
+        rows = run_sharded_subprocess(__file__, sub_args, args.devices)
+        if rows:
+            result["sharded"] = {"devices": args.devices, "grid": rows}
     out_path = Path(args.out)
     out_path.write_text(json.dumps(result, indent=2))
     print(f"wrote {out_path}")

@@ -17,8 +17,12 @@ numbers are what matter):
 
 Writes ``BENCH_serving.json`` (repo root): tokens/sec for both engines, the
 speedup, and the cache-memory comparison (dense preallocation vs pool bytes
-vs peak live page bytes).  Run ``python benchmarks/serving_bench.py``
-(``--smoke`` for CI).
+vs peak live page bytes).  ``--devices N`` adds the tensor-sharded axis: the
+INT8 continuous engine on one device vs sharded over an N-virtual-device
+``"model"`` mesh, recording tokens/sec and weight-bytes-per-device (the
+quantity the mesh divides; virtual CPU devices share one socket, so
+tokens/sec is a collectives-overhead proxy).  Run
+``python benchmarks/serving_bench.py`` (``--smoke`` for CI).
 """
 from __future__ import annotations
 
@@ -54,6 +58,18 @@ def make_trace(n_requests: int, mean_prompt: int, mean_new: int,
         prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
         reqs.append(Request(prompt=prompt, max_new=max_new))
     return reqs
+
+
+def pool_geometry(slots: int, page_size: int, max_prompt: int,
+                  max_new_cap: int, pool_frac: float) -> tuple[int, int]:
+    """(max_seq, num_pages) — ONE formula for the main comparison and the
+    --devices axis, so the two sections of BENCH_serving.json always
+    benchmark the same pool."""
+    max_seq = max_prompt + max_new_cap
+    max_seq += -max_seq % page_size
+    width = max_seq // page_size
+    num_pages = max(width + 2, int(pool_frac * slots * width)) + 1
+    return max_seq, num_pages
 
 
 def tree_bytes(shape_tree) -> int:
@@ -108,10 +124,8 @@ def bench(arch: str, n_requests: int, slots: int, page_size: int, chunk: int,
     requests = make_trace(n_requests, mean_prompt, mean_new, max_prompt,
                           max_new_cap, cfg.vocab, seed,
                           long_frac=long_frac, mean_new_long=mean_new_long)
-    max_seq = max_prompt + max_new_cap
-    max_seq += -max_seq % page_size
-    width = max_seq // page_size
-    num_pages = max(width + 2, int(pool_frac * slots * width)) + 1
+    max_seq, num_pages = pool_geometry(slots, page_size, max_prompt,
+                                       max_new_cap, pool_frac)
 
     fixed = ServingEngine(cfg, params, max_seq=max_seq)
     cont = ContinuousBatchingEngine(
@@ -174,6 +188,46 @@ def bench(arch: str, n_requests: int, slots: int, page_size: int, chunk: int,
     }
 
 
+def bench_sharded(arch: str, requests, slots: int, page_size: int, chunk: int,
+                  max_seq: int, num_pages: int, devices: int) -> dict:
+    """Continuous engine, INT8 weights, single-device vs mesh-sharded on the
+    SAME trace: tokens/sec per device count + the per-device weight bytes."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serving import (ContinuousBatchingEngine, make_decode_mesh,
+                               pim_bytes)
+
+    if len(jax.devices()) < devices:
+        print(f"only {len(jax.devices())} devices visible; skipping the "
+              f"--devices {devices} axis")
+        return {}
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mesh = make_decode_mesh(devices)
+    rows = []
+    for dc in (1, devices):
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=slots, max_seq=max_seq, page_size=page_size,
+            num_pages=num_pages, chunk=chunk, pim_bits=8,
+            mesh=None if dc == 1 else mesh)
+        run_continuous(eng, requests)  # warm/compile
+        t0 = time.perf_counter()
+        useful = run_continuous(eng, requests)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "devices": dc,
+            "useful_tokens": useful,
+            "tokens_per_sec": useful / dt,
+            "weight_bytes_total": pim_bytes(eng.params),
+            "weight_bytes_per_device": pim_bytes(eng.params, per_device=True),
+        })
+        print(f"sharded devices={dc}: {rows[-1]['tokens_per_sec']:10.1f} "
+              f"useful tok/s, "
+              f"{rows[-1]['weight_bytes_per_device']/1e6:.3f} MB/device")
+    return {"devices": devices, "grid": rows}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -193,9 +247,15 @@ def main(argv=None) -> None:
     ap.add_argument("--no-scale", action="store_true",
                     help="use the raw reduced config (per-step compute "
                     "too small to be representative)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="width of the sharded-decode mesh axis (runs in a "
+                    "subprocess with that many virtual host devices; "
+                    "0/1 disables)")
     ap.add_argument("--out", default=str(_ROOT / "BENCH_serving.json"))
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: tiny trace, tiny shapes")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help=argparse.SUPPRESS)  # subprocess entry point
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -212,6 +272,27 @@ def main(argv=None) -> None:
                   pool_frac=args.pool_frac, seed=args.seed,
                   scale=not args.no_scale)
 
+    if args.sharded_only:
+        from repro.configs import get_reduced
+
+        max_seq, num_pages = pool_geometry(kw["slots"], kw["page_size"],
+                                           kw["max_prompt"], kw["max_new_cap"],
+                                           kw["pool_frac"])
+
+        # Same trace as the main comparison, on the raw reduced config
+        # (the scaled-up config exists to drown dispatch overhead, which
+        # the 1-vs-N comparison does not need).
+        requests = make_trace(
+            kw["n_requests"], kw["mean_prompt"], kw["mean_new"],
+            kw["max_prompt"], kw["max_new_cap"],
+            get_reduced(args.arch).vocab, kw["seed"],
+            long_frac=kw["long_frac"], mean_new_long=kw["mean_new_long"])
+        sharded = bench_sharded(
+            args.arch, requests, kw["slots"], kw["page_size"], kw["chunk"],
+            max_seq, num_pages, args.devices)
+        print("RESULT " + json.dumps(sharded))
+        return
+
     import jax
 
     row = bench(args.arch, **kw)
@@ -221,9 +302,30 @@ def main(argv=None) -> None:
         "note": ("reduced config on CPU: tokens/sec measures scheduling "
                  "efficiency (useful tokens vs ride-along waste); "
                  "peak_live_cache_bytes is the paged pool's high-water mark "
-                 "vs the dense B*max_seq preallocation"),
+                 "vs the dense B*max_seq preallocation; "
+                 "sharded.weight_bytes_per_device is what the mesh divides"),
         **row,
     }
+    if args.devices > 1:
+        from bench_subproc import run_sharded_subprocess
+
+        sub_args = ["--arch", args.arch, "--devices", str(args.devices),
+                    "--seed", str(args.seed)] + (
+                        ["--smoke"] if args.smoke else [
+                            "--requests", str(args.requests),
+                            "--slots", str(args.slots),
+                            "--page-size", str(args.page_size),
+                            "--chunk", str(args.chunk),
+                            "--mean-prompt", str(args.mean_prompt),
+                            "--mean-new", str(args.mean_new),
+                            "--mean-new-long", str(args.mean_new_long),
+                            "--long-frac", str(args.long_frac),
+                            "--max-prompt", str(args.max_prompt),
+                            "--max-new-cap", str(args.max_new_cap),
+                            "--pool-frac", str(args.pool_frac)])
+        sharded = run_sharded_subprocess(__file__, sub_args, args.devices)
+        if sharded:  # None/{} when the subprocess saw too few devices
+            result["sharded"] = sharded
     Path(args.out).write_text(json.dumps(result, indent=2))
     fx, ct = result["fixed_batch"], result["continuous"]
     print(f"fixed batch : {fx['tokens_per_sec']:10.1f} useful tok/s "

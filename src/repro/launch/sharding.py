@@ -10,6 +10,28 @@ Strategy (DESIGN.md §6):
     group->expert, which GSPMD lowers to the canonical all-to-all pair;
   * decode caches: batch over (pod, data) when divisible, else KV-heads over
     'model' with the sequence dim over 'data' (long_500k, batch=1).
+
+Decode-time specs (serving engines; quant.decode_partition_spec derives the
+weight side from ``param_spec`` so train and decode stay cross-checked):
+
+  leaf                              spec                       rationale
+  ------------------------------    -----------------------   -------------
+  quantized codes/scale (wq, wk,    (..., 'model')             output-column
+    wv, wo, gate/up/down, head,                                shard: exact
+    w_dkv, w_uk/w_uv, in/out_proj)                             all-gather
+  int4 / tp marker leaves           replicated                 stack dims only
+  dense leaves (embed, norms,       replicated                 gathered or
+    router, biases, conv, A_log)                               tiny
+  dense KV cache k/v                batch over 'data'          slots are the
+  paged pool k/v / scales / c/kr    pages over 'data'          batch analogue
+  block_tables                      replicated                 every device
+                                                               resolves pages
+  per-slot SSM h / conv state       batch over 'data'          O(1) per slot
+  token state (tok/pos/done/...)    replicated                 scheduler carry
+
+On the engines' 1-D 'model' mesh there is no 'data' axis, so every cache
+row above replicates (``sanitize`` drops absent/non-dividing axes) — the
+weight shards are the point; the cache is tiny next to the weight stream.
 """
 from __future__ import annotations
 
@@ -189,6 +211,72 @@ def cache_shardings(mesh, cache_shape, cfg: ModelConfig, shape: ShapeConfig):
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map_with_path(conv, cache_shape)
+
+
+def paged_cache_pspecs(cache_shape, cfg: ModelConfig = None,
+                       data_axis: str = "data"):
+    """Decode-time PartitionSpecs for an ``init_paged_cache`` tree (see the
+    module docstring's decode spec table).
+
+    The page-pool leaves are the batch analogue of the dense cache: pages
+    belong to live requests, so the pool dim shards over the data axis while
+    heads/positions stay whole.  ``block_tables`` replicate — the host
+    rewrites them at chunk boundaries and every device must resolve any
+    slot's page ids.  Per-slot SSM/conv state batch-shards over data; the
+    batch dim of ``h`` sits below a version-dependent payload (mamba1
+    ``(B, d_in, N)``, mamba2 ``(B, nh, hd, N)``), so pass ``cfg`` for
+    hybrid/ssm trees — without it mamba2 state is assumed.  Leaf ranks
+    include any leading layer/group stack dims (left-padded with None, same
+    convention as ``param_spec``)."""
+    h_payload = 3 if (cfg is not None and cfg.ssm
+                      and cfg.ssm.version == 1) else 4
+
+    def _slot_state(nd: int, payload: int):
+        lead = max(nd - payload, 0)
+        return (None,) * lead + (data_axis,) + (None,) * (nd - lead - 1)
+
+    def conv(path, leaf):
+        name = _names(path)[-1]
+        nd = leaf.ndim
+        if name == "block_tables":
+            return P(*(None,) * nd)
+        if name in ("k", "v"):  # (..., P, KV, page, D)
+            spec = (None,) * (nd - 4) + (data_axis, None, None, None)
+        elif name in ("k_scale", "v_scale"):  # (..., P, KV, page)
+            spec = (None,) * (nd - 3) + (data_axis, None, None)
+        elif name in ("c", "kr"):  # (..., P, page, rank)
+            spec = (None,) * (nd - 3) + (data_axis, None, None)
+        elif name == "h":  # per-slot state (..., B, *payload)
+            spec = _slot_state(nd, h_payload)
+        elif name == "conv":  # per-slot state (..., B, K-1, C)
+            spec = _slot_state(nd, 3)
+        else:
+            spec = (None,) * nd
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(conv, cache_shape)
+
+
+def paged_cache_shardings(mesh, cache_shape, cfg: ModelConfig = None,
+                          data_axis: str = "data"):
+    """``paged_cache_pspecs`` as NamedShardings on ``mesh``, with axes the
+    mesh lacks (or that do not divide) dropped via ``sanitize``.
+
+    For callers placing a paged cache on a (data, model) mesh explicitly —
+    the serving engines themselves don't call this: their 1-D 'model' mesh
+    has no data axis, so their caches replicate via shard_map P() specs,
+    which is exactly what this function degenerates to there."""
+    axes = set(mesh.axis_names)
+
+    def conv(spec):
+        kept = tuple(
+            (e if (e is None or e in axes) else None) for e in spec)
+        return NamedSharding(mesh, P(*kept))
+
+    specs = paged_cache_pspecs(cache_shape, cfg, data_axis)
+    return sanitize(jax.tree.map(conv, specs,
+                                 is_leaf=lambda x: isinstance(x, P)),
+                    cache_shape)
 
 
 def replicated(mesh):

@@ -167,6 +167,7 @@ def attn_prefill(
     head_dim: int,
     rope_theta: float = 0.0,
     kv_chunk: int = KV_CHUNK,
+    pages: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Single-pass prefill: full-sequence causal attention that also writes
     all S prompt tokens' K/V into the preallocated decode cache at once.
@@ -176,6 +177,12 @@ def attn_prefill(
     dominate the memory-bound regime.  Numerics match the per-token path:
     with an int8 cache the prompt attends against the quantize->dequantize
     K/V, i.e. exactly what later decode steps will read back.
+
+    With ``pages`` (n,) the cache is a PAGED pool (``paged_kv_cache_init``
+    leaves) and x must be batch-1 with ``S == n * page_size``: the prompt's
+    K/V scatter straight into the slot's pool pages — the admit path writes
+    pages directly instead of round-tripping a temporary dense cache
+    through ``models.paged_insert``.
     """
     b, s, _ = x.shape
     q = _split_heads(linear(x, p["wq"], p.get("bq")), n_heads, head_dim)
@@ -187,7 +194,35 @@ def attn_prefill(
         k = apply_rope(k, positions, rope_theta)
     k_t = k.transpose(0, 2, 1, 3)  # (B, KV, S, D) — the cache layout
     v_t = v.transpose(0, 2, 1, 3)
-    if "k_scale" in cache:
+
+    if pages is not None:
+        n, ps = pages.shape[0], cache["k"].shape[2]
+
+        def to_pages(t):  # (1, KV, n*ps, ...) -> (n, KV, ps, ...)
+            t = t[0].reshape((t.shape[1], n, ps) + t.shape[3:])
+            return jnp.moveaxis(t, 1, 0)
+
+        if "k_scale" in cache:
+            k_codes, k_sc = _quant_kv(k_t)
+            v_codes, v_sc = _quant_kv(v_t)
+            new_cache = {
+                "k": cache["k"].at[pages].set(to_pages(k_codes)),
+                "v": cache["v"].at[pages].set(to_pages(v_codes)),
+                "k_scale": cache["k_scale"].at[pages].set(to_pages(k_sc)),
+                "v_scale": cache["v_scale"].at[pages].set(to_pages(v_sc)),
+            }
+            k = (k_codes.astype(x.dtype)
+                 * k_sc[..., None].astype(x.dtype)).transpose(0, 2, 1, 3)
+            v = (v_codes.astype(x.dtype)
+                 * v_sc[..., None].astype(x.dtype)).transpose(0, 2, 1, 3)
+        else:
+            new_cache = {
+                "k": cache["k"].at[pages].set(
+                    to_pages(k_t).astype(cache["k"].dtype)),
+                "v": cache["v"].at[pages].set(
+                    to_pages(v_t).astype(cache["v"].dtype)),
+            }
+    elif "k_scale" in cache:
         k_codes, k_sc = _quant_kv(k_t)
         v_codes, v_sc = _quant_kv(v_t)
         new_cache = {

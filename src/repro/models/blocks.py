@@ -44,12 +44,13 @@ def dense_block_apply(p, x, cfg: ModelConfig, causal: bool = True):
     return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
 
 
-def dense_block_prefill(p, x, cache, cfg: ModelConfig):
-    """Single-pass prefill: full-seq attention that also fills the KV cache."""
+def dense_block_prefill(p, x, cache, cfg: ModelConfig, pages=None):
+    """Single-pass prefill: full-seq attention that also fills the KV cache
+    (dense, or a paged pool's pages when ``pages`` is given)."""
     h, cache = attn_prefill(
         p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cache,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
-        rope_theta=cfg.rope_theta, kv_chunk=cfg.kv_chunk,
+        rope_theta=cfg.rope_theta, kv_chunk=cfg.kv_chunk, pages=pages,
     )
     x = x + h
     return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps)), cache
@@ -106,15 +107,17 @@ def moe_block_apply(p, x, cfg: ModelConfig):
     return x + y, aux
 
 
-def moe_block_prefill(p, x, cache, cfg: ModelConfig):
+def moe_block_prefill(p, x, cache, cfg: ModelConfig, pages=None):
     xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.mla:
         h, cache = mla_prefill(p["attn"], xin, cache, n_heads=cfg.n_heads,
-                               m=cfg.mla, rope_theta=cfg.rope_theta)
+                               m=cfg.mla, rope_theta=cfg.rope_theta,
+                               pages=pages)
     else:
         h, cache = attn_prefill(p["attn"], xin, cache, n_heads=cfg.n_heads,
                                 n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
-                                rope_theta=cfg.rope_theta, kv_chunk=cfg.kv_chunk)
+                                rope_theta=cfg.rope_theta, kv_chunk=cfg.kv_chunk,
+                                pages=pages)
     x = x + h
     y, _ = moe_apply(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.moe)
     return x + y, cache
@@ -163,10 +166,21 @@ def ssm_block_apply(p, x, cfg: ModelConfig):
     return x + f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cfg.ssm)
 
 
-def ssm_block_prefill(p, x, cache, cfg: ModelConfig, length=None):
+def ssm_block_prefill(p, x, cache, cfg: ModelConfig, length=None, slot=None):
+    """SSM prefill.  With ``slot``, ``cache`` is the PER-SLOT state of the
+    paged engine (leading batch dim = slots): the batch-1 prompt runs from a
+    zero state and the carried state lands in row ``slot`` directly — the
+    SSM half of the direct admit path."""
     f = mb.mamba1_prefill if cfg.ssm.version == 1 else mb.mamba2_prefill
-    y, cache = f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cache, cfg.ssm,
-                 length=length)
+    xin = rmsnorm(x, p["ln"], cfg.norm_eps)
+    if slot is None:
+        y, cache = f(p["ssm"], xin, cache, cfg.ssm, length=length)
+        return x + y, cache
+    c1 = jax.tree.map(lambda a: jnp.zeros_like(a[:1]), cache)
+    y, c1 = f(p["ssm"], xin, c1, cfg.ssm, length=length)
+    cache = jax.tree.map(
+        lambda full, one: full.at[slot].set(one[0].astype(full.dtype)),
+        cache, c1)
     return x + y, cache
 
 

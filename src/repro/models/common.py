@@ -30,6 +30,12 @@ def split_keys(key, n):
 MATVEC_MAX_M = 8
 _MATVEC_DISPATCH = "auto"
 
+# Named mesh axis the decode-sharding subsystem (serving.sharded) partitions
+# quantized weights over.  A quantized leaf carrying the "tp" marker holds
+# only this device's shard of codes/scale along the OUTPUT (last) dim;
+# ``linear``/``dq`` must then run inside shard_map over a mesh with this axis.
+TP_AXIS = "model"
+
 
 def set_matvec_dispatch(mode: str) -> str:
     """Set the pim_matvec dispatch mode; returns the previous mode.
@@ -84,12 +90,28 @@ def linear(x: jnp.ndarray, w, b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     calls (<= MATVEC_MAX_M activation rows, 2-D weight) route through the
     epilogue-fused kernels.pim_matvec (the 'overhaul' path) when the
     dispatch mode allows it — see ``set_matvec_dispatch``.
+
+    A leaf carrying the ``"tp"`` marker (serving.sharded) holds only this
+    device's columns: the contraction runs weight-stationary on the local
+    shard (full K, N/devices outputs — the matvec kernel dispatch applies
+    per-shard), then ONE all-gather of the tiny activation tile along
+    ``TP_AXIS`` reassembles the full output.  Gathering output columns is a
+    pure concatenation, so sharded decode stays bit-identical to
+    single-device decode — a K-sharded psum would reorder the float
+    contraction.  The (replicated) bias is added after the gather.
     """
     if isinstance(w, dict) and "codes" in w:
-        if (w["codes"].ndim == 2 and _matvec_enabled()
-                and math.prod(x.shape[:-1]) <= MATVEC_MAX_M):
-            return _linear_matvec(x, w, b)
-        y = x @ dq(w, x.dtype)
+        tp = "tp" in w
+        matvec = (w["codes"].ndim == 2 and _matvec_enabled()
+                  and math.prod(x.shape[:-1]) <= MATVEC_MAX_M)
+        if matvec:
+            y = _linear_matvec(x, w, None if tp else b)
+            if not tp:
+                return y  # bias already fused in the kernel epilogue
+        else:
+            y = x @ _dq_local(w, x.dtype)
+        if tp:
+            y = jax.lax.all_gather(y, TP_AXIS, axis=y.ndim - 1, tiled=True)
     else:
         y = x @ w
     if b is not None:
@@ -122,7 +144,25 @@ def dq(w, dtype=None) -> jnp.ndarray:
     'nibbles_odd' marker flags an odd true K — the zero pad row added by
     ``serving.quantize_tree`` before packing is dropped after unpack (a
     static slice, so this stays scan/jit-safe).
+
+    A ``"tp"``-marked leaf (serving.sharded) dequantizes its local column
+    shard and all-gathers the FULL dense weight along ``TP_AXIS`` — the
+    exactness escape hatch for consumers that contract a quantized leaf in
+    an einsum instead of ``linear`` (MoE expert stacks, MLA absorbed
+    W_uk/W_uv): per-device HBM still streams only the 1/devices shard, and
+    the gathered weight is a bit-exact concatenation, so the downstream
+    einsum is identical to the single-device one.
     """
+    out = _dq_local(w, dtype)
+    if isinstance(w, dict) and "tp" in w:
+        out = jax.lax.all_gather(out, TP_AXIS, axis=out.ndim - 1, tiled=True)
+    return out
+
+
+def _dq_local(w, dtype=None) -> jnp.ndarray:
+    """``dq`` without the tensor-parallel gather: a tp-marked leaf yields its
+    local column shard (what ``linear`` contracts before its activation
+    all-gather)."""
     if isinstance(w, dict) and "codes" in w:
         codes = w["codes"]
         if "nibbles" in w or "nibbles_odd" in w:

@@ -256,6 +256,8 @@ def prefill(
     cache: dict,
     extras: Optional[dict] = None,
     length=None,  # scalar int32: true prompt length for right-padded prompts
+    pages=None,  # (n,) int32 pool page ids: write a paged cache directly
+    slot=None,  # scalar int32: per-slot state row (SSM/conv) for paged admit
 ) -> tuple[jnp.ndarray, dict]:
     """Single-pass prefill: lowers the full-sequence forward ONCE over the
     whole prompt while filling the decode cache for all S positions.
@@ -271,6 +273,14 @@ def prefill(
     pads for the valid positions' logits and their K/V rows are overwritten
     or masked downstream, but SSM/conv state is sequential — ``length``
     masks pad steps so the carried state equals an unpadded prefill.
+
+    With ``pages``/``slot``, ``cache`` is a PAGED tree (``init_paged_cache``)
+    and ``tokens`` must be batch-1 with ``S == len(pages) * page_size``: the
+    prompt's K/V (or MLA latents) scatter straight into the slot's pool
+    pages and SSM/conv state lands in its per-slot row — the admit half of
+    the continuous-batching scheduler without the temporary dense cache
+    round-trip that ``models.paged_insert`` needed (paged_insert survives as
+    the reference implementation for the equivalence test).
     """
     extras = extras or {}
     fam = cfg.family
@@ -280,25 +290,27 @@ def prefill(
     if fam == "dense":
         x, cs = _scan_cached(
             params["layers"], cache["layers"], x,
-            lambda lp, h, c: bk.dense_block_prefill(lp, h, c, cfg),
+            lambda lp, h, c: bk.dense_block_prefill(lp, h, c, cfg, pages=pages),
         )
         new_cache["layers"] = cs
     elif fam == "moe":
         if params.get("dense_layers") is not None:
             x, cs = _scan_cached(
                 params["dense_layers"], cache["dense_layers"], x,
-                lambda lp, h, c: bk.dense_block_prefill(lp, h, c, cfg),
+                lambda lp, h, c: bk.dense_block_prefill(lp, h, c, cfg,
+                                                        pages=pages),
             )
             new_cache["dense_layers"] = cs
         x, cs = _scan_cached(
             params["layers"], cache["layers"], x,
-            lambda lp, h, c: bk.moe_block_prefill(lp, h, c, cfg),
+            lambda lp, h, c: bk.moe_block_prefill(lp, h, c, cfg, pages=pages),
         )
         new_cache["layers"] = cs
     elif fam == "ssm":
         x, cs = _scan_cached(
             params["layers"], cache["layers"], x,
-            lambda lp, h, c: bk.ssm_block_prefill(lp, h, c, cfg, length=length),
+            lambda lp, h, c: bk.ssm_block_prefill(lp, h, c, cfg, length=length,
+                                                  slot=slot),
         )
         new_cache["layers"] = cs
     elif fam == "hybrid":
@@ -309,9 +321,11 @@ def prefill(
             h, ssm_new = _scan_cached(
                 gp, sc, h,
                 lambda lp, hh, cc: bk.ssm_block_prefill(lp, hh, cc, cfg,
-                                                        length=length)
+                                                        length=length,
+                                                        slot=slot)
             )
-            h, attn_new = bk.dense_block_prefill(shared, h, ac, cfg)
+            h, attn_new = bk.dense_block_prefill(shared, h, ac, cfg,
+                                                 pages=pages)
             return h, (ssm_new, attn_new)
 
         x, (ssm_cs, attn_cs) = jax.lax.scan(
@@ -322,7 +336,8 @@ def prefill(
             x, cs = _scan_cached(
                 params["tail"], cache["tail"], x,
                 lambda lp, h, c: bk.ssm_block_prefill(lp, h, c, cfg,
-                                                      length=length),
+                                                      length=length,
+                                                      slot=slot),
             )
             new_cache["tail"] = cs
     elif fam == "vlm":
@@ -332,7 +347,8 @@ def prefill(
             gp, c = xs
             h, cs = _scan_cached(
                 gp["self"], c, h,
-                lambda lp, hh, cc: bk.dense_block_prefill(lp, hh, cc, cfg),
+                lambda lp, hh, cc: bk.dense_block_prefill(lp, hh, cc, cfg,
+                                                          pages=pages),
             )
             h = bk.cross_block_apply(gp["cross"], h, img, cfg)
             return h, cs
@@ -346,7 +362,7 @@ def prefill(
             hh, c_new = attn_prefill(
                 lp["self"], rmsnorm(h, lp["ln1"], cfg.norm_eps), c,
                 n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
-                rope_theta=cfg.rope_theta,
+                rope_theta=cfg.rope_theta, pages=pages,
             )
             h = h + hh
             hh = attn_apply(
@@ -496,8 +512,12 @@ def paged_insert(cfg: ModelConfig, paged: dict, dense: dict, slot,
     """Insert a freshly prefilled batch-1 dense cache into the paged cache:
     sequence leaves (attention K/V, MLA latents) are scattered into pool
     pages ``pages`` (n,) — the slot's block-table entries — and per-slot
-    state leaves (SSM h / conv tail) are copied into row ``slot``.  The
-    admit half of the continuous-batching scheduler."""
+    state leaves (SSM h / conv tail) are copied into row ``slot``.
+
+    No longer on the serving hot path: admit now prefills STRAIGHT into the
+    pages (``prefill(pages=, slot=)``).  Kept as the independent reference
+    implementation the direct path is checked against byte-for-byte
+    (tests/test_sharded_decode.py::test_direct_admit_matches_paged_insert_reference)."""
     fam = cfg.family
     out = dict(paged)
     if fam == "dense":

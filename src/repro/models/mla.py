@@ -41,10 +41,16 @@ def mla_apply(p, x, *, n_heads: int, m: MLAConfig, rope_theta: float) -> jnp.nda
 
 
 # ---------------------------------------------------------------- prefill ---
-def mla_prefill(p, x, cache, *, n_heads: int, m: MLAConfig, rope_theta: float):
+def mla_prefill(p, x, cache, *, n_heads: int, m: MLAConfig, rope_theta: float,
+                pages=None):
     """Single-pass prefill: full-sequence MLA that also fills the latent
     cache for all S prompt positions at once (rope-applied ``kr``, raw ``c``
-    — the exact storage ``mla_decode`` reads back)."""
+    — the exact storage ``mla_decode`` reads back).
+
+    With ``pages`` (n,) the cache is a paged latent pool
+    (``mla_paged_cache_init``) and x must be batch-1 with
+    ``S == n * page_size``: the latents scatter straight into the slot's
+    pool pages (the direct admit path — no dense round-trip)."""
     b, s, _ = x.shape
     qh = m.qk_nope_dim + m.qk_rope_dim
     q = linear(x, p["wq"]).reshape(b, s, n_heads, qh)
@@ -55,12 +61,21 @@ def mla_prefill(p, x, cache, *, n_heads: int, m: MLAConfig, rope_theta: float):
     q_rope = apply_rope(q_rope, pos, rope_theta)
     k_rope = apply_rope(k_rope[:, :, None, :], pos, rope_theta)  # (B,S,1,rope)
 
-    new_cache = {
-        "c": jax.lax.dynamic_update_slice(
-            cache["c"], c.astype(cache["c"].dtype), (0, 0, 0)),
-        "kr": jax.lax.dynamic_update_slice(
-            cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype), (0, 0, 0)),
-    }
+    if pages is not None:
+        n, ps = pages.shape[0], cache["c"].shape[1]
+        new_cache = {
+            "c": cache["c"].at[pages].set(
+                c[0].reshape(n, ps, -1).astype(cache["c"].dtype)),
+            "kr": cache["kr"].at[pages].set(
+                k_rope[0, :, 0, :].reshape(n, ps, -1).astype(cache["kr"].dtype)),
+        }
+    else:
+        new_cache = {
+            "c": jax.lax.dynamic_update_slice(
+                cache["c"], c.astype(cache["c"].dtype), (0, 0, 0)),
+            "kr": jax.lax.dynamic_update_slice(
+                cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype), (0, 0, 0)),
+        }
 
     k_nope = jnp.einsum("bsc,hcd->bshd", c, dq(p["w_uk"], c.dtype))
     v = jnp.einsum("bsc,hcd->bshd", c, dq(p["w_uv"], c.dtype))

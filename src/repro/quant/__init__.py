@@ -8,6 +8,7 @@ matmul kernel — cutting HBM traffic by 16/B.
 """
 from .quantize import (
     QuantizedTensor,
+    decode_partition_spec,
     dequantize,
     from_bitplanes,
     pack_int4,
@@ -24,4 +25,5 @@ __all__ = [
     "unpack_int4",
     "to_bitplanes",
     "from_bitplanes",
+    "decode_partition_spec",
 ]

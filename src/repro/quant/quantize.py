@@ -1,9 +1,12 @@
-"""Symmetric per-channel weight quantization + bit-plane / nibble packing."""
+"""Symmetric per-channel weight quantization + bit-plane / nibble packing,
+plus the decode-time PartitionSpec derivation for sharding quantized leaves
+over a tensor-parallel mesh (see :func:`decode_partition_spec`)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 
 @dataclass
@@ -68,6 +71,58 @@ def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
     k2 = packed.shape[0]
     out = jnp.stack([lo, hi], axis=1).reshape((2 * k2,) + packed.shape[1:])
     return out.astype(jnp.int8)
+
+
+# ------------------------------------------------------- decode sharding ----
+# Sentinel FSDP axis fed to launch.sharding.param_spec so the train-time rule
+# reveals every dim it shards (batch axes included), not just 'model'.
+_FSDP_SENTINEL = "fsdp"
+
+
+def _train_axes(path_names: list[str], ndim: int) -> set:
+    """The set of named axes the TRAIN-time rule puts on this leaf."""
+    from repro.launch.sharding import param_spec
+
+    axes: set = set()
+    for entry in param_spec(path_names, ndim, _FSDP_SENTINEL):
+        if entry is None:
+            continue
+        axes.update(entry if isinstance(entry, tuple) else (entry,))
+    return axes
+
+
+def decode_partition_spec(path_names: list[str], ndim: int,
+                          axis: str = "model") -> P:
+    """Decode-time PartitionSpec for a quantized weight leaf.
+
+    The WHICH question — which leaves are worth distributing — is answered
+    by the train-time rule (:func:`repro.launch.sharding.param_spec`): a
+    leaf the trainer shards somewhere (tensor-parallel over 'model' or FSDP
+    over the batch axes) is a real matmul weight whose bytes dominate the
+    decode stream; a leaf the trainer replicates (router, norms, x_proj,
+    conv kernels, SSM dynamics params) stays replicated at decode too.
+    Deriving from ``param_spec`` instead of a second name table keeps the
+    train-time and decode-time spec sets cross-checked — a new weight name
+    added to one rule cannot silently diverge in the other
+    (tests/test_sharded_decode.py asserts the correspondence per family).
+
+    The WHERE question has a decode-specific answer: ``axis`` always lands
+    on the LAST (output) dim, whatever dim the trainer shards.  Decode must
+    be token-identical to the single-device engines, and only
+    output-column sharding is exact — each column's contraction runs over
+    the full K locally and the all-gather is pure concatenation.  The
+    train-time placements (K-dim for wo/down, expert-dim for MoE) would
+    need a psum whose float reassociation can flip greedy argmax at
+    near-ties.
+
+    Codes, scales, and int4 packing markers all follow this one spec: codes
+    and scale both carry N on their last dim (int4 packs along K, never N),
+    and the marker leaves hold only leading stack dims, so the returned
+    spec left-truncates to a pure-replication spec for them.
+    """
+    if not _train_axes(path_names, ndim):
+        return P(*(None,) * ndim)
+    return P(*((None,) * (ndim - 1) + (axis,)))
 
 
 def to_bitplanes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:

@@ -1,5 +1,6 @@
 """Serving substrate: PIM weight conversion + fixed-batch and
-continuous-batching (paged KV cache) engines."""
+continuous-batching (paged KV cache) engines, both optionally tensor-sharded
+over a 1-D ``"model"`` mesh (``serving.sharded``)."""
 from .engine import (
     ContinuousBatchingEngine,
     Request,
@@ -8,8 +9,10 @@ from .engine import (
     pim_bytes,
     quantize_tree,
 )
+from .sharded import make_decode_mesh, shard_quantized_tree, tree_pspecs
 
 __all__ = [
     "ServingEngine", "ContinuousBatchingEngine", "Request", "quantize_tree",
-    "pim_bytes", "mask_after_stop",
+    "pim_bytes", "mask_after_stop", "make_decode_mesh",
+    "shard_quantized_tree", "tree_pspecs",
 ]

@@ -36,8 +36,10 @@ finishes, and the dense cache preallocates ``B * max_seq`` tokens.
 
 * **Scheduler states**: a request is QUEUED until a batch slot and enough
   pages for its (page-aligned) prompt are free; ADMITTED by a batch-1
-  single-pass prefill into a temporary dense cache that is scattered into
-  its pages (``models.paged_insert``) and yields its first token; RUNNING
+  single-pass prefill that writes STRAIGHT into its pool pages and per-slot
+  state row (``models.prefill`` with ``pages``/``slot``; the old dense
+  round-trip survives only as ``models.paged_insert``, the reference for
+  the equivalence test) and yields its first token; RUNNING
   while the jit-compiled decode chunk (``lax.scan`` over ``chunk`` steps,
   per-slot ``pos``/``done``/``n_out`` carried) advances all live slots;
   FINISHED when it emits a stop token or reaches ``max_new``, at which
@@ -47,27 +49,39 @@ finishes, and the dense cache preallocates ``B * max_seq`` tokens.
   (pages freed, requeued for recompute), matching vLLM-style recompute
   preemption.  The host only intervenes at chunk boundaries (admit /
   page top-up / retire); the inner loop stays one compiled program.
+
+Both engines accept ``mesh=`` (a 1-D ``"model"`` mesh, see
+``serving.sharded``): the quantized weight tree is distributed over the
+mesh along output dims and every compiled path — the generate scan, the
+admit prefill, the decode chunk — lowers ONCE under ``shard_map`` with
+weight-stationary local matvecs and a single activation all-gather per
+linear.  Host-side scheduling is untouched (it never sees a device count),
+and greedy decode stays token-identical to the single-device engines
+(tests/test_sharded_decode.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from collections import deque
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import (
     decode_step,
     init_cache,
     init_paged_cache,
-    paged_insert,
     prefill,
 )
 from repro.quant import quantize_symmetric
+from repro.serving.sharded import shard_quantized_tree, tree_pspecs
 
 # Leaves that stay dense: norms/gains/biases/scalars, router (accuracy-
 # critical and tiny), conv kernels, SSM dynamics params.
@@ -75,8 +89,9 @@ _DENSE_KEYS = {"ln", "ln1", "ln2", "ln3", "ln_f", "conv_w", "conv_b", "A_log",
                "dt_bias", "D", "router", "gate_attn", "gate_mlp",
                "bq", "bk", "bv", "scale"}
 
-# int4 packing metadata leaves — markers, not shipped storage.
-_MARKER_KEYS = ("nibbles", "nibbles_odd")
+# Metadata leaves — markers, not shipped storage: int4 packing flags and the
+# tensor-parallel shard tag added by serving.sharded.shard_quantized_tree.
+_MARKER_KEYS = ("nibbles", "nibbles_odd", "tp")
 
 
 def _should_quantize(path, leaf) -> bool:
@@ -124,17 +139,30 @@ def quantize_tree(params, bits: int = 8):
     return jax.tree_util.tree_map_with_path(conv, params)
 
 
-def pim_bytes(params) -> int:
-    """HBM bytes of a (possibly quantized) parameter tree.
+def pim_bytes(params, per_device: bool = False) -> int:
+    """HBM bytes of a (possibly quantized, possibly sharded) parameter tree.
 
-    The int4 ``nibbles``/``nibbles_odd`` leaves are packing *markers* —
-    metadata for ``dq``/``weight_shape``, never shipped to HBM — so they are
-    excluded from the byte count."""
+    The ``nibbles``/``nibbles_odd``/``tp`` leaves are *markers* — metadata
+    for ``dq``/``weight_shape``/``linear``, never shipped to HBM — so they
+    are excluded from the byte count.
+
+    ``per_device=True`` reports the bytes ONE device actually holds/streams:
+    each leaf counts its shard shape under its committed sharding, so a
+    mesh-distributed tree reports codes AND scales at 1/devices while
+    replicated leaves (norms, markers' siblings, non-divisible weights)
+    count in full — instead of silently double-counting replicated storage
+    as if it were split.  The default (total) is unchanged: the global
+    weight bytes the model streams per token across all devices."""
     total = 0
     for path, leaf in jax.tree_util.tree_leaves_with_path(params):
         if path and str(getattr(path[-1], "key", "")) in _MARKER_KEYS:
             continue
-        total += leaf.size * leaf.dtype.itemsize
+        n = leaf.size
+        if per_device:
+            sharding = getattr(leaf, "sharding", None)
+            if sharding is not None and hasattr(sharding, "shard_shape"):
+                n = math.prod(sharding.shard_shape(leaf.shape))
+        total += n * leaf.dtype.itemsize
     return total
 
 
@@ -167,13 +195,12 @@ def mask_after_stop(tokens, stop_tokens: Sequence[int], pad_id: int = 0):
     return jnp.where(stopped_before, jnp.int32(pad_id), tokens)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "n_new", "max_seq", "greedy", "top_k")
-)
-def _generate_scan(params, cfg: ModelConfig, prompt, extras, key, temperature,
+def _generate_body(params, cfg: ModelConfig, prompt, extras, key, temperature,
                    *, n_new: int, max_seq: int, greedy: bool, top_k: int):
     """The whole generation — prefill + n_new decode steps + sampling — as a
-    single XLA program (zero per-token Python dispatch)."""
+    single XLA program (zero per-token Python dispatch).  Jitted directly by
+    ``_generate_scan`` or lowered per-device under ``shard_map`` by
+    ``_generate_scan_sharded``."""
     b, s = prompt.shape
     if n_new == 0:
         return jnp.zeros((b, 0), jnp.int32)
@@ -199,14 +226,52 @@ def _generate_scan(params, cfg: ModelConfig, prompt, extras, key, temperature,
     return jnp.concatenate([tok0, toks.T], axis=1)  # (B, n_new)
 
 
+_generate_scan = functools.partial(
+    jax.jit, static_argnames=("cfg", "n_new", "max_seq", "greedy", "top_k")
+)(_generate_body)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "mesh", "n_new", "max_seq", "greedy", "top_k"),
+)
+def _generate_scan_sharded(params, cfg: ModelConfig, prompt, extras, key,
+                           temperature, *, mesh, n_new: int, max_seq: int,
+                           greedy: bool, top_k: int):
+    """``_generate_body`` lowered once under ``shard_map``: weights enter
+    pre-sharded along their output dims (``tree_pspecs`` reads the ``tp``
+    markers), every other operand and every output is replicated — the
+    per-layer collectives happen inside ``models.common.linear``/``dq``."""
+
+    def f(p, pr, ex, k, t):
+        return _generate_body(p, cfg, pr, ex, k, t, n_new=n_new,
+                              max_seq=max_seq, greedy=greedy, top_k=top_k)
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(tree_pspecs(params), P(), P(), P(), P()),
+        out_specs=P(), check_rep=False,
+    )(params, prompt, extras, key, temperature)
+
+
 class ServingEngine:
     """Fixed-batch engine: single-pass prefill, then a scan-compiled decode
     loop — one XLA program end-to-end.  The baseline the continuous-batching
-    engine is benchmarked against (benchmarks/serving_bench.py)."""
+    engine is benchmarked against (benchmarks/serving_bench.py).
 
-    def __init__(self, cfg: ModelConfig, params, max_seq: int, pim_bits: int = 0):
+    ``mesh``: a 1-D ``"model"`` mesh (``serving.sharded.make_decode_mesh``)
+    distributes the quantized weight tree over its devices; generation then
+    runs under ``shard_map`` with per-device weight shards, token-identical
+    to the single-device engine."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int,
+                 pim_bits: int = 0, mesh=None):
         self.cfg = cfg
-        self.params = quantize_tree(params, pim_bits) if pim_bits else params
+        self.mesh = mesh
+        params = quantize_tree(params, pim_bits) if pim_bits else params
+        if mesh is not None:
+            params = shard_quantized_tree(params, mesh)
+        self.params = params
         self.max_seq = max_seq
 
     def generate(self, prompt_tokens, n_new: int, extras: Optional[dict] = None,
@@ -238,11 +303,18 @@ class ServingEngine:
                 f"prompt ({s}) + n_new ({n_new}) exceeds max_seq "
                 f"({self.max_seq}); cache writes past max_seq would "
                 "silently clamp")
-        toks = _generate_scan(
-            self.params, self.cfg, prompt_tokens, extras, key,
-            jnp.float32(temperature), n_new=int(n_new), max_seq=self.max_seq,
-            greedy=bool(greedy), top_k=int(top_k),
-        )
+        if self.mesh is not None:
+            toks = _generate_scan_sharded(
+                self.params, self.cfg, prompt_tokens, extras, key,
+                jnp.float32(temperature), mesh=self.mesh, n_new=int(n_new),
+                max_seq=self.max_seq, greedy=bool(greedy), top_k=int(top_k),
+            )
+        else:
+            toks = _generate_scan(
+                self.params, self.cfg, prompt_tokens, extras, key,
+                jnp.float32(temperature), n_new=int(n_new), max_seq=self.max_seq,
+                greedy=bool(greedy), top_k=int(top_k),
+            )
         return mask_after_stop(toks, tuple(stop_tokens), int(pad_id))
 
     def generate_reference(self, prompt_tokens, n_new: int,
@@ -255,6 +327,10 @@ class ServingEngine:
         scan-compiled ``generate`` replaces — and the dispatch-bound
         baseline in decode_bench.  Mirrors ``generate``'s sampling options
         and key-split order, so matching keys give matching samples."""
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "generate_reference is the single-device parity oracle; "
+                "construct the engine without a mesh to run it")
         if key is None:
             key = jax.random.PRNGKey(0)
         cfg = self.cfg
@@ -301,21 +377,16 @@ class Request:
     extras: Optional[dict] = None
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("cfg", "spad", "page_size", "greedy", "top_k"),
-    donate_argnames=("cache",),
-)
-def _admit_prefill(params, cfg: ModelConfig, cache, prompt, length, slot,
-                   pages, key, temperature, extras, *, spad: int,
-                   page_size: int, greedy: bool, top_k: int):
-    """Admit one request: batch-1 single-pass prefill into a temporary dense
-    cache, scatter it into the slot's pages (``models.paged_insert``), and
-    sample the first token from the logits at the true prompt end.  Compiled
-    once per padded prompt length ``spad`` (a page multiple)."""
-    tmp = init_cache(cfg, 1, spad)
-    logits, tmp = prefill(params, cfg, prompt, tmp, extras, length=length)
-    cache = paged_insert(cfg, cache, tmp, slot, pages)
+def _admit_body(params, cfg: ModelConfig, cache, prompt, length, slot, pages,
+                key, temperature, extras, *, greedy: bool, top_k: int):
+    """Admit one request: batch-1 single-pass prefill written STRAIGHT into
+    the slot's pool pages and per-slot state row (``models.prefill`` with
+    ``pages``/``slot`` — no temporary dense cache, no ``paged_insert``
+    scatter round-trip), then sample the first token from the logits at the
+    true prompt end.  Compiled once per padded prompt length (a page
+    multiple, carried by ``prompt``'s shape)."""
+    logits, cache = prefill(params, cfg, prompt, cache, extras, length=length,
+                            pages=pages, slot=slot)
     lg = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
                                       keepdims=False)[0]  # (V,)
     tok0 = sample_logits(lg, key, greedy=greedy, temperature=temperature,
@@ -323,14 +394,37 @@ def _admit_prefill(params, cfg: ModelConfig, cache, prompt, length, slot,
     return cache, tok0
 
 
+_admit_prefill = functools.partial(
+    jax.jit, static_argnames=("cfg", "greedy", "top_k"),
+    donate_argnames=("cache",),
+)(_admit_body)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "chunk", "page_size", "greedy", "top_k", "pad_id"),
+    static_argnames=("cfg", "mesh", "greedy", "top_k"),
     donate_argnames=("cache",),
 )
-def _decode_chunk(params, cfg: ModelConfig, cache, tok, pos, n_out, done,
-                  max_new, stops, key, temperature, extras, *, chunk: int,
-                  page_size: int, greedy: bool, top_k: int, pad_id: int):
+def _admit_prefill_sharded(params, cfg: ModelConfig, cache, prompt, length,
+                           slot, pages, key, temperature, extras, *, mesh,
+                           greedy: bool, top_k: int):
+    """``_admit_body`` under ``shard_map``: sharded weights, replicated
+    paged cache / prompt / scheduler scalars."""
+
+    def f(p, c, pr, ln, sl, pg, k, t, ex):
+        return _admit_body(p, cfg, c, pr, ln, sl, pg, k, t, ex,
+                           greedy=greedy, top_k=top_k)
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(tree_pspecs(params),) + (P(),) * 8,
+        out_specs=P(), check_rep=False,
+    )(params, cache, prompt, length, slot, pages, key, temperature, extras)
+
+
+def _decode_chunk_body(params, cfg: ModelConfig, cache, tok, pos, n_out, done,
+                       max_new, stops, key, temperature, extras, *, chunk: int,
+                       page_size: int, greedy: bool, top_k: int, pad_id: int):
     """``chunk`` decode steps over all batch slots as one compiled scan.
 
     Per-slot carry: current token, position (cached length), emitted count,
@@ -359,6 +453,40 @@ def _decode_chunk(params, cfg: ModelConfig, cache, tok, pos, n_out, done,
     return cache, tok, pos, n_out, done, key, emits, lives
 
 
+_decode_chunk = functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "chunk", "page_size", "greedy", "top_k", "pad_id"),
+    donate_argnames=("cache",),
+)(_decode_chunk_body)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "mesh", "chunk", "page_size", "greedy", "top_k",
+                     "pad_id"),
+    donate_argnames=("cache",),
+)
+def _decode_chunk_sharded(params, cfg: ModelConfig, cache, tok, pos, n_out,
+                          done, max_new, stops, key, temperature, extras, *,
+                          mesh, chunk: int, page_size: int, greedy: bool,
+                          top_k: int, pad_id: int):
+    """``_decode_chunk_body`` under ``shard_map``: the paged pools, block
+    tables, and per-slot scheduler carry are replicated (they are tiny next
+    to the weight stream); only the weight shards differ per device."""
+
+    def f(p, c, tk, ps_, no, dn, mn, st, k, t, ex):
+        return _decode_chunk_body(p, cfg, c, tk, ps_, no, dn, mn, st, k, t,
+                                  ex, chunk=chunk, page_size=page_size,
+                                  greedy=greedy, top_k=top_k, pad_id=pad_id)
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(tree_pspecs(params),) + (P(),) * 10,
+        out_specs=P(), check_rep=False,
+    )(params, cache, tok, pos, n_out, done, max_new, stops, key, temperature,
+      extras)
+
+
 class ContinuousBatchingEngine:
     """Continuous-batching scheduler over a paged KV cache (see module
     docstring for the page/block-table layout and scheduler states).
@@ -379,9 +507,13 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_seq: int,
                  page_size: int = 8, num_pages: Optional[int] = None,
                  chunk: int = 8, pim_bits: int = 0, pad_id: int = 0,
-                 page_alloc_seed: Optional[int] = None):
+                 page_alloc_seed: Optional[int] = None, mesh=None):
         self.cfg = cfg
-        self.params = quantize_tree(params, pim_bits) if pim_bits else params
+        self.mesh = mesh
+        params = quantize_tree(params, pim_bits) if pim_bits else params
+        if mesh is not None:
+            params = shard_quantized_tree(params, mesh)
+        self.params = params
         self.slots = int(slots)
         self.page_size = int(page_size)
         self.max_seq = -(-int(max_seq) // self.page_size) * self.page_size
@@ -461,12 +593,14 @@ class ContinuousBatchingEngine:
         prompt = np.zeros((1, spad), np.int32)
         prompt[0, :length] = np.asarray(req.prompt, np.int32)
         self._key, sub = jax.random.split(self._key)
-        self._cache, tok0 = _admit_prefill(
+        admit = (_admit_prefill if self.mesh is None else functools.partial(
+            _admit_prefill_sharded, mesh=self.mesh))
+        self._cache, tok0 = admit(
             self.params, self.cfg, self._cache, jnp.asarray(prompt),
             jnp.int32(length), jnp.int32(slot), jnp.asarray(pages, jnp.int32),
             sub, jnp.float32(temperature),
             self._set_slot_extras(slot, req.extras),
-            spad=spad, page_size=ps, greedy=bool(greedy), top_k=int(top_k))
+            greedy=bool(greedy), top_k=int(top_k))
         tok0 = int(tok0)
         self._outputs[ridx].append(tok0)
         self._pos[slot] = length
@@ -593,8 +727,10 @@ class ContinuousBatchingEngine:
                                          self.pages_in_use())
 
             self._cache["block_tables"] = jnp.asarray(self._bt)
+            step = (_decode_chunk if self.mesh is None else functools.partial(
+                _decode_chunk_sharded, mesh=self.mesh))
             (self._cache, tok, pos, n_out, done, self._key, emits, lives) = \
-                _decode_chunk(
+                step(
                     self.params, self.cfg, self._cache, jnp.asarray(self._tok),
                     jnp.asarray(self._pos), jnp.asarray(self._n_out),
                     jnp.asarray(self._done), jnp.asarray(self._max_new),
