@@ -18,7 +18,12 @@ TPU time):
     weight-bytes-streamed-per-device — on real hardware the per-device
     weight stream is what bounds memory-bound decode, so its 1/N drop is
     the PiCaSO scaling story (virtual CPU devices share one socket, so the
-    tokens/sec column is a collectives-overhead proxy, not a speedup).
+    tokens/sec column is a collectives-overhead proxy, not a speedup);
+  * the ``--speculate K`` axis: plain greedy vs speculative multi-token
+    decode (n-gram proposer + one verify forward per window), recording
+    tokens/sec and emitted-tokens-per-verify-step — each verify step
+    streams the weights ONCE, so emitted/step multiplies the
+    weight-bytes-per-token win directly.
 
 Writes ``BENCH_decode.json`` (repo root) for the PR-over-PR perf trajectory.
 Run: ``python benchmarks/decode_bench.py`` (add ``--quick`` for CI smoke).
@@ -120,6 +125,51 @@ def bench_fastpath_vs_seed(arch: str, batch: int, prompt_len: int, n_new: int,
     return out
 
 
+def bench_speculative(archs, batch: int, prompt_len: int, n_new: int,
+                      reps: int, speculate: int):
+    """The speculation axis: INT8 engine, greedy, ``--speculate K`` vs the
+    plain scan (K=0).  Records tokens/sec AND the realised
+    emitted-tokens-per-verify-step — each verify step streams the weight
+    tree ONCE, so emitted/step is the direct multiplier on the
+    weight-bytes-per-token bound the grid section records."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serving import ServingEngine, SpecConfig
+
+    rows = []
+    for arch in archs:
+        cfg = get_reduced(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        prompt = jax.random.randint(
+            jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab)
+        eng = ServingEngine(cfg, params, max_seq=prompt_len + n_new,
+                            pim_bits=8)
+        for k in (0, speculate):
+            spec = SpecConfig(k=k) if k else None
+            dt = _timed(lambda: eng.generate(prompt, n_new=n_new,
+                                             speculate=spec), reps)
+            row = {
+                "arch": arch,
+                "speculate_k": k,
+                "tokens_per_sec": batch * n_new / dt,
+                "emitted_per_step": (eng.spec_stats["emitted_per_step"]
+                                     if k else 1.0),
+            }
+            if k:
+                base = [r for r in rows
+                        if r["arch"] == arch and r["speculate_k"] == 0][0]
+                row["speedup_vs_plain"] = (row["tokens_per_sec"]
+                                           / base["tokens_per_sec"])
+            rows.append(row)
+            extra = (f"  {row.get('speedup_vs_plain', 1.0):5.2f}x, "
+                     f"{row['emitted_per_step']:.2f} tok/verify-step"
+                     if k else "")
+            print(f"{arch:16s} speculate={k}  "
+                  f"{row['tokens_per_sec']:10.1f} tok/s{extra}")
+    return rows
+
+
 def bench_sharded(archs, batch: int, prompt_len: int, n_new: int, reps: int,
                   devices: int):
     """The multi-device axis: the INT8 engine on one device vs tensor-
@@ -170,6 +220,9 @@ def main(argv=None) -> None:
                     help="width of the sharded-decode mesh axis (runs in a "
                     "subprocess with that many virtual host devices; "
                     "0/1 disables)")
+    ap.add_argument("--speculate", type=int, default=4,
+                    help="speculation window K for the --speculate axis "
+                    "(K=0 plain vs K, n-gram proposer; 0 disables)")
     ap.add_argument("--out", default=str(_ROOT / "BENCH_decode.json"))
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: one arch, tiny shapes")
@@ -200,6 +253,12 @@ def main(argv=None) -> None:
         "fastpath_vs_seed": bench_fastpath_vs_seed(
             archs[0], batch, prompt, new, reps),
     }
+    if args.speculate > 0:
+        result["speculative"] = {
+            "k": args.speculate,
+            "grid": bench_speculative(archs, batch, prompt, new, reps,
+                                      args.speculate),
+        }
     if args.devices > 1:
         from bench_subproc import run_sharded_subprocess
 

@@ -21,7 +21,10 @@ vs peak live page bytes).  ``--devices N`` adds the tensor-sharded axis: the
 INT8 continuous engine on one device vs sharded over an N-virtual-device
 ``"model"`` mesh, recording tokens/sec and weight-bytes-per-device (the
 quantity the mesh divides; virtual CPU devices share one socket, so
-tokens/sec is a collectives-overhead proxy).  Run
+tokens/sec is a collectives-overhead proxy).  ``--speculate K`` adds the
+speculation axis: the same trace through plain decode chunks vs n-gram
+verify windows, recording useful tokens/sec, tokens-per-weight-stream
+(chunk iterations paid), and per-slot window acceptance.  Run
 ``python benchmarks/serving_bench.py`` (``--smoke`` for CI).
 """
 from __future__ import annotations
@@ -58,6 +61,27 @@ def make_trace(n_requests: int, mean_prompt: int, mean_new: int,
         prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
         reqs.append(Request(prompt=prompt, max_new=max_new))
     return reqs
+
+
+def scaled_config(cfg):
+    """The scaled-up smoke config: the raw reduced config is so small that
+    per-step compute is dwarfed by dispatch; ONE definition so every
+    section of BENCH_serving.json measures the same model."""
+    return cfg.replace(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                       head_dim=32, d_ff=1024)
+
+
+def trace_for(kw: dict, arch: str):
+    """The benchmark trace for a parsed ``kw`` dict — one construction
+    shared by the main comparison, the --sharded axis, and the --speculate
+    axis, so all three measure the same workload."""
+    from repro.configs import get_reduced
+
+    return make_trace(
+        kw["n_requests"], kw["mean_prompt"], kw["mean_new"],
+        kw["max_prompt"], kw["max_new_cap"], get_reduced(arch).vocab,
+        kw["seed"], long_frac=kw["long_frac"],
+        mean_new_long=kw["mean_new_long"])
 
 
 def pool_geometry(slots: int, page_size: int, max_prompt: int,
@@ -115,15 +139,15 @@ def bench(arch: str, n_requests: int, slots: int, page_size: int, chunk: int,
 
     cfg = get_reduced(arch)
     if scale:
-        # The smoke-test reduced config is so small that per-step compute is
-        # dwarfed by dispatch, which flatters the zero-dispatch fixed scan;
-        # scale it up so per-token cost dominates, as on real hardware.
-        cfg = cfg.replace(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
-                          head_dim=32, d_ff=1024)
+        # dispatch would dwarf the raw reduced config's per-step compute,
+        # flattering the zero-dispatch fixed scan; see scaled_config.
+        cfg = scaled_config(cfg)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    requests = make_trace(n_requests, mean_prompt, mean_new, max_prompt,
-                          max_new_cap, cfg.vocab, seed,
-                          long_frac=long_frac, mean_new_long=mean_new_long)
+    requests = trace_for(
+        dict(n_requests=n_requests, mean_prompt=mean_prompt,
+             mean_new=mean_new, max_prompt=max_prompt,
+             max_new_cap=max_new_cap, seed=seed, long_frac=long_frac,
+             mean_new_long=mean_new_long), arch)
     max_seq, num_pages = pool_geometry(slots, page_size, max_prompt,
                                        max_new_cap, pool_frac)
 
@@ -186,6 +210,59 @@ def bench(arch: str, n_requests: int, slots: int, page_size: int, chunk: int,
         "speedup_tokens_per_sec": cont_tps / fixed_tps,
         "peak_cache_vs_dense": peak_live_bytes / tree_bytes(dense_cache),
     }
+
+
+def bench_speculative(arch: str, requests, slots: int, page_size: int,
+                      chunk: int, max_seq: int, num_pages: int,
+                      speculate: int, scale: bool) -> dict:
+    """The speculation axis on the continuous engine: the SAME trace with
+    ``speculate=0`` (plain chunks) vs ``K`` (n-gram verify windows),
+    recording useful tokens/sec, ``emitted_per_stream`` (batch-aggregate
+    tokens per chunk iteration — each iteration streams the weight tree
+    once, and it is computed for the plain row too, so the K-row / 0-row
+    ratio is the weight streams saved), and ``acceptance_per_live_window``
+    (per-slot window acceptance — the proposer-quality number)."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serving import ContinuousBatchingEngine
+
+    cfg = get_reduced(arch)
+    if scale:
+        cfg = scaled_config(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rows = []
+    for k in (0, speculate):
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=slots, max_seq=max_seq, page_size=page_size,
+            num_pages=num_pages, chunk=chunk,
+            speculate=k if k else None)
+        run_continuous(eng, requests)  # warm/compile
+        t0 = time.perf_counter()
+        useful = run_continuous(eng, requests)
+        dt = time.perf_counter() - t0
+        # every chunk iteration streams the weights once; admit tok0s come
+        # from prefill, so chunk-emitted tokens exclude one per request
+        chunk_emitted = useful - len(requests)
+        rows.append({
+            "speculate_k": k,
+            "useful_tokens": useful,
+            "tokens_per_sec": useful / dt,
+            "emitted_per_stream": chunk_emitted
+            / max(eng.decode_chunk_iters, 1),
+            "acceptance_per_live_window": (eng.spec_emitted
+                                           / max(eng.spec_live_steps, 1)
+                                           if k else 1.0),
+        })
+        if k:
+            rows[-1]["speedup_vs_plain"] = (rows[-1]["tokens_per_sec"]
+                                            / rows[0]["tokens_per_sec"])
+        r = rows[-1]
+        print(f"speculate={k}: {r['tokens_per_sec']:10.1f} useful tok/s, "
+              f"{r['emitted_per_stream']:.2f} tok/stream, "
+              f"{r['acceptance_per_live_window']:.2f} tok/live-window"
+              + (f", {r.get('speedup_vs_plain', 1.0):.2f}x" if k else ""))
+    return {"k": speculate, "grid": rows}
 
 
 def bench_sharded(arch: str, requests, slots: int, page_size: int, chunk: int,
@@ -251,6 +328,9 @@ def main(argv=None) -> None:
                     help="width of the sharded-decode mesh axis (runs in a "
                     "subprocess with that many virtual host devices; "
                     "0/1 disables)")
+    ap.add_argument("--speculate", type=int, default=4,
+                    help="speculation window K for the --speculate axis "
+                    "(plain vs K on the same trace; 0 disables)")
     ap.add_argument("--out", default=str(_ROOT / "BENCH_serving.json"))
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: tiny trace, tiny shapes")
@@ -282,11 +362,7 @@ def main(argv=None) -> None:
         # Same trace as the main comparison, on the raw reduced config
         # (the scaled-up config exists to drown dispatch overhead, which
         # the 1-vs-N comparison does not need).
-        requests = make_trace(
-            kw["n_requests"], kw["mean_prompt"], kw["mean_new"],
-            kw["max_prompt"], kw["max_new_cap"],
-            get_reduced(args.arch).vocab, kw["seed"],
-            long_frac=kw["long_frac"], mean_new_long=kw["mean_new_long"])
+        requests = trace_for(kw, args.arch)
         sharded = bench_sharded(
             args.arch, requests, kw["slots"], kw["page_size"], kw["chunk"],
             max_seq, num_pages, args.devices)
@@ -299,13 +375,28 @@ def main(argv=None) -> None:
     result = {
         "bench": "serving_continuous_batching",
         "backend": jax.default_backend(),
+    }
+    if args.speculate > 0:
+        sp_max_seq, sp_num_pages = pool_geometry(
+            kw["slots"], kw["page_size"], kw["max_prompt"],
+            kw["max_new_cap"], kw["pool_frac"])
+        spec_requests = trace_for(kw, args.arch)
+        result["speculative"] = bench_speculative(
+            args.arch, spec_requests, kw["slots"], kw["page_size"],
+            kw["chunk"], sp_max_seq, sp_num_pages, args.speculate,
+            kw["scale"])
+    result.update({
         "note": ("reduced config on CPU: tokens/sec measures scheduling "
                  "efficiency (useful tokens vs ride-along waste); "
                  "peak_live_cache_bytes is the paged pool's high-water mark "
                  "vs the dense B*max_seq preallocation; "
-                 "sharded.weight_bytes_per_device is what the mesh divides"),
+                 "sharded.weight_bytes_per_device is what the mesh divides; "
+                 "speculative.emitted_per_stream is batch-aggregate tokens "
+                 "per weight stream (chunk iteration) for BOTH rows — the "
+                 "K/0 ratio is the streams saved; acceptance_per_live_window "
+                 "is the per-slot proposer acceptance"),
         **row,
-    }
+    })
     if args.devices > 1:
         from bench_subproc import run_sharded_subprocess
 

@@ -1,5 +1,6 @@
 """Model zoo: functional JAX implementations of the assigned architectures."""
 from .lm import (
+    commit_verify,
     decode_step,
     encode,
     forward,
@@ -9,9 +10,11 @@ from .lm import (
     loss_fn,
     paged_insert,
     prefill,
+    verify_step,
 )
 
 __all__ = [
     "init_params", "forward", "loss_fn", "init_cache", "decode_step",
     "encode", "prefill", "init_paged_cache", "paged_insert",
+    "verify_step", "commit_verify",
 ]

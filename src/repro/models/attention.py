@@ -409,6 +409,107 @@ def attn_decode_paged(
     return linear(o, p["wo"]), new_cache
 
 
+def attn_verify(
+    p: dict,
+    x: jnp.ndarray,  # (B, T, D)
+    cache: dict,
+    pos: jnp.ndarray,  # (B,) int32 per-row lengths (tokens already cached)
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 0.0,
+    block_tables: Optional[jnp.ndarray] = None,
+    page_size: int = 0,
+) -> tuple[jnp.ndarray, dict]:
+    """T-token decode for speculative verification: consume T proposed
+    tokens at per-row positions ``pos .. pos+T-1`` against an existing cache
+    (dense or paged), causal *within* the window and over the cached prefix.
+
+    Per query t the math is exactly ``attn_decode``'s — same projections,
+    same f32 score accumulation, same masked softmax over the full store —
+    so greedy verification reproduces the per-token path's argmax.  Rollback
+    of rejected positions is free by construction: positions ``> pos + a``
+    are (1) never attended by later steps, whose masks stop at their own
+    frontier, and (2) rewritten by the next verify window, which starts at
+    the accepted frontier ``pos + a + 1``.  Writes that would land past the
+    store (``pos + t >= max_seq``, only reachable by already-finished rows)
+    are dropped (dense) or routed to the trash page (paged)."""
+    b, t, _ = x.shape
+    q = _split_heads(linear(x, p["wq"], p.get("bq")), n_heads, head_dim)
+    k = _split_heads(linear(x, p["wk"], p.get("bk")), n_kv, head_dim)
+    v = _split_heads(linear(x, p["wv"], p.get("bv")), n_kv, head_dim)
+    posm = pos[:, None] + jnp.arange(t, dtype=pos.dtype)[None, :]  # (B, T)
+    if rope_theta:
+        q = apply_rope(q, posm, rope_theta)
+        k = apply_rope(k, posm, rope_theta)
+    quantized = "k_scale" in cache
+    # k/v are already (B, T, KV, D) — the scatter-row layout — and
+    # _quant_kv reduces over the last axis, so it applies in place.
+    if quantized:
+        k_rows, ks_rows = _quant_kv(k)  # (B, T, KV, D), (B, T, KV)
+        v_rows, vs_rows = _quant_kv(v)
+    else:
+        k_rows = k.astype(cache["k"].dtype)
+        v_rows = v.astype(cache["v"].dtype)
+
+    new_cache = dict(cache)
+    if block_tables is None:
+        seq = cache["k"].shape[2]
+        rows = jnp.arange(b)[:, None]  # (B, 1) broadcasts with posm
+        col = jnp.where(posm < seq, posm, seq)  # out-of-store -> dropped
+        new_cache["k"] = cache["k"].at[rows, :, col, :].set(k_rows, mode="drop")
+        new_cache["v"] = cache["v"].at[rows, :, col, :].set(v_rows, mode="drop")
+        if quantized:
+            new_cache["k_scale"] = cache["k_scale"].at[rows, :, col].set(
+                ks_rows, mode="drop")
+            new_cache["v_scale"] = cache["v_scale"].at[rows, :, col].set(
+                vs_rows, mode="drop")
+    else:
+        ps = page_size
+        w_pages = block_tables.shape[1]
+        seq = w_pages * ps
+        logical = jnp.clip(posm // ps, 0, w_pages - 1)
+        page = jnp.take_along_axis(block_tables, logical, axis=1)  # (B, T)
+        page = jnp.where(posm < seq, page, 0)  # past the store -> trash page
+        off = posm % ps
+        new_cache["k"] = cache["k"].at[page, :, off, :].set(k_rows)
+        new_cache["v"] = cache["v"].at[page, :, off, :].set(v_rows)
+        if quantized:
+            new_cache["k_scale"] = cache["k_scale"].at[page, :, off].set(ks_rows)
+            new_cache["v_scale"] = cache["v_scale"].at[page, :, off].set(vs_rows)
+
+    if block_tables is None:
+        def fetch(key):
+            return new_cache[key]
+    else:
+        def fetch(key):
+            g = new_cache[key][block_tables]  # (B, W, KV, ps, ...)
+            g = jnp.moveaxis(g, 1, 2)  # (B, KV, W, ps, ...)
+            return g.reshape((b, n_kv, seq) + g.shape[4:])
+
+    if quantized:
+        ck = fetch("k").astype(x.dtype) * fetch("k_scale")[..., None].astype(x.dtype)
+        cv = fetch("v").astype(x.dtype) * fetch("v_scale")[..., None].astype(x.dtype)
+    else:
+        ck, cv = fetch("k"), fetch("v")
+    g = n_heads // n_kv
+    qg = q.reshape(b, t, n_kv, g, head_dim).astype(ck.dtype)
+    s = jnp.einsum("bqhgd,bhkd->bhgqk", qg, ck,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(head_dim)
+    # query t's frontier is pos + t: the cached prefix plus the window's
+    # earlier tokens and itself — causal across cache and window at once.
+    valid = (jnp.arange(ck.shape[2])[None, None, None, None, :]
+             <= posm[:, None, None, :, None])
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bqhgd", w.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, t, n_heads * head_dim).astype(x.dtype)
+    return linear(o, p["wo"]), new_cache
+
+
 def attn_decode(
     p: dict,
     x: jnp.ndarray,  # (B, 1, D)

@@ -15,9 +15,17 @@ from .attention import (
     attn_decode_paged,
     attn_init,
     attn_prefill,
+    attn_verify,
 )
 from .common import mlp_apply, mlp_init, rmsnorm, rmsnorm_init, split_keys
-from .mla import mla_apply, mla_decode, mla_decode_paged, mla_init, mla_prefill
+from .mla import (
+    mla_apply,
+    mla_decode,
+    mla_decode_paged,
+    mla_init,
+    mla_prefill,
+    mla_verify,
+)
 from .moe import moe_apply, moe_init
 
 
@@ -72,6 +80,20 @@ def dense_block_decode_paged(p, x, cache, block_tables, pos, cfg: ModelConfig,
         p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cache, block_tables,
         pos, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
         rope_theta=cfg.rope_theta, page_size=page_size,
+    )
+    x = x + h
+    return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps)), cache
+
+
+def dense_block_verify(p, x, cache, block_tables, pos, cfg: ModelConfig,
+                       page_size: int):
+    """T-token speculative-verify step (dense cache when ``block_tables`` is
+    None, paged pool otherwise); ``pos`` is per-row (B,)."""
+    h, cache = attn_verify(
+        p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cache, pos,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, block_tables=block_tables,
+        page_size=page_size,
     )
     x = x + h
     return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps)), cache
@@ -154,6 +176,27 @@ def moe_block_decode_paged(p, x, cache, block_tables, pos, cfg: ModelConfig,
     return x + y, cache
 
 
+def moe_block_verify(p, x, cache, block_tables, pos, cfg: ModelConfig,
+                     page_size: int):
+    """T-token speculative-verify step for the MoE block (MLA or GQA
+    attention; the expert MLP is per-position, nothing to roll back)."""
+    xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        h, cache = mla_verify(
+            p["attn"], xin, cache, pos, n_heads=cfg.n_heads, m=cfg.mla,
+            rope_theta=cfg.rope_theta, block_tables=block_tables,
+            page_size=page_size)
+    else:
+        h, cache = attn_verify(
+            p["attn"], xin, cache, pos, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, block_tables=block_tables,
+            page_size=page_size)
+    x = x + h
+    y, _ = moe_apply(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.moe)
+    return x + y, cache
+
+
 # -------------------------------------------------------------- SSM block ---
 def ssm_block_init(key, cfg: ModelConfig, dtype) -> dict:
     init = mb.mamba1_init if cfg.ssm.version == 1 else mb.mamba2_init
@@ -186,6 +229,15 @@ def ssm_block_prefill(p, x, cache, cfg: ModelConfig, length=None, slot=None):
 
 def ssm_block_decode(p, x, cache, cfg: ModelConfig):
     f = mb.mamba1_decode if cfg.ssm.version == 1 else mb.mamba2_decode
+    y, cache = f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cache, cfg.ssm)
+    return x + y, cache
+
+
+def ssm_block_verify(p, x, cache, cfg: ModelConfig):
+    """T-token speculative-verify step: the returned cache leaves are
+    stacked (B, T, ...) per-step states (index j = after consuming token j)
+    for ``models.commit_verify`` to select the accepted step from."""
+    f = mb.mamba1_verify if cfg.ssm.version == 1 else mb.mamba2_verify
     y, cache = f(p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps), cache, cfg.ssm)
     return x + y, cache
 

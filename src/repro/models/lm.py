@@ -30,6 +30,7 @@ from .attention import (
     attn_decode_paged,
     attn_init,
     attn_prefill,
+    attn_verify,
     kv_cache_init,
     paged_kv_cache_init,
     paged_kv_insert,
@@ -682,6 +683,171 @@ def decode_step(
 
     x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
     return unembed(x, params.get("head", params["embed"])), new_cache
+
+
+# ---------------------------------------------------------- verify (spec) ---
+def verify_step(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, T): last accepted token + T-1 proposed tokens
+    cache: dict,
+    pos: jnp.ndarray,  # (B,) int32 per-row lengths (tokens already cached)
+    extras: Optional[dict] = None,
+    page_size: int = 0,
+) -> tuple[jnp.ndarray, dict]:
+    """Speculative-verify forward: run the target model ONCE over a window
+    of T proposed tokens at per-row positions ``pos .. pos+T-1`` against an
+    existing decode cache — one weight stream for up to T emitted tokens,
+    the multiplier on the paper's weight-bytes-per-token bound.
+
+    Per window position the math matches ``decode_step`` exactly (same
+    projections, masks, and float association — the SSM families run the
+    sequential per-token recurrence, not the chunked scan), so greedy
+    acceptance against these logits reproduces the per-token decode's
+    tokens.
+
+    Returns ``(logits (B,T,V), cache')`` where attention/MLA sequence
+    leaves are already written in place for all T positions (rejected
+    positions need no rollback: they are never attended by later frontiers
+    and the next window rewrites them) and SSM/conv per-slot state leaves
+    come back STACKED with a time axis after the batch axis — pass the
+    result through ``commit_verify`` with the per-row accepted step to get
+    a normal cache back."""
+    extras = extras or {}
+    fam = cfg.family
+    bt = cache.get("block_tables")
+    x = embed_lookup(params["embed"], tokens)
+    new_cache = dict(cache)
+
+    dense_body = lambda lp, h, c: bk.dense_block_verify(
+        lp, h, c, bt, pos, cfg, page_size)
+    moe_body = lambda lp, h, c: bk.moe_block_verify(
+        lp, h, c, bt, pos, cfg, page_size)
+    ssm_body = lambda lp, h, c: bk.ssm_block_verify(lp, h, c, cfg)
+
+    if fam == "dense":
+        x, cs = _scan_cached(params["layers"], cache["layers"], x, dense_body)
+        new_cache["layers"] = cs
+    elif fam == "moe":
+        if params.get("dense_layers") is not None:
+            x, cs = _scan_cached(
+                params["dense_layers"], cache["dense_layers"], x, dense_body,
+            )
+            new_cache["dense_layers"] = cs
+        x, cs = _scan_cached(params["layers"], cache["layers"], x, moe_body)
+        new_cache["layers"] = cs
+    elif fam == "ssm":
+        x, cs = _scan_cached(params["layers"], cache["layers"], x, ssm_body)
+        new_cache["layers"] = cs
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def f(h, xs):
+            gp, sc, ac = xs
+            h, ssm_new = _scan_cached(gp, sc, h, ssm_body)
+            h, attn_new = dense_body(shared, h, ac)
+            return h, (ssm_new, attn_new)
+
+        x, (ssm_cs, attn_cs) = jax.lax.scan(
+            f, x, (params["groups"], cache["groups_ssm"], cache["groups_attn"])
+        )
+        new_cache["groups_ssm"], new_cache["groups_attn"] = ssm_cs, attn_cs
+        if params.get("tail") is not None:
+            x, cs = _scan_cached(params["tail"], cache["tail"], x, ssm_body)
+            new_cache["tail"] = cs
+    elif fam == "vlm":
+        img = extras["image_embeds"].astype(x.dtype)
+
+        def f(h, xs):
+            gp, c = xs
+            h, cs = _scan_cached(gp["self"], c, h, dense_body)
+            h = bk.cross_block_apply(gp["cross"], h, img, cfg)
+            return h, cs
+
+        x, cs = jax.lax.scan(f, x, (params["groups"], cache["groups_self"]))
+        new_cache["groups_self"] = cs
+    elif fam == "encdec":
+        enc_out = extras["enc_out"].astype(x.dtype)
+
+        def dec_block_verify(lp, h, c):
+            hh, c_new = attn_verify(
+                lp["self"], rmsnorm(h, lp["ln1"], cfg.norm_eps), c, pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                block_tables=bt, page_size=page_size,
+            )
+            h = h + hh
+            hh = attn_apply(
+                lp["cross"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=0.0, causal=False, kv_input=enc_out,
+            )
+            h = h + hh
+            return h + mlp_apply(lp["mlp"], rmsnorm(h, lp["ln3"], cfg.norm_eps)), c_new
+
+        x, cs = _scan_cached(params["decoder"], cache["decoder"], x,
+                             dec_block_verify)
+        new_cache["decoder"] = cs
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(x, params.get("head", params["embed"])), new_cache
+
+
+def _select_step(tree, sel: jnp.ndarray, lead: int):
+    """Select per-row step ``sel`` (B,) from verify-stacked state leaves
+    shaped ``lead-dims + (B, T, ...)``, dropping the time axis."""
+
+    def f(leaf):
+        ax = lead + 1
+        idx = sel.reshape((1,) * lead + (-1, 1) + (1,) * (leaf.ndim - lead - 2))
+        picked = jnp.take_along_axis(leaf, idx.astype(jnp.int32), axis=ax)
+        return jnp.squeeze(picked, axis=ax)
+
+    return jax.tree.map(f, tree)
+
+
+def stack_verify_caches(cfg: ModelConfig, caches: list) -> dict:
+    """Merge a CHAIN of verify caches (successive windows over consecutive
+    positions, each committed into the next) into one verify cache whose
+    stacked time axis spans the whole chain: SSM/conv state leaves
+    concatenate along their time axis, attention/MLA leaves take the last
+    cache's (its in-place writes already accumulate the chain's).  Lets a
+    draft's k+1 single-token steps be committed once at any accepted length
+    without re-running the window."""
+    fam = cfg.family
+    out = dict(caches[-1])
+
+    def cat(key, lead):
+        return jax.tree.map(
+            lambda *ls: jnp.concatenate(ls, axis=lead + 1),
+            *[c[key] for c in caches])
+
+    if fam == "ssm":
+        out["layers"] = cat("layers", lead=1)
+    elif fam == "hybrid":
+        out["groups_ssm"] = cat("groups_ssm", lead=2)
+        if "tail" in out:
+            out["tail"] = cat("tail", lead=1)
+    return out
+
+
+def commit_verify(cfg: ModelConfig, cache: dict, sel: jnp.ndarray) -> dict:
+    """Commit a ``verify_step`` cache: per batch row, keep the SSM/conv
+    state after step ``sel[b]`` (0-indexed within the verify window — the
+    row's accepted length minus one) and drop the stacked time axis.
+    Attention/MLA leaves pass through: their rejected positions are rolled
+    back implicitly by masking and the next window's rewrites."""
+    fam = cfg.family
+    out = dict(cache)
+    if fam == "ssm":
+        out["layers"] = _select_step(cache["layers"], sel, lead=1)
+    elif fam == "hybrid":
+        out["groups_ssm"] = _select_step(cache["groups_ssm"], sel, lead=2)
+        if "tail" in cache:
+            out["tail"] = _select_step(cache["tail"], sel, lead=1)
+    return out
 
 
 def encode(params: dict, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:

@@ -175,6 +175,62 @@ def mamba1_decode(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
         "h": h, "conv": conv_state.astype(cache["conv"].dtype)}
 
 
+def _conv_step_states(xp: jnp.ndarray, t: int, k: int, dtype) -> jnp.ndarray:
+    """Per-step conv tails for a T-token verify window.  ``xp`` is the
+    padded conv input ``concat([carry, x], axis=1)`` of length ``T + K - 1``;
+    the state after consuming token ``j`` is the window ``xp[:, j+1 : j+K]``
+    — exactly what ``_causal_conv`` would have carried after j+1 single
+    steps.  Returns (B, T, K-1, C); T is small (the speculation window), so
+    the static stack is cheap."""
+    if k <= 1:
+        return jnp.zeros((xp.shape[0], t, 0, xp.shape[2]), dtype)
+    return jnp.stack(
+        [xp[:, j + 1 : j + k, :] for j in range(t)], axis=1).astype(dtype)
+
+
+def mamba1_verify(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
+    """T-token Mamba1 decode for speculative verification. x: (B, T, D).
+
+    Runs the *per-token* recurrence sequentially over the window (NOT the
+    associative chunk scan — same float association as T ``mamba1_decode``
+    calls, so greedy verification reproduces the per-token argmax) and
+    returns every intermediate state: the cache leaves come back stacked as
+    (B, T, ...) where index ``j`` is the state after consuming token ``j``
+    — ``models.commit_verify`` selects the accepted step per row."""
+    b, t, _ = x.shape
+    n = s.state_dim
+    k = p["conv_w"].shape[-1]
+    xz = linear(x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xp = jnp.concatenate([cache["conv"].astype(xs.dtype), xs], axis=1)
+    conv_states = _conv_step_states(xp, t, k, cache["conv"].dtype)
+    xs, _ = _causal_conv(xs, p["conv_w"], cache["conv"])
+    xs = jax.nn.silu(xs + p["conv_b"])
+
+    dbc = linear(xs, p["x_proj"])
+    dt_rank = weight_shape(p["dt_proj"])[0]
+    dt = jax.nn.softplus(linear(dbc[..., :dt_rank], p["dt_proj"])
+                         + p["dt_bias"].astype(jnp.float32))
+    bmat = dbc[..., dt_rank : dt_rank + n].astype(jnp.float32)  # (B,T,N)
+    cmat = dbc[..., dt_rank + n :].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dtf = dt.astype(jnp.float32)  # (B,T,d_in)
+    dA = jnp.exp(dtf[..., None] * A)  # (B,T,C,N)
+    dBx = (dtf * xs.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+
+    def step(h, xs_t):
+        dA_t, dBx_t = xs_t
+        h = h * dA_t + dBx_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, cache["h"],
+                         (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1)  # (B,T,C,N)
+    y = jnp.einsum("btcn,btn->btc", hs, cmat) + p["D"] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return linear(y, p["out_proj"]), {"h": hs, "conv": conv_states}
+
+
 # ---------------------------------------------------------------- Mamba 2 ---
 def mamba2_init(key, d: int, s: SSMConfig, dtype) -> dict:
     d_in = s.expand * d
@@ -297,6 +353,51 @@ def mamba2_cache_init(batch: int, d_in: int, s: SSMConfig) -> dict:
         "h": jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
         "conv": jnp.zeros((batch, s.conv_dim - 1, d_in + 2 * s.state_dim), jnp.float32),
     }
+
+
+def mamba2_verify(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):
+    """T-token SSD decode for speculative verification. x: (B, T, D).
+
+    Sequential per-token recurrence (same float association as T
+    ``mamba2_decode`` calls); cache leaves return stacked as (B, T, ...),
+    index ``j`` = state after consuming token ``j`` (see
+    ``mamba1_verify``)."""
+    b, t, _ = x.shape
+    d_in = weight_shape(p["out_proj"])[0]
+    nh = p["A_log"].shape[0]
+    hd = d_in // nh
+    n = s.state_dim
+    k = p["conv_w"].shape[-1]
+    zxbcdt = linear(x, p["in_proj"])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * n :]
+    xp = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    conv_states = _conv_step_states(xp, t, k, cache["conv"].dtype)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], cache["conv"])
+    xbc = jax.nn.silu(xbc + p["conv_b"])
+    xs, bmat, cmat = (
+        xbc[..., :d_in],
+        xbc[..., d_in : d_in + n].astype(jnp.float32),
+        xbc[..., d_in + n :].astype(jnp.float32),
+    )
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,nh)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)  # (B,T,nh)
+    xh = xs.reshape(b, t, nh, hd).astype(jnp.float32)
+    dbx = jnp.einsum("bth,bthp,btn->bthpn", dt, xh, bmat)
+
+    def step(h, xs_t):
+        decay_t, dbx_t = xs_t
+        h = h * decay_t[..., None, None] + dbx_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, cache["h"],
+                         (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(dbx, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1)  # (B,T,nh,hd,sd)
+    y = jnp.einsum("bthpn,btn->bthp", hs, cmat) + p["D"][:, None] * xh
+    y = y.reshape(b, t, d_in).astype(x.dtype) * jax.nn.silu(z)
+    return linear(y, p["out_proj"]), {"h": hs, "conv": conv_states}
 
 
 def mamba2_decode(p: dict, x: jnp.ndarray, cache: dict, s: SSMConfig):

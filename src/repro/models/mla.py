@@ -161,6 +161,63 @@ def mla_decode_paged(p, x, cache, block_tables, pos, *, n_heads: int,
     return linear(o, p["wo"]), {"c": cc_pool, "kr": ckr_pool}
 
 
+def mla_verify(p, x, cache, pos, *, n_heads: int, m: MLAConfig,
+               rope_theta: float, block_tables=None, page_size: int = 0):
+    """T-token absorbed decode for speculative verification (per-row ``pos``
+    (B,), dense latent cache or paged pool — see ``attention.attn_verify``
+    for the window/rollback discipline).  Per query the math is exactly
+    ``mla_decode``'s absorbed form, so greedy verification reproduces the
+    per-token argmax."""
+    b, t, _ = x.shape
+    qh = m.qk_nope_dim + m.qk_rope_dim
+    q = linear(x, p["wq"]).reshape(b, t, n_heads, qh)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    posm = pos[:, None] + jnp.arange(t, dtype=pos.dtype)[None, :]  # (B, T)
+    q_rope = apply_rope(q_rope, posm, rope_theta)
+    q_lat = jnp.einsum("bqhd,hcd->bqhc", q_nope, dq(p["w_uk"], q_nope.dtype))
+
+    ckv = linear(x, p["w_dkv"])
+    c_new, kr_new = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    kr_new = apply_rope(kr_new[:, :, None, :], posm, rope_theta)[:, :, 0, :]
+    if block_tables is None:
+        seq = cache["c"].shape[1]
+        rows = jnp.arange(b)[:, None]
+        col = jnp.where(posm < seq, posm, seq)  # out-of-store -> dropped
+        cc_pool = cache["c"].at[rows, col, :].set(
+            c_new.astype(cache["c"].dtype), mode="drop")
+        ckr_pool = cache["kr"].at[rows, col, :].set(
+            kr_new.astype(cache["kr"].dtype), mode="drop")
+        cc, ckr = cc_pool, ckr_pool
+    else:
+        ps = page_size
+        w_pages = block_tables.shape[1]
+        seq = w_pages * ps
+        logical = jnp.clip(posm // ps, 0, w_pages - 1)
+        page = jnp.take_along_axis(block_tables, logical, axis=1)
+        page = jnp.where(posm < seq, page, 0)  # past the store -> trash page
+        off = posm % ps
+        cc_pool = cache["c"].at[page, off, :].set(c_new.astype(cache["c"].dtype))
+        ckr_pool = cache["kr"].at[page, off, :].set(
+            kr_new.astype(cache["kr"].dtype))
+        cc = cc_pool[block_tables].reshape(b, seq, m.kv_lora_rank)
+        ckr = ckr_pool[block_tables].reshape(b, seq, m.qk_rope_dim)
+
+    scale = 1.0 / jnp.sqrt(qh)
+    s_lat = jnp.einsum("bqhc,bkc->bhqk", q_lat.astype(jnp.float32),
+                       cc.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                        ckr.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    valid = (jnp.arange(cc.shape[1])[None, None, None, :]
+             <= posm[:, None, :, None])  # (B, 1, T, S) — per-query frontier
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkc->bqhc", w, cc.astype(jnp.float32))
+    o = jnp.einsum("bqhc,hcd->bqhd", o_lat, dq(p["w_uv"], jnp.float32))
+    o = o.reshape(b, t, -1).astype(x.dtype)
+    return linear(o, p["wo"]), {"c": cc_pool, "kr": ckr_pool}
+
+
 def mla_decode(p, x, cache, pos, *, n_heads: int, m: MLAConfig, rope_theta: float):
     """Absorbed decode: scores in latent space, W_uk/W_uv folded in."""
     b = x.shape[0]

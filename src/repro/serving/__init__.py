@@ -1,6 +1,18 @@
 """Serving substrate: PIM weight conversion + fixed-batch and
 continuous-batching (paged KV cache) engines, both optionally tensor-sharded
-over a 1-D ``"model"`` mesh (``serving.sharded``)."""
+over a 1-D ``"model"`` mesh (``serving.sharded``).
+
+Speculative multi-token decode (``serving.speculative``): pass
+``speculate=SpecConfig(k=...)`` (or a bare int ``k``) to
+``ServingEngine.generate`` or to the ``ContinuousBatchingEngine``
+constructor to amortise each weight stream over up to ``k+1`` emitted
+tokens.  Proposals come from prompt-lookup n-grams (``mode="ngram"``,
+both engines) or a small draft model (``mode="draft"``, fixed engine,
+constructed with ``draft_cfg``/``draft_params``); the target verifies the
+whole window in one ``models.verify_step`` forward and accepts the longest
+greedy-matching prefix, so output stays token-identical to plain greedy
+decode.  Realised acceptance lands in ``ServingEngine.spec_stats`` /
+``ContinuousBatchingEngine.spec_emitted``/``spec_live_steps``."""
 from .engine import (
     ContinuousBatchingEngine,
     Request,
@@ -10,9 +22,10 @@ from .engine import (
     quantize_tree,
 )
 from .sharded import make_decode_mesh, shard_quantized_tree, tree_pspecs
+from .speculative import SpecConfig, propose_ngram
 
 __all__ = [
     "ServingEngine", "ContinuousBatchingEngine", "Request", "quantize_tree",
     "pim_bytes", "mask_after_stop", "make_decode_mesh",
-    "shard_quantized_tree", "tree_pspecs",
+    "shard_quantized_tree", "tree_pspecs", "SpecConfig", "propose_ngram",
 ]

@@ -58,6 +58,11 @@ weight-stationary local matvecs and a single activation all-gather per
 linear.  Host-side scheduling is untouched (it never sees a device count),
 and greedy decode stays token-identical to the single-device engines
 (tests/test_sharded_decode.py).
+
+Both engines also speculate (``serving.speculative``): ``speculate=`` turns
+each decode step into a k-token verify window — one weight stream for up to
+k+1 emitted tokens, token-identical to plain greedy decode by greedy-prefix
+acceptance (tests/test_speculative.py).
 """
 from __future__ import annotations
 
@@ -81,7 +86,9 @@ from repro.models import (
     prefill,
 )
 from repro.quant import quantize_symmetric
+from repro.serving import speculative as spec_mod
 from repro.serving.sharded import shard_quantized_tree, tree_pspecs
+from repro.serving.speculative import SpecConfig
 
 # Leaves that stay dense: norms/gains/biases/scalars, router (accuracy-
 # critical and tiny), conv kernels, SSM dynamics params.
@@ -265,7 +272,8 @@ class ServingEngine:
     to the single-device engine."""
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int,
-                 pim_bits: int = 0, mesh=None):
+                 pim_bits: int = 0, mesh=None, draft_cfg: ModelConfig = None,
+                 draft_params=None, draft_pim_bits: int = 0):
         self.cfg = cfg
         self.mesh = mesh
         params = quantize_tree(params, pim_bits) if pim_bits else params
@@ -273,10 +281,19 @@ class ServingEngine:
             params = shard_quantized_tree(params, mesh)
         self.params = params
         self.max_seq = max_seq
+        # Optional draft model for speculate=SpecConfig(mode="draft"): a
+        # smaller same-family model whose k cheap autoregressive steps seed
+        # the target's single verify pass.
+        self.draft_cfg = draft_cfg
+        if draft_params is not None and draft_pim_bits:
+            draft_params = quantize_tree(draft_params, draft_pim_bits)
+        self.draft_params = draft_params
+        self.spec_stats: Optional[dict] = None
 
     def generate(self, prompt_tokens, n_new: int, extras: Optional[dict] = None,
                  greedy: bool = True, temperature: float = 1.0, top_k: int = 0,
-                 key=None, stop_tokens: Sequence[int] = (), pad_id: int = 0):
+                 key=None, stop_tokens: Sequence[int] = (), pad_id: int = 0,
+                 speculate=None):
         """Generate ``n_new`` tokens for the whole batch in one XLA program.
 
         greedy=True reproduces the seed engine's argmax decoding; for
@@ -294,7 +311,17 @@ class ServingEngine:
         post-processing on the emitted tokens, so varying stop sets never
         recompile the generation program.  The scan still runs ``n_new``
         steps — a fixed batch cannot retire rows early; that is exactly
-        what ``ContinuousBatchingEngine`` adds."""
+        what ``ContinuousBatchingEngine`` adds.
+
+        ``speculate`` (a ``serving.SpecConfig`` or an int ``k`` shorthand)
+        switches to speculative multi-token decode: propose ``k`` tokens
+        (prompt-lookup n-grams, or the engine's draft model), verify them
+        with ONE target forward, emit the accepted prefix + bonus token —
+        token-identical to this method's plain greedy output, with the
+        per-token weight stream amortised over the accepted tokens.
+        Greedy only; per-row accepted lengths ride in a compiled
+        ``while_loop``.  ``self.spec_stats`` records the realised
+        acceptance (``emitted_per_step``) after each speculative call."""
         if key is None:
             key = jax.random.PRNGKey(0)
         s = prompt_tokens.shape[1]
@@ -303,7 +330,14 @@ class ServingEngine:
                 f"prompt ({s}) + n_new ({n_new}) exceeds max_seq "
                 f"({self.max_seq}); cache writes past max_seq would "
                 "silently clamp")
-        if self.mesh is not None:
+        if speculate is not None:
+            if not greedy:
+                raise ValueError(
+                    "speculative decode verifies greedy argmax prefixes; "
+                    "sampling would break token-identity — pass greedy=True")
+            toks = self._generate_speculative(prompt_tokens, int(n_new),
+                                              extras, spec_mod.as_spec(speculate))
+        elif self.mesh is not None:
             toks = _generate_scan_sharded(
                 self.params, self.cfg, prompt_tokens, extras, key,
                 jnp.float32(temperature), mesh=self.mesh, n_new=int(n_new),
@@ -316,6 +350,48 @@ class ServingEngine:
                 greedy=bool(greedy), top_k=int(top_k),
             )
         return mask_after_stop(toks, tuple(stop_tokens), int(pad_id))
+
+    def _generate_speculative(self, prompt_tokens, n_new: int, extras,
+                              spec: SpecConfig):
+        b = prompt_tokens.shape[0]
+        if spec.mode == "draft":
+            if self.draft_params is None or self.draft_cfg is None:
+                raise ValueError(
+                    "speculate mode='draft' needs the engine constructed "
+                    "with draft_cfg/draft_params")
+            if self.mesh is not None:
+                raise NotImplementedError(
+                    "draft-model speculation is single-device (the draft "
+                    "tree is not mesh-distributed); use mode='ngram' on a "
+                    "mesh")
+        if self.mesh is not None:
+            toks, steps, live_steps = spec_mod._spec_generate_sharded(
+                self.params, self.cfg, prompt_tokens, extras, mesh=self.mesh,
+                n_new=n_new, max_seq=self.max_seq, k=spec.k,
+                ngram_n=spec.ngram_n)
+        else:
+            toks, steps, live_steps = spec_mod._spec_generate(
+                self.params, self.cfg, prompt_tokens, extras,
+                self.draft_params if spec.mode == "draft" else None,
+                draft_cfg=self.draft_cfg if spec.mode == "draft" else None,
+                n_new=n_new, max_seq=self.max_seq, k=spec.k, mode=spec.mode,
+                ngram_n=spec.ngram_n)
+        steps, live_steps = int(steps), int(live_steps)
+        # One verify step streams the weight tree once for the WHOLE batch,
+        # so the weight-stream amortisation is per-row tokens over verify
+        # steps: plain greedy needs n_new-1 streams, speculation `steps`.
+        # (Normalising by live_row_steps instead would overstate the win
+        # when rows finish at different times — a straggler row keeps the
+        # batch streaming.)  acceptance_per_live_row is the per-row window
+        # acceptance, the proposer-quality number.
+        self.spec_stats = {
+            "k": spec.k, "mode": spec.mode, "verify_steps": steps,
+            "live_row_steps": live_steps,
+            "emitted_per_step": ((n_new - 1) / steps if steps else 0.0),
+            "acceptance_per_live_row": (b * (n_new - 1) / live_steps
+                                        if live_steps else 0.0),
+        }
+        return toks
 
     def generate_reference(self, prompt_tokens, n_new: int,
                            extras: Optional[dict] = None, greedy: bool = True,
@@ -502,14 +578,34 @@ class ContinuousBatchingEngine:
 
     ``page_alloc_seed`` shuffles the free list so block tables become random
     permutations of physical pages — decode must be layout-independent
-    (tests/test_paged_serving.py exercises this)."""
+    (tests/test_paged_serving.py exercises this).
+
+    ``speculate`` (``serving.SpecConfig`` or int ``k``; n-gram mode only)
+    turns each decode-chunk iteration into a speculative verify window:
+    every slot proposes ``k`` tokens from its own history, the target
+    verifies the window in one pass, and each slot advances by its own
+    accepted length — per-slot position/page advance stays exact because
+    rejected page writes are dead by masking and rewritten by the next
+    window (``models.verify_step``).  Output tokens are identical to the
+    non-speculative engine (greedy only).  After ``serve``,
+    ``spec_emitted / decode_chunk_iters`` is the realised weight-stream
+    amortisation (chunk iterations = streams paid, counted for the plain
+    engine too so the two are comparable) and
+    ``spec_emitted / spec_live_steps`` the per-slot window acceptance."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_seq: int,
                  page_size: int = 8, num_pages: Optional[int] = None,
                  chunk: int = 8, pim_bits: int = 0, pad_id: int = 0,
-                 page_alloc_seed: Optional[int] = None, mesh=None):
+                 page_alloc_seed: Optional[int] = None, mesh=None,
+                 speculate=None):
         self.cfg = cfg
         self.mesh = mesh
+        self.spec = None if speculate is None else spec_mod.as_spec(speculate)
+        if self.spec is not None and self.spec.mode != "ngram":
+            raise NotImplementedError(
+                "the continuous-batching engine speculates with the n-gram "
+                "proposer (per-slot draft-model caches are not paged); use "
+                "SpecConfig(mode='ngram')")
         params = quantize_tree(params, pim_bits) if pim_bits else params
         if mesh is not None:
             params = shard_quantized_tree(params, mesh)
@@ -527,6 +623,15 @@ class ContinuousBatchingEngine:
                      if page_alloc_seed is not None else None)
         self.peak_pages_in_use = 0
         self.preemptions = 0
+        self.spec_emitted = 0  # tokens emitted by speculative verify windows
+        self.spec_live_steps = 0  # live (slot, iteration) verify windows
+        # chunk iterations executed, speculative or not — each streams the
+        # weight tree once (idle iterations after every slot finishes
+        # mid-chunk still pay): chunk-emitted tokens / decode_chunk_iters
+        # is the realised weight-stream amortisation, comparable between
+        # the plain and speculative engines; spec_emitted/spec_live_steps
+        # is the per-slot window acceptance (proposer quality).
+        self.decode_chunk_iters = 0
 
     # ------------------------------------------------------------- helpers --
     def _spad(self, length: int) -> int:
@@ -580,6 +685,9 @@ class ContinuousBatchingEngine:
         self._outputs = [[] for _ in requests]
         self._queue = deque(range(len(requests)))
         self._extras_slots = None
+        # per-slot token history (prompt + emissions) for the n-gram
+        # proposer; rewritten whole at admit, so stale rows never leak
+        self._hist = np.zeros((b, self.max_seq), np.int32)
 
     def _admit(self, requests, slot: int, ridx: int, greedy, temperature,
                top_k) -> None:
@@ -603,6 +711,9 @@ class ContinuousBatchingEngine:
             greedy=bool(greedy), top_k=int(top_k))
         tok0 = int(tok0)
         self._outputs[ridx].append(tok0)
+        self._hist[slot, :] = 0
+        self._hist[slot, :length] = np.asarray(req.prompt, np.int32)
+        self._hist[slot, length] = tok0
         self._pos[slot] = length
         self._n_out[slot] = 1
         self._max_new[slot] = req.max_new
@@ -650,10 +761,15 @@ class ContinuousBatchingEngine:
         ps = self.page_size
         length = len(req.prompt)
         spad = self._spad(length)
-        # Live writes in the next chunk land at pos .. pos+chunk-1, bounded
-        # by the last live write position length + max_new - 2; prefill
-        # already covered spad - 1.
-        last = min(int(self._pos[slot]) + self.chunk - 1,
+        # Live CONSUMED positions in the next chunk reach pos + advance - 1
+        # (advance = chunk steps x the window's worst-case accepted length),
+        # bounded by the last live write position length + max_new - 2;
+        # prefill already covered spad - 1.  Speculative writes BEYOND the
+        # consumed frontier need no pages: an unprovisioned block-table
+        # entry is 0, the trash page, and a token only ever gets consumed
+        # after being rewritten into a provisioned page.
+        adv = self.chunk * (self.spec.k + 1 if self.spec else 1)
+        last = min(int(self._pos[slot]) + adv - 1,
                    length + req.max_new - 2)
         need = max(last, spad - 1) // ps + 1
         have = len(self._slot_pages[slot])
@@ -676,6 +792,10 @@ class ContinuousBatchingEngine:
         """Run every request through the scheduler; returns one int32 array
         of emitted tokens per request (<= max_new; ends at the stop token
         if one fired).  Deterministic for a fixed key."""
+        if self.spec is not None and not greedy:
+            raise ValueError(
+                "speculative decode verifies greedy argmax prefixes; "
+                "sampling would break token-identity — pass greedy=True")
         ex_struct = jax.tree.structure(requests[0].extras) if requests else None
         for r in requests:
             if len(r.prompt) < 1 or r.max_new < 1:
@@ -692,6 +812,9 @@ class ContinuousBatchingEngine:
         n_stops = max((len(r.stop_tokens) for r in requests), default=0)
         self._reset(requests, n_stops)
         self.peak_pages_in_use = 0
+        self.spec_emitted = 0
+        self.spec_live_steps = 0
+        self.decode_chunk_iters = 0
 
         while self._queue or any(r >= 0 for r in self._slot_req):
             # Admit queued requests into free slots while pages last.
@@ -727,10 +850,35 @@ class ContinuousBatchingEngine:
                                          self.pages_in_use())
 
             self._cache["block_tables"] = jnp.asarray(self._bt)
-            step = (_decode_chunk if self.mesh is None else functools.partial(
-                _decode_chunk_sharded, mesh=self.mesh))
-            (self._cache, tok, pos, n_out, done, self._key, emits, lives) = \
-                step(
+            self.decode_chunk_iters += self.chunk
+            if self.spec is not None:
+                step = (spec_mod._spec_chunk if self.mesh is None else
+                        functools.partial(spec_mod._spec_chunk_sharded,
+                                          mesh=self.mesh))
+                (self._cache, tok, pos, n_out, done, hist, emits, ms) = step(
+                    self.params, self.cfg, self._cache, jnp.asarray(self._tok),
+                    jnp.asarray(self._pos), jnp.asarray(self._n_out),
+                    jnp.asarray(self._done), jnp.asarray(self._hist),
+                    jnp.asarray(self._max_new), jnp.asarray(self._stops),
+                    self._extras_slots, chunk=self.chunk,
+                    page_size=self.page_size, k=self.spec.k,
+                    ngram_n=self.spec.ngram_n, pad_id=self.pad_id)
+                self._hist = np.array(hist)
+                emits, ms = np.asarray(emits), np.asarray(ms)
+                for t in range(self.chunk):
+                    for slot in range(self.slots):
+                        mm = int(ms[t, slot])
+                        if mm and self._slot_req[slot] >= 0:
+                            self._outputs[self._slot_req[slot]].extend(
+                                int(x) for x in emits[t, slot, :mm])
+                            self.spec_emitted += mm
+                            self.spec_live_steps += 1
+            else:
+                step = (_decode_chunk if self.mesh is None
+                        else functools.partial(_decode_chunk_sharded,
+                                               mesh=self.mesh))
+                (self._cache, tok, pos, n_out, done, self._key, emits,
+                 lives) = step(
                     self.params, self.cfg, self._cache, jnp.asarray(self._tok),
                     jnp.asarray(self._pos), jnp.asarray(self._n_out),
                     jnp.asarray(self._done), jnp.asarray(self._max_new),
@@ -739,16 +887,16 @@ class ContinuousBatchingEngine:
                     chunk=self.chunk, page_size=self.page_size,
                     greedy=bool(greedy), top_k=int(top_k),
                     pad_id=self.pad_id)
+                emits, lives = np.asarray(emits), np.asarray(lives)
+                for t in range(self.chunk):
+                    for slot in range(self.slots):
+                        if lives[t, slot] and self._slot_req[slot] >= 0:
+                            self._outputs[self._slot_req[slot]].append(
+                                int(emits[t, slot]))
             self._tok = np.array(tok)  # np.array: writable host copies
             self._pos = np.array(pos)
             self._n_out = np.array(n_out)
             self._done = np.array(done)
-            emits, lives = np.asarray(emits), np.asarray(lives)
-            for t in range(self.chunk):
-                for slot in range(self.slots):
-                    if lives[t, slot] and self._slot_req[slot] >= 0:
-                        self._outputs[self._slot_req[slot]].append(
-                            int(emits[t, slot]))
             for slot in range(self.slots):
                 if self._slot_req[slot] >= 0 and self._done[slot]:
                     self._retire(slot)

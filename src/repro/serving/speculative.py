@@ -1,0 +1,327 @@
+"""Speculative multi-token decode: amortise one weight stream over several
+emitted tokens.
+
+The paper's bound — and ``BENCH_decode.json``'s — is weight bytes per token:
+every decode step streams the whole quantized tree to emit ONE token.
+Speculation proposes ``k`` cheap draft tokens, then runs the target model
+ONCE over the ``k+1``-token window (``models.verify_step``) and accepts the
+longest prefix whose greedy argmax agrees with the proposals, emitting
+``accepted + 1`` tokens (the accepted drafts plus the verify pass's own
+next token) per weight stream.  Verification is GREEDY: an accepted token
+is by construction exactly what non-speculative greedy decode would have
+emitted, so output is token-identical to the baseline and the speedup is
+pure (``tests/test_speculative.py`` enforces the parity matrix).
+
+Two proposers:
+
+* ``mode="ngram"`` — prompt-lookup decoding: match the last ``ngram_n``
+  tokens of the row's history (prompt + emissions) against every earlier
+  position and propose the ``k`` tokens that followed the most recent
+  match; fall back to repeating the last token.  Zero extra parameters,
+  runs inside the compiled program, and thrives on the repetitive tails
+  real decodes (and untrained-model attractors) produce.
+* ``mode="draft"`` — a small draft model (its own cache) proposes ``k``
+  tokens autoregressively; its per-step states stack across the chain
+  (``models.stack_verify_caches``) and commit once at the accepted length
+  with the same ``commit_verify`` machinery as the target — no re-sync
+  forward (single-device ``ServingEngine`` path).
+
+Rollback discipline (see ``models.verify_step``): attention/MLA writes at
+rejected positions are dead by masking and rewritten by the next window;
+SSM/conv state returns per-step stacked and ``commit_verify`` keeps the
+accepted step per row; the paged engine's rejected page writes are
+reclaimed the same way (the block tables never move).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import (
+    commit_verify,
+    init_cache,
+    prefill,
+    verify_step,
+)
+from repro.models.lm import stack_verify_caches
+from repro.serving.sharded import tree_pspecs
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Static speculation settings (hashable — safe to close over in jit).
+
+    ``k``: proposed tokens per verify step (the window is ``k+1`` wide).
+    ``mode``: ``"ngram"`` (prompt-lookup, default) or ``"draft"`` (draft
+    model; the engine must hold ``draft_cfg``/``draft_params``).
+    ``ngram_n``: match length for the prompt-lookup proposer."""
+
+    k: int = 4
+    mode: str = "ngram"
+    ngram_n: int = 2
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"speculation needs k >= 1, got {self.k}")
+        if self.mode not in ("ngram", "draft"):
+            raise ValueError(f"mode must be ngram|draft, got {self.mode!r}")
+        if self.ngram_n < 1:
+            raise ValueError(f"ngram_n must be >= 1, got {self.ngram_n}")
+
+
+def as_spec(speculate) -> SpecConfig:
+    """Normalise an engine's ``speculate=`` argument: SpecConfig, or an int
+    shorthand for ``SpecConfig(k=...)``."""
+    if isinstance(speculate, SpecConfig):
+        return speculate
+    return SpecConfig(k=int(speculate))
+
+
+# ---------------------------------------------------------------- proposer --
+def propose_ngram(hist: jnp.ndarray, hlen: jnp.ndarray, k: int,
+                  n: int) -> jnp.ndarray:
+    """Prompt-lookup proposal: for each row of ``hist`` (B, W) with live
+    length ``hlen`` (B,) — prompt plus every emitted token, the last one
+    still pending — find the most recent earlier occurrence of the trailing
+    ``n``-gram and propose the ``k`` tokens that followed it.  Positions
+    past the match's continuation (and rows with no match) propose the last
+    token — a cheap guess that costs nothing when rejected.  Returns
+    (B, k) int32."""
+    b, w = hist.shape
+    gi = hlen[:, None] - n + jnp.arange(n)[None, :]
+    gram = jnp.take_along_axis(hist, jnp.clip(gi, 0, w - 1), axis=1)  # (B, n)
+    match = jnp.ones((b, w), bool)
+    for i in range(n):
+        # window starting at q sees hist[q + i]; shift left, pad invalid
+        shifted = jnp.pad(hist[:, i:], ((0, 0), (0, i)), constant_values=-1)
+        match = match & (shifted == gram[:, i : i + 1])
+    q = jnp.arange(w)[None, :]
+    # strictly-earlier windows only: the trailing gram itself sits at
+    # hlen - n, so candidates end at hlen - n - 1
+    valid = match & (q <= hlen[:, None] - n - 1)
+    j = jnp.max(jnp.where(valid, q, -1), axis=1)  # (B,) most recent match
+    found = j >= 0
+    last = jnp.take_along_axis(hist, jnp.clip(hlen - 1, 0, w - 1)[:, None],
+                               axis=1)  # (B, 1)
+    src = j[:, None] + n + jnp.arange(k)[None, :]  # (B, k)
+    prop = jnp.take_along_axis(hist, jnp.clip(src, 0, w - 1), axis=1)
+    use = found[:, None] & (src < hlen[:, None])
+    return jnp.where(use, prop, last).astype(jnp.int32)
+
+
+def greedy_accept(window: jnp.ndarray, logits: jnp.ndarray):
+    """Longest-matching-prefix greedy acceptance.  ``window`` (B, k+1) is
+    the verified input (last accepted token + k proposals); ``logits``
+    (B, k+1, V) the target's outputs.  Returns ``(g, a)``: the target's
+    greedy tokens (B, k+1) — position j is the token following window[:j+1]
+    — and ``a`` (B,) the number of accepted proposals; the row emits
+    ``g[:a+1]`` (accepted proposals == g[:a] plus the free bonus token)."""
+    g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    match = (window[:, 1:] == g[:, :-1]).astype(jnp.int32)
+    a = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+    return g, a
+
+
+# ------------------------------------------------- fixed-batch spec engine --
+def _draft_propose(draft_params, draft_cfg, dcache, tok, pos, extras, k):
+    """Autoregressive draft proposals: k+1 single-token steps consume the
+    whole window ``[tok, d_1..d_k]`` (the extra step eats ``d_k`` so every
+    accepted length has a state; its own proposal is discarded).  Returns
+    ``(drafts (B,k), stacked)`` where ``stacked`` is the chain's states
+    merged into one verify cache (``models.stack_verify_caches``) — the
+    caller commits it once at the accepted length, no re-sync forward."""
+    dc, t, ds, vcs = dcache, tok, [], []
+    zero = jnp.zeros((tok.shape[0],), jnp.int32)
+    for i in range(k + 1):
+        lg, vc = verify_step(draft_params, draft_cfg, t, dc, pos + i, extras)
+        vcs.append(vc)
+        dc = commit_verify(draft_cfg, vc, zero)
+        t = jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        if i < k:
+            ds.append(t)
+    return (jnp.concatenate(ds, axis=1),
+            stack_verify_caches(draft_cfg, vcs))
+
+
+def _spec_generate_body(params, cfg: ModelConfig, prompt, extras, draft_params,
+                        *, draft_cfg, n_new: int, max_seq: int, k: int,
+                        mode: str, ngram_n: int):
+    """Whole speculative generation — prefill + a verify-window loop — as
+    one XLA program.  Greedy only.  Returns (tokens (B, n_new),
+    verify_steps, live_row_steps): tokens are identical to the plain greedy
+    ``generate``; emitted-per-live-row-step = ``B*(n_new-1) /
+    live_row_steps`` is the speculation multiplier."""
+    b, s = prompt.shape
+    if n_new == 0:
+        return (jnp.zeros((b, 0), jnp.int32), jnp.int32(0), jnp.int32(0))
+    cache = init_cache(cfg, b, max_seq)
+    logits, cache = prefill(params, cfg, prompt, cache, extras)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    hist = jnp.zeros((b, max_seq), jnp.int32)
+    hist = jax.lax.dynamic_update_slice(hist, prompt.astype(jnp.int32), (0, 0))
+    hist = hist.at[:, s].set(tok[:, 0])
+    out = jnp.zeros((b, n_new), jnp.int32).at[:, 0].set(tok[:, 0])
+    n_em = jnp.ones((b,), jnp.int32)
+    if mode == "draft":
+        dcache = init_cache(draft_cfg, b, max_seq)
+        _, dcache = prefill(draft_params, draft_cfg, prompt, dcache, extras)
+    else:
+        dcache = ()
+    rows = jnp.arange(b)[:, None]
+    steps0 = jnp.int32(0)
+
+    def cond(carry):
+        return jnp.any(carry[3] < n_new)
+
+    def body(carry):
+        tok, cache, dcache, n_em, out, hist, steps, live_steps = carry
+        pos = jnp.int32(s) - 1 + n_em  # (B,) tokens already consumed
+        if mode == "draft":
+            drafts, dstack = _draft_propose(draft_params, draft_cfg, dcache,
+                                            tok, pos, extras, k)
+        else:
+            drafts = propose_ngram(hist, jnp.int32(s) + n_em, k, ngram_n)
+        window = jnp.concatenate([tok, drafts], axis=1)  # (B, k+1)
+        lg, vc = verify_step(params, cfg, window, cache, pos, extras)
+        g, a = greedy_accept(window, lg)
+        live = n_em < n_new
+        m = jnp.where(live, jnp.minimum(a + 1, n_new - n_em), 0)  # (B,)
+        emit = jnp.arange(k + 1)[None, :] < m[:, None]
+        cols = n_em[:, None] + jnp.arange(k + 1)[None, :]
+        out = out.at[rows, jnp.where(emit, cols, n_new)].set(g, mode="drop")
+        hist = hist.at[rows, jnp.where(emit, jnp.int32(s) + cols, max_seq)
+                       ].set(g, mode="drop")
+        cache = commit_verify(cfg, vc, jnp.maximum(m - 1, 0))
+        if mode == "draft":
+            dcache = commit_verify(draft_cfg, dstack, jnp.maximum(m - 1, 0))
+        tok = jnp.where((m > 0)[:, None],
+                        jnp.take_along_axis(g, jnp.maximum(m - 1, 0)[:, None],
+                                            axis=1),
+                        tok)
+        n_em = n_em + m
+        return (tok, cache, dcache, n_em, out, hist, steps + 1,
+                live_steps + jnp.sum(live.astype(jnp.int32)))
+
+    carry = jax.lax.while_loop(
+        cond, body, (tok, cache, dcache, n_em, out, hist, steps0, steps0))
+    return carry[4], carry[6], carry[7]
+
+
+_spec_generate = functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "draft_cfg", "n_new", "max_seq", "k", "mode",
+                     "ngram_n"),
+)(_spec_generate_body)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "mesh", "n_new", "max_seq", "k", "ngram_n"),
+)
+def _spec_generate_sharded(params, cfg: ModelConfig, prompt, extras, *, mesh,
+                           n_new: int, max_seq: int, k: int, ngram_n: int):
+    """``_spec_generate_body`` (ngram mode) under ``shard_map``: weight
+    shards per device, everything else replicated — the loop condition is
+    computed from replicated values, so every device iterates in
+    lockstep."""
+
+    def f(p, pr, ex):
+        return _spec_generate_body(p, cfg, pr, ex, None, draft_cfg=None,
+                                   n_new=n_new, max_seq=max_seq, k=k,
+                                   mode="ngram", ngram_n=ngram_n)
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(tree_pspecs(params), P(), P()),
+        out_specs=(P(), P(), P()), check_rep=False,
+    )(params, prompt, extras)
+
+
+# ------------------------------------------- continuous-batching spec chunk --
+def _spec_chunk_body(params, cfg: ModelConfig, cache, tok, pos, n_out, done,
+                     hist, max_new, stops, extras, *, chunk: int,
+                     page_size: int, k: int, ngram_n: int, pad_id: int):
+    """``chunk`` speculative verify windows over all batch slots as one
+    compiled scan — the speculation analogue of ``engine._decode_chunk_body``
+    (greedy only).  Each iteration proposes ``k`` tokens per slot from its
+    history, verifies the window against the paged cache, and advances each
+    slot by its own accepted length (done slots advance 0 and write only
+    their own pages or the trash page).  Emissions are truncated at the
+    slot's first stop token and at ``max_new``.  Returns per-iteration
+    ``emits`` (chunk, B, k+1) and counts ``ms`` (chunk, B) — the host
+    appends ``emits[t, s, :ms[t, s]]``."""
+    b = tok.shape[0]
+    rows = jnp.arange(b)[:, None]
+
+    def body(carry, _):
+        tok, cache, pos, n_out, done, hist = carry
+        drafts = propose_ngram(hist, pos + 1, k, ngram_n)
+        window = jnp.concatenate([tok, drafts], axis=1)
+        lg, vc = verify_step(params, cfg, window, cache, pos, extras,
+                             page_size=page_size)
+        g, a = greedy_accept(window, lg)
+        live = ~done
+        m = jnp.minimum(a + 1, max_new - n_out)
+        hit = jnp.any(g[:, :, None] == stops[:, None, :], axis=-1)  # (B, k+1)
+        hitm = hit & (jnp.arange(k + 1)[None, :] < m[:, None])
+        any_hit = jnp.any(hitm, axis=1)
+        first = jnp.argmax(hitm.astype(jnp.int32), axis=1)
+        m = jnp.where(any_hit, first + 1, m)
+        m = jnp.where(live, m, 0)
+        emit_mask = jnp.arange(k + 1)[None, :] < m[:, None]
+        emit = jnp.where(emit_mask, g, jnp.int32(pad_id))
+        histcol = pos[:, None] + 1 + jnp.arange(k + 1)[None, :]
+        hist = hist.at[rows, jnp.where(emit_mask, histcol, hist.shape[1])
+                       ].set(g, mode="drop")
+        tok = jnp.where((m > 0)[:, None],
+                        jnp.take_along_axis(g, jnp.maximum(m - 1, 0)[:, None],
+                                            axis=1),
+                        tok)
+        pos = pos + m
+        n_out = n_out + m
+        done = done | (live & any_hit) | (n_out >= max_new)
+        cache = commit_verify(cfg, vc, jnp.maximum(m - 1, 0))
+        return (tok, cache, pos, n_out, done, hist), (emit, m)
+
+    carry, (emits, ms) = jax.lax.scan(
+        body, (tok, cache, pos, n_out, done, hist), None, length=chunk)
+    tok, cache, pos, n_out, done, hist = carry
+    return cache, tok, pos, n_out, done, hist, emits, ms
+
+
+_spec_chunk = functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "chunk", "page_size", "k", "ngram_n", "pad_id"),
+    donate_argnames=("cache",),
+)(_spec_chunk_body)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "mesh", "chunk", "page_size", "k", "ngram_n",
+                     "pad_id"),
+    donate_argnames=("cache",),
+)
+def _spec_chunk_sharded(params, cfg: ModelConfig, cache, tok, pos, n_out,
+                        done, hist, max_new, stops, extras, *, mesh,
+                        chunk: int, page_size: int, k: int, ngram_n: int,
+                        pad_id: int):
+    """``_spec_chunk_body`` under ``shard_map`` (weight shards per device,
+    paged pools / history / scheduler carry replicated)."""
+
+    def f(p, c, tk, ps_, no, dn, hs, mn, st, ex):
+        return _spec_chunk_body(p, cfg, c, tk, ps_, no, dn, hs, mn, st, ex,
+                                chunk=chunk, page_size=page_size, k=k,
+                                ngram_n=ngram_n, pad_id=pad_id)
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(tree_pspecs(params),) + (P(),) * 9,
+        out_specs=P(), check_rep=False,
+    )(params, cache, tok, pos, n_out, done, hist, max_new, stops, extras)

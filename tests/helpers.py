@@ -1,0 +1,121 @@
+"""Shared parity-test harness.
+
+Every serving-side test suite asks the same two questions per model family:
+"build me a reduced model with its per-family extras" and "do engine A and
+engine B emit the same tokens?".  Those loops used to be duplicated across
+test_serving / test_paged_serving / test_sharded_decode; they live here once
+so the family x engine x bits matrices (including the speculative-vs-greedy
+one in test_speculative) all drive the same fixtures.
+
+``FAMILY_ARCHS`` is THE canonical one-arch-per-family list (moe is covered
+both with and without MLA, so "six families" tests iterate seven archs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import encode, init_params
+from repro.serving import ContinuousBatchingEngine, Request, ServingEngine
+
+# One arch per family (moe is covered both with and without MLA).
+FAMILY_ARCHS = [
+    "qwen2-1.5b",            # dense
+    "deepseek-v2-lite-16b",  # moe + MLA (paged latent cache)
+    "moonshot-v1-16b-a3b",   # moe, plain GQA
+    "falcon-mamba-7b",       # ssm (per-slot dense state)
+    "zamba2-1.2b",           # hybrid (paged shared-attn + dense ssm state)
+    "llama-3.2-vision-90b",  # vlm
+    "seamless-m4t-medium",   # encdec
+]
+
+ENGINE_KINDS = ("fixed", "continuous")
+
+
+def setup_family(arch, b=2, s=8, key=0, kv_bits=0):
+    """Reduced config + init params + a random prompt + the family's extras
+    (vlm image embeds / encdec encoder output).  The shared fixture behind
+    every per-family engine-parity loop."""
+    cfg = get_reduced(arch)
+    if kv_bits:
+        cfg = cfg.replace(kv_cache_bits=kv_bits)
+    params = init_params(cfg, jax.random.PRNGKey(key))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    extras = None
+    if cfg.family == "vlm":
+        extras = {"image_embeds": jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.vision.n_image_tokens, cfg.d_model))}
+    elif cfg.family == "encdec":
+        frames = jax.random.normal(
+            jax.random.PRNGKey(3), (b, cfg.audio.n_frames, cfg.d_model))
+        extras = {"enc_out": encode(params, cfg, frames)}
+    return cfg, params, prompt, extras
+
+
+def request_extras(extras, i):
+    """Row ``i`` of batched extras as a per-request extras tree."""
+    return None if extras is None else jax.tree.map(lambda a: a[i], extras)
+
+
+def build_engine(kind, cfg, params, *, max_seq, bits=0, mesh=None,
+                 speculate=None, slots=2, page_size=4, chunk=3,
+                 page_alloc_seed=None, **kw):
+    """One constructor for the parity matrices: ``kind`` is "fixed"
+    (ServingEngine) or "continuous" (ContinuousBatchingEngine on the paged
+    cache).  Speculation on the fixed engine is a generate-time argument, so
+    it is threaded through ``generate_tokens`` instead."""
+    if kind == "fixed":
+        return ServingEngine(cfg, params, max_seq=max_seq, pim_bits=bits,
+                             mesh=mesh, **kw)
+    if kind == "continuous":
+        return ContinuousBatchingEngine(
+            cfg, params, slots=slots, max_seq=max_seq, page_size=page_size,
+            chunk=chunk, pim_bits=bits, mesh=mesh, speculate=speculate,
+            page_alloc_seed=page_alloc_seed, **kw)
+    raise ValueError(kind)
+
+
+def generate_tokens(engine, prompt, n_new, extras=None, speculate=None,
+                    **kw) -> np.ndarray:
+    """Greedy batch generation on either engine kind, as a host array."""
+    if isinstance(engine, ServingEngine):
+        return np.asarray(engine.generate(prompt, n_new=n_new, extras=extras,
+                                          speculate=speculate, **kw))
+    assert speculate is None, "continuous engines speculate via constructor"
+    return np.asarray(engine.generate(prompt, n_new=n_new, extras=extras,
+                                      **kw))
+
+
+def assert_tokens_identical(want, got, msg=""):
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got),
+                                  err_msg=msg)
+
+
+def batch_requests(prompt, n_new, extras=None, stop_tokens=()):
+    """Split a (B, S) prompt batch into per-row Requests (row i of batched
+    extras rides on request i)."""
+    prompts = np.asarray(prompt, np.int32)
+    return [
+        Request(prompt=row, max_new=int(n_new), stop_tokens=tuple(stop_tokens),
+                extras=request_extras(extras, i))
+        for i, row in enumerate(prompts)
+    ]
+
+
+def assert_serve_matches_solo(engine, cfg, params, requests, max_seq=None):
+    """Every request served by the scheduler must emit exactly the tokens of
+    a solo run on the dense fixed-batch engine — the staggered-admit/retire
+    parity loop shared by the paged and speculative suites."""
+    outs = engine.serve(requests)
+    dense = ServingEngine(cfg, params, max_seq=max_seq or engine.max_seq)
+    for i, (r, got) in enumerate(zip(requests, outs)):
+        ex = None
+        if r.extras is not None:
+            ex = jax.tree.map(lambda a: jnp.asarray(a)[None], r.extras)
+        want = np.asarray(dense.generate(
+            jnp.asarray(r.prompt)[None], r.max_new, extras=ex))[0]
+        if r.stop_tokens:
+            hits = np.flatnonzero(np.isin(want, list(r.stop_tokens)))
+            if hits.size:
+                want = want[: hits[0] + 1]
+        assert_tokens_identical(want, got, msg=f"request {i}")

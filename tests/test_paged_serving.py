@@ -11,9 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from helpers import FAMILY_ARCHS, assert_serve_matches_solo, setup_family as _setup
 
 from repro.configs import get_reduced
-from repro.models import encode, init_params
+from repro.models import init_params
 from repro.serving import (
     ContinuousBatchingEngine,
     Request,
@@ -22,32 +23,6 @@ from repro.serving import (
     pim_bytes,
     quantize_tree,
 )
-
-# One arch per family (moe is covered both with and without MLA).
-FAMILY_ARCHS = [
-    "qwen2-1.5b",            # dense
-    "deepseek-v2-lite-16b",  # moe + MLA (paged latent cache)
-    "moonshot-v1-16b-a3b",   # moe, plain GQA
-    "falcon-mamba-7b",       # ssm (per-slot dense state)
-    "zamba2-1.2b",           # hybrid (paged shared-attn + dense ssm state)
-    "llama-3.2-vision-90b",  # vlm
-    "seamless-m4t-medium",   # encdec
-]
-
-
-def _setup(arch, b=2, s=8, key=0):
-    cfg = get_reduced(arch)
-    params = init_params(cfg, jax.random.PRNGKey(key))
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
-    extras = None
-    if cfg.family == "vlm":
-        extras = {"image_embeds": jax.random.normal(
-            jax.random.PRNGKey(2), (b, cfg.vision.n_image_tokens, cfg.d_model))}
-    elif cfg.family == "encdec":
-        frames = jax.random.normal(
-            jax.random.PRNGKey(3), (b, cfg.audio.n_frames, cfg.d_model))
-        extras = {"enc_out": encode(params, cfg, frames)}
-    return cfg, params, prompt, extras
 
 
 # ------------------------------------------------------- paged/dense parity -
@@ -331,6 +306,61 @@ def test_fixed_engine_stop_at_exactly_n_new():
     got = np.asarray(eng.generate(prompt, n_new=5, stop_tokens=(stop,),
                                   pad_id=-1))
     np.testing.assert_array_equal(got[0], base[0])
+
+
+# ------------------------------------------------- page rollback / reuse ----
+@pytest.mark.parametrize("speculate", [None, 4])
+def test_freed_pages_reused_after_retirement(speculate):
+    """A pool far smaller than the trace's total page demand forces retired
+    requests' pages to be re-issued to later admits; every request must
+    still match its solo run — freed pages carry no ghost K/V (and, with
+    speculation, no ghost speculative writes from their previous owner)."""
+    cfg, params, _, _ = _setup("qwen2-1.5b")
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=L).astype(np.int32),
+                    max_new=m)
+            for L, m in [(6, 6), (5, 7), (8, 4), (7, 5), (4, 8), (6, 5),
+                         (7, 6), (5, 6)]]
+    ps, num_pages = 4, 10  # usable capacity: 9 pages
+    demand = sum(-(-(len(r.prompt) + r.max_new) // ps) for r in reqs)
+    assert demand > 2 * (num_pages - 1)  # reuse is forced, repeatedly
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_seq=16, page_size=ps, num_pages=num_pages,
+        chunk=3, page_alloc_seed=5, speculate=speculate)
+    assert_serve_matches_solo(eng, cfg, params, reqs)
+    assert eng.pages_in_use() == 0  # everything retired -> all pages freed
+
+
+@pytest.mark.parametrize("speculate", [None, 4])
+def test_preemption_recompute_identical_tokens(speculate):
+    """Recompute preemption frees the victim's pages mid-flight and
+    re-admits it from scratch; tokens must be identical to solo runs —
+    including when the freed pages contained speculative writes past the
+    victim's accepted frontier."""
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_seq=32, page_size=4, num_pages=9, chunk=4,
+        speculate=speculate)
+    reqs = [Request(prompt=np.asarray(prompt[0]), max_new=20),
+            Request(prompt=np.asarray(prompt[1]), max_new=20)]
+    assert_serve_matches_solo(eng, cfg, params, reqs)
+    assert eng.preemptions > 0
+
+
+def test_speculative_rejected_writes_do_not_leak_across_slots():
+    """Two slots interleave speculative windows whose rejected tail writes
+    land beyond their accepted frontiers; a page-permuted pool must still
+    reproduce the dense engine exactly (rejected writes stay confined to
+    each slot's own pages / the trash page)."""
+    cfg, params, prompt, _ = _setup("falcon-mamba-7b")
+    dense = ServingEngine(cfg, params, max_seq=24)
+    want = np.asarray(dense.generate(prompt, n_new=8))
+    for seed in (0, 11):
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=2, max_seq=24, page_size=4, chunk=2,
+            page_alloc_seed=seed, speculate=6)
+        got = np.asarray(eng.generate(prompt, n_new=8))
+        np.testing.assert_array_equal(want, got, err_msg=f"seed={seed}")
 
 
 # ------------------------------------------------------------- pim_bytes ----

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from helpers import setup_family
 
 from repro.configs import ARCH_IDS, get_reduced
 from repro.models import forward, init_params
@@ -58,8 +59,7 @@ def test_quantize_tree_keeps_norms_dense():
 
 
 def test_serving_engine_generates():
-    cfg = get_reduced("qwen2-1.5b")
-    params = init_params(cfg, jax.random.PRNGKey(0))
+    cfg, params, _, _ = setup_family("qwen2-1.5b")
     eng = ServingEngine(cfg, params, max_seq=32, pim_bits=8)
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, cfg.vocab)
     out = eng.generate(prompt, n_new=5)

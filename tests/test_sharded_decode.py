@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from helpers import FAMILY_ARCHS
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_reduced
@@ -54,16 +55,6 @@ from repro.serving import (
 )
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-FAMILY_ARCHS = [
-    "qwen2-1.5b",            # dense
-    "deepseek-v2-lite-16b",  # moe + MLA
-    "moonshot-v1-16b-a3b",   # moe, plain GQA
-    "falcon-mamba-7b",       # ssm
-    "zamba2-1.2b",           # hybrid
-    "llama-3.2-vision-90b",  # vlm
-    "seamless-m4t-medium",   # encdec
-]
 
 # Which quantized leaves the decode rule distributes, per family — the
 # leaves the TRAIN rule shards somewhere (TP or FSDP).  x_proj is the one

@@ -1,0 +1,328 @@
+"""Speculative multi-token decode (serving.speculative).
+
+The contract is exactness: greedy verification accepts only proposals that
+match the target's own argmax, so speculative decode must be TOKEN-IDENTICAL
+to plain greedy decode — independent of proposer quality, draft model,
+acceptance rate, engine, bit width, or device mesh.  The matrix here runs
+family x engine x bits through the shared parity harness (tests/helpers.py);
+the 8-virtual-device legs reuse the subprocess idiom of
+test_sharded_decode.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from helpers import (
+    FAMILY_ARCHS,
+    assert_serve_matches_solo,
+    assert_tokens_identical,
+    batch_requests,
+    build_engine,
+    generate_tokens,
+    setup_family,
+)
+
+from repro.serving import (
+    ContinuousBatchingEngine,
+    Request,
+    ServingEngine,
+    SpecConfig,
+    propose_ngram,
+)
+from repro.serving.speculative import greedy_accept
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------------ parity matrix -
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_spec_fixed_engine_parity_all_families(arch):
+    """ServingEngine.generate(speculate=) == plain greedy generate, every
+    family — acceptance criterion's single-device fixed-engine leg."""
+    cfg, params, prompt, extras = setup_family(arch)
+    eng = build_engine("fixed", cfg, params, max_seq=16, bits=8)
+    want = generate_tokens(eng, prompt, 5, extras)
+    got = generate_tokens(eng, prompt, 5, extras, speculate=SpecConfig(k=4))
+    assert_tokens_identical(want, got, msg=arch)
+    assert eng.spec_stats["verify_steps"] >= 1
+    assert eng.spec_stats["emitted_per_step"] >= 1.0
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_spec_continuous_engine_parity_all_families(arch):
+    """The speculative continuous-batching engine (per-slot history,
+    variable accepted-length page advance) == the plain one, every family —
+    the single-device paged-engine leg."""
+    cfg, params, prompt, extras = setup_family(arch)
+    plain = build_engine("continuous", cfg, params, max_seq=16,
+                         page_alloc_seed=7)
+    want = generate_tokens(plain, prompt, 5, extras)
+    spec = build_engine("continuous", cfg, params, max_seq=16,
+                        page_alloc_seed=7, speculate=SpecConfig(k=4))
+    got = generate_tokens(spec, prompt, 5, extras)
+    assert_tokens_identical(want, got, msg=arch)
+    assert spec.spec_live_steps >= 1
+    assert spec.spec_emitted >= spec.spec_live_steps  # >= 1 token per window
+
+
+@pytest.mark.parametrize("bits,kv_bits", [(0, 0), (8, 0), (4, 0), (8, 8)])
+@pytest.mark.parametrize("kind", ["fixed", "continuous"])
+def test_spec_parity_bits_matrix(kind, bits, kv_bits):
+    """Weight storage (dense / INT8 / INT4) and the INT8 KV cache (the
+    quantized branch of ``attn_verify``: window re-quantization + the
+    k_scale/v_scale scatter) never break speculative token-identity, on
+    either engine."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b", kv_bits=kv_bits)
+    if kind == "fixed":
+        eng = build_engine(kind, cfg, params, max_seq=16, bits=bits)
+        want = generate_tokens(eng, prompt, 5, extras)
+        got = generate_tokens(eng, prompt, 5, extras, speculate=4)
+    else:
+        want = generate_tokens(
+            build_engine(kind, cfg, params, max_seq=16, bits=bits),
+            prompt, 5, extras)
+        got = generate_tokens(
+            build_engine(kind, cfg, params, max_seq=16, bits=bits,
+                         speculate=4),
+            prompt, 5, extras)
+    assert_tokens_identical(want, got, msg=f"{kind} bits={bits} kv={kv_bits}")
+
+
+@pytest.mark.parametrize("k", [1, 2, 7])
+def test_spec_window_sizes(k):
+    """Any window size is exact (k=1 is the minimal draft; k=7 overshoots
+    n_new, exercising the emission cap)."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    eng = build_engine("fixed", cfg, params, max_seq=32)
+    want = generate_tokens(eng, prompt, 6, extras)
+    got = generate_tokens(eng, prompt, 6, extras, speculate=SpecConfig(k=k))
+    assert_tokens_identical(want, got, msg=f"k={k}")
+
+
+def test_spec_staggered_continuous_matches_solo():
+    """Mixed prompt lengths / budgets through the speculative scheduler:
+    every request equals its solo dense run (admit/retire staggering with
+    per-slot accepted lengths)."""
+    cfg, params, _, _ = setup_family("qwen2-1.5b")
+    rng = np.random.default_rng(0)
+    shapes = [(5, 4), (7, 6), (3, 3), (9, 5), (4, 7)]
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=L).astype(np.int32),
+                    max_new=m) for L, m in shapes]
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=24,
+                                   page_size=4, chunk=3, page_alloc_seed=1,
+                                   speculate=SpecConfig(k=4))
+    assert_serve_matches_solo(eng, cfg, params, reqs)
+
+
+def test_spec_stop_token_truncates_inside_window():
+    """A stop token landing mid-window truncates that slot's emissions at
+    the stop and retires it, exactly like the per-token engine."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    dense = ServingEngine(cfg, params, max_seq=16)
+    base = np.asarray(dense.generate(prompt, n_new=6))
+    stop = int(base[0, 3])
+    first = int(np.argmax(base[0] == stop))
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                   page_size=4, chunk=2,
+                                   speculate=SpecConfig(k=4))
+    outs = eng.serve([
+        Request(prompt=np.asarray(prompt[0]), max_new=6, stop_tokens=(stop,)),
+        Request(prompt=np.asarray(prompt[1]), max_new=6),
+    ])
+    assert_tokens_identical(base[0, : first + 1], outs[0])
+    assert_tokens_identical(base[1], outs[1])
+    assert eng.pages_in_use() == 0
+
+
+def test_spec_fixed_engine_stop_tokens_masked():
+    """The fixed engine's stop handling is post-masking; speculation must
+    compose with it identically."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=16)
+    base = np.asarray(eng.generate(prompt, n_new=6))
+    stop = int(base[0, 2])
+    want = np.asarray(eng.generate(prompt, n_new=6, stop_tokens=(stop,),
+                                   pad_id=-1))
+    got = np.asarray(eng.generate(prompt, n_new=6, stop_tokens=(stop,),
+                                  pad_id=-1, speculate=4))
+    assert_tokens_identical(want, got)
+
+
+# ------------------------------------------------------------- draft model --
+def test_spec_draft_mode_self_draft_full_acceptance():
+    """Draft == target: every proposal matches, so each verify window emits
+    its full k+1 tokens (minus the final capped window) and the output is
+    identical to plain greedy."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=32, pim_bits=8, draft_cfg=cfg,
+                        draft_params=params, draft_pim_bits=8)
+    want = generate_tokens(eng, prompt, 9, extras)
+    got = generate_tokens(eng, prompt, 9, extras,
+                          speculate=SpecConfig(k=3, mode="draft"))
+    assert_tokens_identical(want, got)
+    # b=2 rows, 8 post-prefill tokens each, k+1=4 per window: 2 windows/row
+    assert eng.spec_stats["emitted_per_step"] == pytest.approx(4.0)
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "zamba2-1.2b"])
+def test_spec_draft_mode_mismatched_draft_still_exact(arch):
+    """A WORSE draft (int4-quantized weights vs the int8 target) may get
+    rejected more, but exactness is independent of draft quality — the SSM
+    state rollback to the accepted step is what this stresses."""
+    cfg, params, prompt, extras = setup_family(arch)
+    eng = ServingEngine(cfg, params, max_seq=32, pim_bits=8, draft_cfg=cfg,
+                        draft_params=params, draft_pim_bits=4)
+    want = generate_tokens(eng, prompt, 7, extras)
+    got = generate_tokens(eng, prompt, 7, extras,
+                          speculate=SpecConfig(k=3, mode="draft"))
+    assert_tokens_identical(want, got, msg=arch)
+
+
+def test_spec_draft_mode_requires_draft_model():
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=16)
+    with pytest.raises(ValueError, match="draft"):
+        eng.generate(prompt, n_new=4, speculate=SpecConfig(k=2, mode="draft"))
+
+
+# --------------------------------------------------------------- guardrails -
+def test_spec_rejects_sampling():
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=16)
+    with pytest.raises(ValueError, match="greedy"):
+        eng.generate(prompt, n_new=4, greedy=False, speculate=4)
+    with pytest.raises(ValueError, match="greedy"):
+        ContinuousBatchingEngine(cfg, params, slots=1, max_seq=16,
+                                 page_size=4, speculate=4).serve(
+            [Request(prompt=np.asarray(prompt[0]), max_new=2)], greedy=False)
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="k >= 1"):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError, match="mode"):
+        SpecConfig(mode="oracle")
+    cfg, params, _, _ = setup_family("qwen2-1.5b")
+    with pytest.raises(NotImplementedError, match="ngram"):
+        ContinuousBatchingEngine(cfg, params, slots=1, max_seq=16,
+                                 page_size=4,
+                                 speculate=SpecConfig(mode="draft"))
+
+
+# ------------------------------------------------------------ proposer unit -
+def test_propose_ngram_prompt_lookup():
+    """The trailing n-gram [3, 4] recurs earlier; proposals are the tokens
+    that followed the MOST RECENT earlier occurrence."""
+    hist = jnp.asarray([[1, 3, 4, 9, 3, 4, 7, 2, 3, 4, 0, 0]], jnp.int32)
+    hlen = jnp.asarray([10])  # live prefix: 1 3 4 9 3 4 7 2 3 4
+    out = np.asarray(propose_ngram(hist, hlen, k=3, n=2))
+    # most recent earlier [3,4] is at 4..5 -> continuation 7, 2, 3
+    np.testing.assert_array_equal(out, [[7, 2, 3]])
+
+
+def test_propose_ngram_fallback_repeats_last():
+    hist = jnp.zeros((1, 8), jnp.int32).at[0, :4].set(
+        jnp.asarray([5, 6, 7, 8]))
+    out = np.asarray(propose_ngram(hist, jnp.asarray([4]), k=3, n=2))
+    np.testing.assert_array_equal(out, [[8, 8, 8]])  # no earlier [7,8]
+
+
+def test_propose_ngram_continuation_past_live_end():
+    """A match whose continuation runs past the live prefix pads with the
+    pending token instead of reading stale history."""
+    hist = jnp.asarray([[2, 5, 2, 5, 0, 0, 0, 0]], jnp.int32)
+    out = np.asarray(propose_ngram(hist, jnp.asarray([4]), k=4, n=2))
+    # match [2,5] at 0..1 -> continuation 2, 5, then past hlen -> last (5)
+    np.testing.assert_array_equal(out, [[2, 5, 5, 5]])
+
+
+def test_greedy_accept_longest_prefix():
+    window = jnp.asarray([[7, 1, 2, 3]], jnp.int32)  # tok + drafts 1,2,3
+    v = 10
+    logits = jnp.full((1, 4, v), -1.0)
+    # target's argmax after 7 -> 1 (match), after 1 -> 2 (match),
+    # after 2 -> 9 (MISMATCH with draft 3), after 3 -> irrelevant
+    logits = logits.at[0, 0, 1].set(1.0).at[0, 1, 2].set(1.0)
+    logits = logits.at[0, 2, 9].set(1.0).at[0, 3, 4].set(1.0)
+    g, a = greedy_accept(window, logits)
+    assert int(a[0]) == 2  # drafts 1, 2 accepted, 3 rejected
+    np.testing.assert_array_equal(np.asarray(g), [[1, 2, 9, 4]])
+    # row emits g[: a+1] = [1, 2, 9]: accepted drafts + bonus correction
+
+
+# ----------------------------------------------- 8-device token identity ----
+SPEC_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import numpy as np
+import jax, jax.numpy as jnp
+sys.path.insert(0, os.path.join(r"{repo}", "tests"))
+from helpers import setup_family, build_engine, generate_tokens, batch_requests
+from repro.serving import SpecConfig, make_decode_mesh
+
+MODE = sys.argv[1]
+ARCHS = sys.argv[2].split(",")
+mesh = make_decode_mesh(8)
+out = []
+for arch in ARCHS:
+    cfg, params, prompt, extras = setup_family(arch)
+    row = {{"arch": arch}}
+    if MODE == "fixed":
+        plain = build_engine("fixed", cfg, params, max_seq=16, bits=8)
+        shard = build_engine("fixed", cfg, params, max_seq=16, bits=8,
+                             mesh=mesh)
+        want = generate_tokens(plain, prompt, 5, extras)
+        got = generate_tokens(shard, prompt, 5, extras,
+                              speculate=SpecConfig(k=4))
+        row["identical"] = bool(np.array_equal(want, got))
+        row["emitted_per_step"] = shard.spec_stats["emitted_per_step"]
+    elif MODE == "paged":
+        plain = build_engine("continuous", cfg, params, max_seq=16, bits=8,
+                             page_alloc_seed=7)
+        shard = build_engine("continuous", cfg, params, max_seq=16, bits=8,
+                             page_alloc_seed=7, mesh=mesh,
+                             speculate=SpecConfig(k=4))
+        reqs_a = batch_requests(prompt, 5, extras)
+        reqs_b = batch_requests(prompt, 5, extras)
+        a, b = plain.serve(reqs_a), shard.serve(reqs_b)
+        row["identical"] = bool(all(np.array_equal(x, y)
+                                    for x, y in zip(a, b)))
+    out.append(row)
+print("RESULT " + json.dumps(out))
+""".format(repo=REPO)
+
+
+def _run_spec_sharded(mode: str, archs: str):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", SPEC_SNIPPET, mode, archs],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_spec_sharded_fixed_engine_all_families():
+    """Acceptance: speculative greedy decode on a forced 8-virtual-device
+    mesh == non-speculative single-device greedy, fixed engine, all
+    families."""
+    rows = _run_spec_sharded("fixed", ",".join(FAMILY_ARCHS))
+    for r in rows:
+        assert r["identical"], r
+        assert r["emitted_per_step"] >= 1.0, r
+
+
+def test_spec_sharded_paged_engine_all_families():
+    """Acceptance: the speculative continuous-batching scheduler under
+    shard_map == its plain single-device run, all families."""
+    rows = _run_spec_sharded("paged", ",".join(FAMILY_ARCHS))
+    for r in rows:
+        assert r["identical"], r
