@@ -19,11 +19,13 @@ TPU time):
     weight stream is what bounds memory-bound decode, so its 1/N drop is
     the PiCaSO scaling story (virtual CPU devices share one socket, so the
     tokens/sec column is a collectives-overhead proxy, not a speedup);
-  * the ``--speculate K`` axis: plain greedy vs speculative multi-token
-    decode (n-gram proposer + one verify forward per window), recording
-    tokens/sec and emitted-tokens-per-verify-step — each verify step
-    streams the weights ONCE, so emitted/step multiplies the
-    weight-bytes-per-token win directly.
+  * the ``--speculate K`` axis: plain vs speculative multi-token decode
+    (n-gram proposer + one verify forward per window), under greedy decode
+    AND ``--temperature T`` sampling (rejection-sampling verification),
+    recording tokens/sec, emitted-tokens-per-verify-step and the
+    per-window acceptance rate — each verify step streams the weights
+    ONCE, so emitted/step is tokens-per-weight-stream, the multiplier on
+    the weight-bytes-per-token win.
 
 Writes ``BENCH_decode.json`` (repo root) for the PR-over-PR perf trajectory.
 Run: ``python benchmarks/decode_bench.py`` (add ``--quick`` for CI smoke).
@@ -126,12 +128,16 @@ def bench_fastpath_vs_seed(arch: str, batch: int, prompt_len: int, n_new: int,
 
 
 def bench_speculative(archs, batch: int, prompt_len: int, n_new: int,
-                      reps: int, speculate: int):
-    """The speculation axis: INT8 engine, greedy, ``--speculate K`` vs the
-    plain scan (K=0).  Records tokens/sec AND the realised
-    emitted-tokens-per-verify-step — each verify step streams the weight
-    tree ONCE, so emitted/step is the direct multiplier on the
-    weight-bytes-per-token bound the grid section records."""
+                      reps: int, speculate: int, temperature: float):
+    """The speculation axis: INT8 engine, ``--speculate K`` vs the plain
+    scan (K=0), under greedy decode AND temperature sampling
+    (``--temperature T``: rejection-sampling verification).  Records
+    tokens/sec, the realised emitted-tokens-per-verify-step (each verify
+    step streams the weight tree ONCE, so emitted/step is the
+    tokens-per-weight-stream multiplier on the weight-bytes-per-token
+    bound the grid section records) and the per-window acceptance rate
+    (``acceptance_per_live_row`` — per-row tokens per live verify window,
+    the proposer-quality number sampling moves)."""
     import jax
     from repro.configs import get_reduced
     from repro.models import init_params
@@ -145,28 +151,42 @@ def bench_speculative(archs, batch: int, prompt_len: int, n_new: int,
             jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab)
         eng = ServingEngine(cfg, params, max_seq=prompt_len + n_new,
                             pim_bits=8)
-        for k in (0, speculate):
-            spec = SpecConfig(k=k) if k else None
-            dt = _timed(lambda: eng.generate(prompt, n_new=n_new,
-                                             speculate=spec), reps)
-            row = {
-                "arch": arch,
-                "speculate_k": k,
-                "tokens_per_sec": batch * n_new / dt,
-                "emitted_per_step": (eng.spec_stats["emitted_per_step"]
-                                     if k else 1.0),
-            }
-            if k:
-                base = [r for r in rows
-                        if r["arch"] == arch and r["speculate_k"] == 0][0]
-                row["speedup_vs_plain"] = (row["tokens_per_sec"]
-                                           / base["tokens_per_sec"])
-            rows.append(row)
-            extra = (f"  {row.get('speedup_vs_plain', 1.0):5.2f}x, "
-                     f"{row['emitted_per_step']:.2f} tok/verify-step"
-                     if k else "")
-            print(f"{arch:16s} speculate={k}  "
-                  f"{row['tokens_per_sec']:10.1f} tok/s{extra}")
+        modes = [(True, 0.0)]
+        if temperature > 0:
+            modes.append((False, temperature))
+        for greedy, temp in modes:
+            for k in (0, speculate):
+                spec = SpecConfig(k=k) if k else None
+                dt = _timed(lambda: eng.generate(
+                    prompt, n_new=n_new, speculate=spec, greedy=greedy,
+                    temperature=temp or 1.0,
+                    key=jax.random.PRNGKey(2)), reps)
+                row = {
+                    "arch": arch,
+                    "speculate_k": k,
+                    "greedy": greedy,
+                    "temperature": None if greedy else temp,
+                    "tokens_per_sec": batch * n_new / dt,
+                    "emitted_per_step": (eng.spec_stats["emitted_per_step"]
+                                         if k else 1.0),
+                    "acceptance_per_live_row": (
+                        eng.spec_stats["acceptance_per_live_row"]
+                        if k else 1.0),
+                }
+                if k:
+                    base = [r for r in rows
+                            if r["arch"] == arch and r["speculate_k"] == 0
+                            and r["greedy"] == greedy][0]
+                    row["speedup_vs_plain"] = (row["tokens_per_sec"]
+                                               / base["tokens_per_sec"])
+                rows.append(row)
+                tag = "greedy" if greedy else f"T={temp}"
+                extra = (f"  {row.get('speedup_vs_plain', 1.0):5.2f}x, "
+                         f"{row['emitted_per_step']:.2f} tok/stream, "
+                         f"{row['acceptance_per_live_row']:.2f} acc/window"
+                         if k else "")
+                print(f"{arch:16s} speculate={k} {tag:8s} "
+                      f"{row['tokens_per_sec']:10.1f} tok/s{extra}")
     return rows
 
 
@@ -223,6 +243,11 @@ def main(argv=None) -> None:
     ap.add_argument("--speculate", type=int, default=4,
                     help="speculation window K for the --speculate axis "
                     "(K=0 plain vs K, n-gram proposer; 0 disables)")
+    ap.add_argument("--temperature", type=float, default=0.8,
+                    help="adds a sampled leg to the --speculate axis: "
+                    "rejection-sampling verification at this temperature, "
+                    "recording acceptance rate and tokens-per-weight-"
+                    "stream under sampling (0 disables)")
     ap.add_argument("--out", default=str(_ROOT / "BENCH_decode.json"))
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: one arch, tiny shapes")
@@ -256,8 +281,9 @@ def main(argv=None) -> None:
     if args.speculate > 0:
         result["speculative"] = {
             "k": args.speculate,
+            "temperature": args.temperature,
             "grid": bench_speculative(archs, batch, prompt, new, reps,
-                                      args.speculate),
+                                      args.speculate, args.temperature),
         }
     if args.devices > 1:
         from bench_subproc import run_sharded_subprocess

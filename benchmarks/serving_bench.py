@@ -23,8 +23,10 @@ INT8 continuous engine on one device vs sharded over an N-virtual-device
 quantity the mesh divides; virtual CPU devices share one socket, so
 tokens/sec is a collectives-overhead proxy).  ``--speculate K`` adds the
 speculation axis: the same trace through plain decode chunks vs n-gram
-verify windows, recording useful tokens/sec, tokens-per-weight-stream
-(chunk iterations paid), and per-slot window acceptance.  Run
+verify windows, under greedy decode and ``--temperature T`` sampling
+(rejection-sampling verification — distribution-preserving), recording
+useful tokens/sec, tokens-per-weight-stream (chunk iterations paid), and
+per-slot window acceptance.  Run
 ``python benchmarks/serving_bench.py`` (``--smoke`` for CI).
 """
 from __future__ import annotations
@@ -214,14 +216,17 @@ def bench(arch: str, n_requests: int, slots: int, page_size: int, chunk: int,
 
 def bench_speculative(arch: str, requests, slots: int, page_size: int,
                       chunk: int, max_seq: int, num_pages: int,
-                      speculate: int, scale: bool) -> dict:
+                      speculate: int, temperature: float,
+                      scale: bool) -> dict:
     """The speculation axis on the continuous engine: the SAME trace with
-    ``speculate=0`` (plain chunks) vs ``K`` (n-gram verify windows),
-    recording useful tokens/sec, ``emitted_per_stream`` (batch-aggregate
-    tokens per chunk iteration — each iteration streams the weight tree
-    once, and it is computed for the plain row too, so the K-row / 0-row
-    ratio is the weight streams saved), and ``acceptance_per_live_window``
-    (per-slot window acceptance — the proposer-quality number)."""
+    ``speculate=0`` (plain chunks) vs ``K`` (verify windows), under greedy
+    decode AND ``--temperature T`` sampling (rejection-sampling
+    verification), recording useful tokens/sec, ``emitted_per_stream``
+    (batch-aggregate tokens per chunk iteration — each iteration streams
+    the weight tree once, and it is computed for the plain row too, so the
+    K-row / 0-row ratio is the weight streams saved), and
+    ``acceptance_per_live_window`` (per-slot window acceptance — the
+    proposer-quality number that sampling moves)."""
     import jax
     from repro.configs import get_reduced
     from repro.models import init_params
@@ -232,37 +237,51 @@ def bench_speculative(arch: str, requests, slots: int, page_size: int,
         cfg = scaled_config(cfg)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rows = []
-    for k in (0, speculate):
-        eng = ContinuousBatchingEngine(
-            cfg, params, slots=slots, max_seq=max_seq, page_size=page_size,
-            num_pages=num_pages, chunk=chunk,
-            speculate=k if k else None)
-        run_continuous(eng, requests)  # warm/compile
-        t0 = time.perf_counter()
-        useful = run_continuous(eng, requests)
-        dt = time.perf_counter() - t0
-        # every chunk iteration streams the weights once; admit tok0s come
-        # from prefill, so chunk-emitted tokens exclude one per request
-        chunk_emitted = useful - len(requests)
-        rows.append({
-            "speculate_k": k,
-            "useful_tokens": useful,
-            "tokens_per_sec": useful / dt,
-            "emitted_per_stream": chunk_emitted
-            / max(eng.decode_chunk_iters, 1),
-            "acceptance_per_live_window": (eng.spec_emitted
-                                           / max(eng.spec_live_steps, 1)
-                                           if k else 1.0),
-        })
-        if k:
-            rows[-1]["speedup_vs_plain"] = (rows[-1]["tokens_per_sec"]
-                                            / rows[0]["tokens_per_sec"])
-        r = rows[-1]
-        print(f"speculate={k}: {r['tokens_per_sec']:10.1f} useful tok/s, "
-              f"{r['emitted_per_stream']:.2f} tok/stream, "
-              f"{r['acceptance_per_live_window']:.2f} tok/live-window"
-              + (f", {r.get('speedup_vs_plain', 1.0):.2f}x" if k else ""))
-    return {"k": speculate, "grid": rows}
+    modes = [(True, 0.0)]
+    if temperature > 0:
+        modes.append((False, temperature))
+    for greedy, temp in modes:
+        for k in (0, speculate):
+            eng = ContinuousBatchingEngine(
+                cfg, params, slots=slots, max_seq=max_seq,
+                page_size=page_size, num_pages=num_pages, chunk=chunk,
+                speculate=k if k else None)
+            serve = lambda: sum(len(o) for o in eng.serve(
+                requests, greedy=greedy, temperature=temp or 1.0,
+                key=jax.random.PRNGKey(2)))
+            serve()  # warm/compile
+            t0 = time.perf_counter()
+            useful = serve()
+            dt = time.perf_counter() - t0
+            # every chunk iteration streams the weights once; admit tok0s
+            # come from prefill, so chunk-emitted tokens exclude one per
+            # request
+            chunk_emitted = useful - len(requests)
+            rows.append({
+                "speculate_k": k,
+                "greedy": greedy,
+                "temperature": None if greedy else temp,
+                "useful_tokens": useful,
+                "tokens_per_sec": useful / dt,
+                "emitted_per_stream": chunk_emitted
+                / max(eng.decode_chunk_iters, 1),
+                "acceptance_per_live_window": (eng.spec_emitted
+                                               / max(eng.spec_live_steps, 1)
+                                               if k else 1.0),
+            })
+            if k:
+                base = [r for r in rows if r["speculate_k"] == 0
+                        and r["greedy"] == greedy][0]
+                rows[-1]["speedup_vs_plain"] = (rows[-1]["tokens_per_sec"]
+                                                / base["tokens_per_sec"])
+            r = rows[-1]
+            tag = "greedy" if greedy else f"T={temp}"
+            print(f"speculate={k} {tag}: "
+                  f"{r['tokens_per_sec']:10.1f} useful tok/s, "
+                  f"{r['emitted_per_stream']:.2f} tok/stream, "
+                  f"{r['acceptance_per_live_window']:.2f} tok/live-window"
+                  + (f", {r.get('speedup_vs_plain', 1.0):.2f}x" if k else ""))
+    return {"k": speculate, "temperature": temperature, "grid": rows}
 
 
 def bench_sharded(arch: str, requests, slots: int, page_size: int, chunk: int,
@@ -331,6 +350,11 @@ def main(argv=None) -> None:
     ap.add_argument("--speculate", type=int, default=4,
                     help="speculation window K for the --speculate axis "
                     "(plain vs K on the same trace; 0 disables)")
+    ap.add_argument("--temperature", type=float, default=0.8,
+                    help="adds a sampled leg to the --speculate axis: "
+                    "rejection-sampling verification at this temperature, "
+                    "recording acceptance rate and tokens-per-weight-"
+                    "stream under sampling (0 disables)")
     ap.add_argument("--out", default=str(_ROOT / "BENCH_serving.json"))
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: tiny trace, tiny shapes")
@@ -384,7 +408,7 @@ def main(argv=None) -> None:
         result["speculative"] = bench_speculative(
             args.arch, spec_requests, kw["slots"], kw["page_size"],
             kw["chunk"], sp_max_seq, sp_num_pages, args.speculate,
-            kw["scale"])
+            args.temperature, kw["scale"])
     result.update({
         "note": ("reduced config on CPU: tokens/sec measures scheduling "
                  "efficiency (useful tokens vs ride-along waste); "

@@ -704,7 +704,14 @@ def verify_step(
     projections, masks, and float association — the SSM families run the
     sequential per-token recurrence, not the chunked scan), so greedy
     acceptance against these logits reproduces the per-token decode's
-    tokens.
+    tokens.  The FULL logits matter, not just their argmax: sampled
+    speculation (``serving.sampling.rejection_sample``) warps them into
+    the target distribution ``p`` that proposals are accepted against, and
+    the draft model's own verify-step logits supply the aligned proposal
+    distribution ``q`` at the same positions — bit-equality with
+    ``decode_step``'s logits is what makes rejection-sampled output
+    distributionally identical to plain sampled decode AND
+    key-deterministic across the dense/paged engines.
 
     Returns ``(logits (B,T,V), cache')`` where attention/MLA sequence
     leaves are already written in place for all T positions (rejected

@@ -7,12 +7,18 @@ Speculative multi-token decode (``serving.speculative``): pass
 ``ServingEngine.generate`` or to the ``ContinuousBatchingEngine``
 constructor to amortise each weight stream over up to ``k+1`` emitted
 tokens.  Proposals come from prompt-lookup n-grams (``mode="ngram"``,
-both engines) or a small draft model (``mode="draft"``, fixed engine,
-constructed with ``draft_cfg``/``draft_params``); the target verifies the
-whole window in one ``models.verify_step`` forward and accepts the longest
-greedy-matching prefix, so output stays token-identical to plain greedy
-decode.  Realised acceptance lands in ``ServingEngine.spec_stats`` /
-``ContinuousBatchingEngine.spec_emitted``/``spec_live_steps``."""
+both engines) or a small draft model (``mode="draft"``, constructed with
+``draft_cfg``/``draft_params``; the continuous engine keeps the draft's
+state in its own paged pool).  The target verifies the whole window in
+one ``models.verify_step`` forward.  Under greedy decode, acceptance is
+longest greedy-matching prefix and output stays token-identical to plain
+greedy decode; under temperature/top-k sampling, acceptance is rejection
+sampling (``serving.sampling.rejection_sample``), which preserves the
+plain sampled output distribution exactly, with every draw keyed per
+(request, counter) so the same ``key`` gives identical tokens on either
+engine and any mesh width.  Realised acceptance lands in
+``ServingEngine.spec_stats`` / ``ContinuousBatchingEngine.spec_emitted``
+/ ``spec_live_steps``."""
 from .engine import (
     ContinuousBatchingEngine,
     Request,
@@ -21,6 +27,14 @@ from .engine import (
     pim_bytes,
     quantize_tree,
 )
+from .sampling import (
+    acceptance_probs,
+    draw_keys,
+    rejection_sample,
+    residual_dist,
+    sample_rows,
+    warp_logits,
+)
 from .sharded import make_decode_mesh, shard_quantized_tree, tree_pspecs
 from .speculative import SpecConfig, propose_ngram
 
@@ -28,4 +42,6 @@ __all__ = [
     "ServingEngine", "ContinuousBatchingEngine", "Request", "quantize_tree",
     "pim_bytes", "mask_after_stop", "make_decode_mesh",
     "shard_quantized_tree", "tree_pspecs", "SpecConfig", "propose_ngram",
+    "acceptance_probs", "residual_dist", "rejection_sample", "sample_rows",
+    "warp_logits", "draw_keys",
 ]

@@ -61,8 +61,14 @@ and greedy decode stays token-identical to the single-device engines
 
 Both engines also speculate (``serving.speculative``): ``speculate=`` turns
 each decode step into a k-token verify window — one weight stream for up to
-k+1 emitted tokens, token-identical to plain greedy decode by greedy-prefix
-acceptance (tests/test_speculative.py).
+k+1 emitted tokens.  Greedy decode stays token-identical to the plain
+engines by greedy-prefix acceptance (tests/test_speculative.py); sampled
+decode (temperature/top-k) is verified by rejection sampling
+(``serving.sampling``), which preserves the plain sampled output
+distribution exactly and — because every draw is keyed per (request id,
+draw counter) rather than per batch step — emits identical tokens for the
+same key on either engine, any mesh width, and across recompute
+preemptions (tests/test_sampled_speculative.py).
 """
 from __future__ import annotations
 
@@ -87,6 +93,12 @@ from repro.models import (
 )
 from repro.quant import quantize_symmetric
 from repro.serving import speculative as spec_mod
+from repro.serving.sampling import (
+    TAG_TOKEN,
+    draw_keys,
+    sample_rows,
+    warp_logits,
+)
 from repro.serving.sharded import shard_quantized_tree, tree_pspecs
 from repro.serving.speculative import SpecConfig
 
@@ -176,16 +188,15 @@ def pim_bytes(params, per_device: bool = False) -> int:
 # ---------------------------------------------------------------- sampling --
 def sample_logits(logits, key, *, greedy: bool, temperature, top_k: int):
     """logits (..., V) -> int32 token ids (...): greedy argmax or
-    temperature/top-k categorical sampling."""
+    temperature/top-k categorical sampling with ONE key for the whole
+    batch.  The engines' decode loops use ``sampling.sample_rows`` with
+    per-row counter-derived keys instead (engine-independent streams);
+    this stays as the simple one-shot helper."""
     if greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    lg = logits.astype(jnp.float32) / jnp.maximum(
-        jnp.asarray(temperature, jnp.float32), 1e-6)
-    top_k = min(top_k, lg.shape[-1])  # top_k >= vocab is plain sampling
-    if top_k:
-        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
-        lg = jnp.where(lg < kth, -jnp.inf, lg)
-    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, warp_logits(logits, temperature, top_k), axis=-1
+    ).astype(jnp.int32)
 
 
 def mask_after_stop(tokens, stop_tokens: Sequence[int], pad_id: int = 0):
@@ -207,28 +218,33 @@ def _generate_body(params, cfg: ModelConfig, prompt, extras, key, temperature,
     """The whole generation — prefill + n_new decode steps + sampling — as a
     single XLA program (zero per-token Python dispatch).  Jitted directly by
     ``_generate_scan`` or lowered per-device under ``shard_map`` by
-    ``_generate_scan_sharded``."""
+    ``_generate_scan_sharded``.  Sampled draws are keyed per row and per
+    emission index (``sampling.draw_keys``), so a row's stream is
+    independent of batch composition and identical on the paged engine."""
     b, s = prompt.shape
     if n_new == 0:
         return jnp.zeros((b, 0), jnp.int32)
+    rids = jnp.arange(b, dtype=jnp.int32)
     cache = init_cache(cfg, b, max_seq)
     logits, cache = prefill(params, cfg, prompt, cache, extras)
-    key, k0 = jax.random.split(key)
-    tok0 = sample_logits(logits[:, -1, :], k0, greedy=greedy,
-                         temperature=temperature, top_k=top_k)[:, None]
+    tok0 = sample_rows(
+        logits[:, -1, :],
+        None if greedy else draw_keys(key, rids, 0, TAG_TOKEN),
+        greedy=greedy, temperature=temperature, top_k=top_k)[:, None]
 
     # Emit AFTER stepping: n_new-1 scan iterations produce tok1..tok_{n-1}
-    # (tok0 comes from the prefill logits), so no decode step's output is
-    # ever discarded.
+    # (tok0 comes from the prefill logits, draw index 0), so no decode
+    # step's output is ever discarded.
     def body(carry, i):
-        tok, cache, key = carry
+        tok, cache = carry
         lg, cache = decode_step(params, cfg, tok, cache, jnp.int32(s) + i, extras)
-        key, sub = jax.random.split(key)
-        nxt = sample_logits(lg[:, -1, :], sub, greedy=greedy,
-                            temperature=temperature, top_k=top_k)[:, None]
-        return (nxt, cache, key), nxt[:, 0]
+        nxt = sample_rows(
+            lg[:, -1, :],
+            None if greedy else draw_keys(key, rids, i + 1, TAG_TOKEN),
+            greedy=greedy, temperature=temperature, top_k=top_k)[:, None]
+        return (nxt, cache), nxt[:, 0]
 
-    _, toks = jax.lax.scan(body, (tok0, cache, key),
+    _, toks = jax.lax.scan(body, (tok0, cache),
                            jnp.arange(n_new - 1, dtype=jnp.int32))
     return jnp.concatenate([tok0, toks.T], axis=1)  # (B, n_new)
 
@@ -316,12 +332,18 @@ class ServingEngine:
         ``speculate`` (a ``serving.SpecConfig`` or an int ``k`` shorthand)
         switches to speculative multi-token decode: propose ``k`` tokens
         (prompt-lookup n-grams, or the engine's draft model), verify them
-        with ONE target forward, emit the accepted prefix + bonus token —
-        token-identical to this method's plain greedy output, with the
-        per-token weight stream amortised over the accepted tokens.
-        Greedy only; per-row accepted lengths ride in a compiled
-        ``while_loop``.  ``self.spec_stats`` records the realised
-        acceptance (``emitted_per_step``) after each speculative call."""
+        with ONE target forward, emit the accepted prefix + one more token
+        — the per-token weight stream amortised over the accepted tokens.
+        Under greedy decode the output is token-identical to this method's
+        plain greedy output (greedy-prefix acceptance); under sampling
+        (``greedy=False``) verification is rejection sampling
+        (``serving.sampling.rejection_sample``), which leaves the output
+        DISTRIBUTION of plain sampled decode exactly unchanged and is
+        key-deterministic across engines and meshes (the draws are keyed
+        per row and window, not per batch step).  Per-row accepted lengths
+        ride in a compiled ``while_loop``.  ``self.spec_stats`` records
+        the realised acceptance (``emitted_per_step``) after each
+        speculative call."""
         if key is None:
             key = jax.random.PRNGKey(0)
         s = prompt_tokens.shape[1]
@@ -331,12 +353,10 @@ class ServingEngine:
                 f"({self.max_seq}); cache writes past max_seq would "
                 "silently clamp")
         if speculate is not None:
-            if not greedy:
-                raise ValueError(
-                    "speculative decode verifies greedy argmax prefixes; "
-                    "sampling would break token-identity — pass greedy=True")
-            toks = self._generate_speculative(prompt_tokens, int(n_new),
-                                              extras, spec_mod.as_spec(speculate))
+            toks = self._generate_speculative(
+                prompt_tokens, int(n_new), extras,
+                spec_mod.as_spec(speculate), greedy=bool(greedy),
+                temperature=temperature, top_k=int(top_k), key=key)
         elif self.mesh is not None:
             toks = _generate_scan_sharded(
                 self.params, self.cfg, prompt_tokens, extras, key,
@@ -352,7 +372,8 @@ class ServingEngine:
         return mask_after_stop(toks, tuple(stop_tokens), int(pad_id))
 
     def _generate_speculative(self, prompt_tokens, n_new: int, extras,
-                              spec: SpecConfig):
+                              spec: SpecConfig, *, greedy: bool, temperature,
+                              top_k: int, key):
         b = prompt_tokens.shape[0]
         if spec.mode == "draft":
             if self.draft_params is None or self.draft_cfg is None:
@@ -366,16 +387,18 @@ class ServingEngine:
                     "mesh")
         if self.mesh is not None:
             toks, steps, live_steps = spec_mod._spec_generate_sharded(
-                self.params, self.cfg, prompt_tokens, extras, mesh=self.mesh,
-                n_new=n_new, max_seq=self.max_seq, k=spec.k,
-                ngram_n=spec.ngram_n)
+                self.params, self.cfg, prompt_tokens, extras, key,
+                jnp.float32(temperature), mesh=self.mesh, n_new=n_new,
+                max_seq=self.max_seq, k=spec.k, ngram_n=spec.ngram_n,
+                greedy=greedy, top_k=top_k)
         else:
             toks, steps, live_steps = spec_mod._spec_generate(
                 self.params, self.cfg, prompt_tokens, extras,
                 self.draft_params if spec.mode == "draft" else None,
+                key, jnp.float32(temperature),
                 draft_cfg=self.draft_cfg if spec.mode == "draft" else None,
                 n_new=n_new, max_seq=self.max_seq, k=spec.k, mode=spec.mode,
-                ngram_n=spec.ngram_n)
+                ngram_n=spec.ngram_n, greedy=greedy, top_k=top_k)
         steps, live_steps = int(steps), int(live_steps)
         # One verify step streams the weight tree once for the WHOLE batch,
         # so the weight-stream amortisation is per-row tokens over verify
@@ -385,7 +408,8 @@ class ServingEngine:
         # batch streaming.)  acceptance_per_live_row is the per-row window
         # acceptance, the proposer-quality number.
         self.spec_stats = {
-            "k": spec.k, "mode": spec.mode, "verify_steps": steps,
+            "k": spec.k, "mode": spec.mode, "greedy": greedy,
+            "verify_steps": steps,
             "live_row_steps": live_steps,
             "emitted_per_step": ((n_new - 1) / steps if steps else 0.0),
             "acceptance_per_live_row": (b * (n_new - 1) / live_steps
@@ -402,7 +426,8 @@ class ServingEngine:
         per-token prefill path and the per-token decode path that the
         scan-compiled ``generate`` replaces — and the dispatch-bound
         baseline in decode_bench.  Mirrors ``generate``'s sampling options
-        and key-split order, so matching keys give matching samples."""
+        and per-row ``(key, row, draw index)`` key derivation, so matching
+        keys give matching samples."""
         if self.mesh is not None:
             raise NotImplementedError(
                 "generate_reference is the single-device parity oracle; "
@@ -418,21 +443,24 @@ class ServingEngine:
         step_fn = jax.jit(
             lambda p, t, c, pos: decode_step(p, cfg, t, c, pos, extras)
         )
+        rids = jnp.arange(b, dtype=jnp.int32)
+
+        def draw(logits, idx):
+            return sample_rows(
+                logits[:, -1, :],
+                None if greedy else draw_keys(key, rids, idx, TAG_TOKEN),
+                greedy=greedy, temperature=jnp.float32(temperature),
+                top_k=int(top_k))[:, None]
+
         logits = None
         for i in range(s):
             logits, cache = step_fn(self.params, prompt_tokens[:, i : i + 1],
                                     cache, jnp.int32(i))
-        key, k0 = jax.random.split(key)
-        tok = sample_logits(logits[:, -1, :], k0, greedy=greedy,
-                            temperature=jnp.float32(temperature),
-                            top_k=int(top_k))[:, None]
+        tok = draw(logits, 0)
         out = [tok]
         for j in range(n_new - 1):
             logits, cache = step_fn(self.params, tok, cache, jnp.int32(s + j))
-            key, sub = jax.random.split(key)
-            tok = sample_logits(logits[:, -1, :], sub, greedy=greedy,
-                                temperature=jnp.float32(temperature),
-                                top_k=int(top_k))[:, None]
+            tok = draw(logits, j + 1)
             out.append(tok)
         toks = jnp.concatenate(out, axis=1)
         return mask_after_stop(toks, tuple(stop_tokens), int(pad_id))
@@ -454,19 +482,22 @@ class Request:
 
 
 def _admit_body(params, cfg: ModelConfig, cache, prompt, length, slot, pages,
-                key, temperature, extras, *, greedy: bool, top_k: int):
+                rid, key, temperature, extras, *, greedy: bool, top_k: int):
     """Admit one request: batch-1 single-pass prefill written STRAIGHT into
     the slot's pool pages and per-slot state row (``models.prefill`` with
     ``pages``/``slot`` — no temporary dense cache, no ``paged_insert``
     scatter round-trip), then sample the first token from the logits at the
-    true prompt end.  Compiled once per padded prompt length (a page
-    multiple, carried by ``prompt``'s shape)."""
+    true prompt end with the request's draw-0 key (``key`` is the serve
+    call's BASE key; recompute preemption re-derives the same key and
+    replays the same token).  Compiled once per padded prompt length (a
+    page multiple, carried by ``prompt``'s shape)."""
     logits, cache = prefill(params, cfg, prompt, cache, extras, length=length,
                             pages=pages, slot=slot)
     lg = jax.lax.dynamic_index_in_dim(logits, length - 1, axis=1,
-                                      keepdims=False)[0]  # (V,)
-    tok0 = sample_logits(lg, key, greedy=greedy, temperature=temperature,
-                         top_k=top_k)
+                                      keepdims=False)  # (1, V)
+    tok0 = sample_rows(
+        lg, None if greedy else draw_keys(key, rid[None], 0, TAG_TOKEN),
+        greedy=greedy, temperature=temperature, top_k=top_k)[0]
     return cache, tok0
 
 
@@ -482,51 +513,57 @@ _admit_prefill = functools.partial(
     donate_argnames=("cache",),
 )
 def _admit_prefill_sharded(params, cfg: ModelConfig, cache, prompt, length,
-                           slot, pages, key, temperature, extras, *, mesh,
-                           greedy: bool, top_k: int):
+                           slot, pages, rid, key, temperature, extras, *,
+                           mesh, greedy: bool, top_k: int):
     """``_admit_body`` under ``shard_map``: sharded weights, replicated
     paged cache / prompt / scheduler scalars."""
 
-    def f(p, c, pr, ln, sl, pg, k, t, ex):
-        return _admit_body(p, cfg, c, pr, ln, sl, pg, k, t, ex,
+    def f(p, c, pr, ln, sl, pg, ri, k, t, ex):
+        return _admit_body(p, cfg, c, pr, ln, sl, pg, ri, k, t, ex,
                            greedy=greedy, top_k=top_k)
 
     return shard_map(
         f, mesh=mesh,
-        in_specs=(tree_pspecs(params),) + (P(),) * 8,
+        in_specs=(tree_pspecs(params),) + (P(),) * 9,
         out_specs=P(), check_rep=False,
-    )(params, cache, prompt, length, slot, pages, key, temperature, extras)
+    )(params, cache, prompt, length, slot, pages, rid, key, temperature,
+      extras)
 
 
 def _decode_chunk_body(params, cfg: ModelConfig, cache, tok, pos, n_out, done,
-                       max_new, stops, key, temperature, extras, *, chunk: int,
-                       page_size: int, greedy: bool, top_k: int, pad_id: int):
+                       rids, max_new, stops, key, temperature, extras, *,
+                       chunk: int, page_size: int, greedy: bool, top_k: int,
+                       pad_id: int):
     """``chunk`` decode steps over all batch slots as one compiled scan.
 
     Per-slot carry: current token, position (cached length), emitted count,
     and done flag.  Done/inactive slots keep stepping (their writes land in
     their own pages or the trash page — harmless) but their emissions are
-    masked; the host retires/admits at the chunk boundary."""
+    masked; the host retires/admits at the chunk boundary.  Sampled draws
+    are keyed per slot by ``(key, rid, n_out)`` — the same stream the
+    fixed-batch engine consumes — so a request's tokens never depend on
+    slot assignment or chunk boundaries."""
 
     def body(carry, _):
-        tok, cache, pos, n_out, done, key = carry
+        tok, cache, pos, n_out, done = carry
         lg, cache = decode_step(params, cfg, tok, cache, pos, extras,
                                 page_size=page_size)
-        key, sub = jax.random.split(key)
-        nxt = sample_logits(lg[:, -1, :], sub, greedy=greedy,
-                            temperature=temperature, top_k=top_k)
+        nxt = sample_rows(
+            lg[:, -1, :],
+            None if greedy else draw_keys(key, rids, n_out, TAG_TOKEN),
+            greedy=greedy, temperature=temperature, top_k=top_k)
         live = ~done
         emit = jnp.where(live, nxt, jnp.int32(pad_id))
         pos = jnp.where(live, pos + 1, pos)
         n_out = jnp.where(live, n_out + 1, n_out)
         hit = jnp.any(emit[:, None] == stops, axis=1)
         done = done | (live & hit) | (n_out >= max_new)
-        return (emit[:, None], cache, pos, n_out, done, key), (emit, live)
+        return (emit[:, None], cache, pos, n_out, done), (emit, live)
 
     carry, (emits, lives) = jax.lax.scan(
-        body, (tok, cache, pos, n_out, done, key), None, length=chunk)
-    tok, cache, pos, n_out, done, key = carry
-    return cache, tok, pos, n_out, done, key, emits, lives
+        body, (tok, cache, pos, n_out, done), None, length=chunk)
+    tok, cache, pos, n_out, done = carry
+    return cache, tok, pos, n_out, done, emits, lives
 
 
 _decode_chunk = functools.partial(
@@ -543,24 +580,24 @@ _decode_chunk = functools.partial(
     donate_argnames=("cache",),
 )
 def _decode_chunk_sharded(params, cfg: ModelConfig, cache, tok, pos, n_out,
-                          done, max_new, stops, key, temperature, extras, *,
-                          mesh, chunk: int, page_size: int, greedy: bool,
-                          top_k: int, pad_id: int):
+                          done, rids, max_new, stops, key, temperature,
+                          extras, *, mesh, chunk: int, page_size: int,
+                          greedy: bool, top_k: int, pad_id: int):
     """``_decode_chunk_body`` under ``shard_map``: the paged pools, block
     tables, and per-slot scheduler carry are replicated (they are tiny next
     to the weight stream); only the weight shards differ per device."""
 
-    def f(p, c, tk, ps_, no, dn, mn, st, k, t, ex):
-        return _decode_chunk_body(p, cfg, c, tk, ps_, no, dn, mn, st, k, t,
-                                  ex, chunk=chunk, page_size=page_size,
+    def f(p, c, tk, ps_, no, dn, ri, mn, st, k, t, ex):
+        return _decode_chunk_body(p, cfg, c, tk, ps_, no, dn, ri, mn, st, k,
+                                  t, ex, chunk=chunk, page_size=page_size,
                                   greedy=greedy, top_k=top_k, pad_id=pad_id)
 
     return shard_map(
         f, mesh=mesh,
-        in_specs=(tree_pspecs(params),) + (P(),) * 10,
+        in_specs=(tree_pspecs(params),) + (P(),) * 11,
         out_specs=P(), check_rep=False,
-    )(params, cache, tok, pos, n_out, done, max_new, stops, key, temperature,
-      extras)
+    )(params, cache, tok, pos, n_out, done, rids, max_new, stops, key,
+      temperature, extras)
 
 
 class ContinuousBatchingEngine:
@@ -580,14 +617,21 @@ class ContinuousBatchingEngine:
     permutations of physical pages — decode must be layout-independent
     (tests/test_paged_serving.py exercises this).
 
-    ``speculate`` (``serving.SpecConfig`` or int ``k``; n-gram mode only)
-    turns each decode-chunk iteration into a speculative verify window:
-    every slot proposes ``k`` tokens from its own history, the target
-    verifies the window in one pass, and each slot advances by its own
-    accepted length — per-slot position/page advance stays exact because
-    rejected page writes are dead by masking and rewritten by the next
-    window (``models.verify_step``).  Output tokens are identical to the
-    non-speculative engine (greedy only).  After ``serve``,
+    ``speculate`` (``serving.SpecConfig`` or int ``k``) turns each
+    decode-chunk iteration into a speculative verify window: every slot
+    proposes ``k`` tokens (its own history via the n-gram proposer, or the
+    engine's draft model), the target verifies the window in one pass, and
+    each slot advances by its own accepted length — per-slot position/page
+    advance stays exact because rejected page writes are dead by masking
+    and rewritten by the next window (``models.verify_step``).  Greedy
+    output tokens are identical to the non-speculative engine; sampled
+    output (``serve(greedy=False)``) is rejection-sampling verified —
+    distributionally identical to plain sampled decode and
+    key-deterministic per request (``serving.sampling``).
+    ``mode="draft"`` (constructed with ``draft_cfg``/``draft_params``)
+    keeps the draft model's state in its OWN paged cache pool sharing the
+    target's block tables, so draft speculation survives admit/retire and
+    recompute preemption like any other per-slot state.  After ``serve``,
     ``spec_emitted / decode_chunk_iters`` is the realised weight-stream
     amortisation (chunk iterations = streams paid, counted for the plain
     engine too so the two are comparable) and
@@ -597,23 +641,44 @@ class ContinuousBatchingEngine:
                  page_size: int = 8, num_pages: Optional[int] = None,
                  chunk: int = 8, pim_bits: int = 0, pad_id: int = 0,
                  page_alloc_seed: Optional[int] = None, mesh=None,
-                 speculate=None):
+                 speculate=None, draft_cfg: ModelConfig = None,
+                 draft_params=None, draft_pim_bits: int = 0):
         self.cfg = cfg
         self.mesh = mesh
         self.spec = None if speculate is None else spec_mod.as_spec(speculate)
-        if self.spec is not None and self.spec.mode != "ngram":
-            raise NotImplementedError(
-                "the continuous-batching engine speculates with the n-gram "
-                "proposer (per-slot draft-model caches are not paged); use "
-                "SpecConfig(mode='ngram')")
+        if self.spec is not None and self.spec.mode == "draft":
+            if draft_params is None or draft_cfg is None:
+                raise ValueError(
+                    "speculate mode='draft' needs the engine constructed "
+                    "with draft_cfg/draft_params")
+            if mesh is not None:
+                raise NotImplementedError(
+                    "draft-model speculation is single-device (the draft "
+                    "tree is not mesh-distributed); use mode='ngram' on a "
+                    "mesh")
         params = quantize_tree(params, pim_bits) if pim_bits else params
         if mesh is not None:
             params = shard_quantized_tree(params, mesh)
         self.params = params
+        self.draft_cfg = draft_cfg
+        if draft_params is not None and draft_pim_bits:
+            draft_params = quantize_tree(draft_params, draft_pim_bits)
+        self.draft_params = draft_params
+        self._draft_mode = (self.spec is not None
+                            and self.spec.mode == "draft")
         self.slots = int(slots)
         self.page_size = int(page_size)
         self.max_seq = -(-int(max_seq) // self.page_size) * self.page_size
-        self.width = self.max_seq // self.page_size
+        # Draft mode: the draft chain READS back the speculative positions
+        # it just wrote (the target only writes them), so both pools carry
+        # k extra provisioned positions past the request frontier — even a
+        # request using the full max_seq budget must never route a draft
+        # read through the shared trash page, or cross-engine
+        # key-determinism breaks at the boundary.
+        self._store_seq = self.max_seq + (
+            -(-self.spec.k // self.page_size) * self.page_size
+            if self._draft_mode else 0)
+        self.width = self._store_seq // self.page_size
         if num_pages is None:
             num_pages = self.slots * self.width + 1  # worst case + trash page
         self.num_pages = int(num_pages)
@@ -668,8 +733,14 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------ lifecycle --
     def _reset(self, requests, n_stops: int):
         b, w = self.slots, self.width
-        self._cache = init_paged_cache(self.cfg, b, self.max_seq,
+        self._cache = init_paged_cache(self.cfg, b, self._store_seq,
                                        self.num_pages, self.page_size)
+        # The draft model's OWN paged pool: same geometry and the same
+        # block tables as the target's, so one host-side page allocator
+        # covers both and admit/retire/preemption keep them in lockstep.
+        self._dcache = (init_paged_cache(self.draft_cfg, b, self._store_seq,
+                                         self.num_pages, self.page_size)
+                        if self._draft_mode else ())
         self._free = list(range(1, self.num_pages))  # page 0 = trash
         self._bt = np.zeros((b, w), np.int32)
         self._pos = np.zeros(b, np.int32)
@@ -678,6 +749,11 @@ class ContinuousBatchingEngine:
         self._max_new = np.zeros(b, np.int32)
         self._stops = np.full((b, n_stops), -1, np.int32)
         self._tok = np.zeros((b, 1), np.int32)
+        # per-slot request id and verify-window counter: the (rid, counter)
+        # pair keys every sampled draw, so a request's random stream is
+        # slot- and schedule-independent (sampling.draw_keys)
+        self._rids = np.zeros(b, np.int32)
+        self._wctr = np.zeros(b, np.int32)
         self._slot_req = [-1] * b
         self._slot_pages: list[list[int]] = [[] for _ in range(b)]
         self._admit_seq = [-1] * b
@@ -700,15 +776,23 @@ class ContinuousBatchingEngine:
         self._bt[slot, : len(pages)] = pages
         prompt = np.zeros((1, spad), np.int32)
         prompt[0, :length] = np.asarray(req.prompt, np.int32)
-        self._key, sub = jax.random.split(self._key)
         admit = (_admit_prefill if self.mesh is None else functools.partial(
             _admit_prefill_sharded, mesh=self.mesh))
+        ex1 = self._set_slot_extras(slot, req.extras)
         self._cache, tok0 = admit(
             self.params, self.cfg, self._cache, jnp.asarray(prompt),
             jnp.int32(length), jnp.int32(slot), jnp.asarray(pages, jnp.int32),
-            sub, jnp.float32(temperature),
-            self._set_slot_extras(slot, req.extras),
+            jnp.int32(ridx), self._key, jnp.float32(temperature), ex1,
             greedy=bool(greedy), top_k=int(top_k))
+        if self._draft_mode:
+            # Prefill the draft pool's copy of the prompt into the SAME
+            # page ids (its own storage); the draft admit's sample is
+            # discarded — tok0 always comes from the target.
+            self._dcache, _ = _admit_prefill(
+                self.draft_params, self.draft_cfg, self._dcache,
+                jnp.asarray(prompt), jnp.int32(length), jnp.int32(slot),
+                jnp.asarray(pages, jnp.int32), jnp.int32(ridx), self._key,
+                jnp.float32(temperature), ex1, greedy=True, top_k=0)
         tok0 = int(tok0)
         self._outputs[ridx].append(tok0)
         self._hist[slot, :] = 0
@@ -721,6 +805,8 @@ class ContinuousBatchingEngine:
         st = tuple(req.stop_tokens)
         self._stops[slot, : len(st)] = st
         self._tok[slot, 0] = tok0
+        self._rids[slot] = ridx
+        self._wctr[slot] = 0
         self._done[slot] = req.max_new <= 1 or tok0 in st
         self._slot_req[slot] = ridx
         self._slot_pages[slot] = list(pages)
@@ -737,6 +823,8 @@ class ContinuousBatchingEngine:
         self._n_out[slot] = 0
         self._max_new[slot] = 0
         self._stops[slot, :] = -1
+        self._rids[slot] = 0
+        self._wctr[slot] = 0
         self._done[slot] = True
 
     def _preempt_youngest(self, protect: int) -> bool:
@@ -765,12 +853,22 @@ class ContinuousBatchingEngine:
         # (advance = chunk steps x the window's worst-case accepted length),
         # bounded by the last live write position length + max_new - 2;
         # prefill already covered spad - 1.  Speculative writes BEYOND the
-        # consumed frontier need no pages: an unprovisioned block-table
-        # entry is 0, the trash page, and a token only ever gets consumed
-        # after being rewritten into a provisioned page.
+        # consumed frontier need no pages for the TARGET: an unprovisioned
+        # block-table entry is 0, the trash page, and the verify window
+        # attends to its own in-flight K/V, so a token only ever gets
+        # consumed after being rewritten into a provisioned page.  The
+        # DRAFT chain, however, runs k+1 sequential single-token steps that
+        # READ BACK the window positions they just wrote, so draft mode
+        # provisions up to k positions past the consumed cap (the pools
+        # carry k extra positions past max_seq for exactly this — see
+        # ``_store_seq``) to keep those reads out of the shared trash page:
+        # a trash read would only degrade proposal quality, never
+        # exactness, but it would break cross-engine key-determinism.
         adv = self.chunk * (self.spec.k + 1 if self.spec else 1)
-        last = min(int(self._pos[slot]) + adv - 1,
-                   length + req.max_new - 2)
+        cap = length + req.max_new - 2
+        if self._draft_mode:
+            cap = min(cap + self.spec.k, self._store_seq - 1)
+        last = min(int(self._pos[slot]) + adv - 1, cap)
         need = max(last, spad - 1) // ps + 1
         have = len(self._slot_pages[slot])
         if need <= have:
@@ -791,11 +889,13 @@ class ContinuousBatchingEngine:
               ) -> list[np.ndarray]:
         """Run every request through the scheduler; returns one int32 array
         of emitted tokens per request (<= max_new; ends at the stop token
-        if one fired).  Deterministic for a fixed key."""
-        if self.spec is not None and not greedy:
-            raise ValueError(
-                "speculative decode verifies greedy argmax prefixes; "
-                "sampling would break token-identity — pass greedy=True")
+        if one fired).  Deterministic for a fixed key — and because draws
+        are keyed per (request index in the trace, counter), a request's
+        sampled tokens are independent of slot assignment, chunk size, and
+        page allocation, and match the dense fixed-batch engine run in
+        which it occupies the SAME batch row index (the fixed engine keys
+        row i's draws by rid=i).  A solo batch-1 dense run matches request
+        0 only; greedy decode matches solo runs regardless."""
         ex_struct = jax.tree.structure(requests[0].extras) if requests else None
         for r in requests:
             if len(r.prompt) < 1 or r.max_new < 1:
@@ -852,18 +952,40 @@ class ContinuousBatchingEngine:
             self._cache["block_tables"] = jnp.asarray(self._bt)
             self.decode_chunk_iters += self.chunk
             if self.spec is not None:
-                step = (spec_mod._spec_chunk if self.mesh is None else
-                        functools.partial(spec_mod._spec_chunk_sharded,
-                                          mesh=self.mesh))
-                (self._cache, tok, pos, n_out, done, hist, emits, ms) = step(
-                    self.params, self.cfg, self._cache, jnp.asarray(self._tok),
-                    jnp.asarray(self._pos), jnp.asarray(self._n_out),
-                    jnp.asarray(self._done), jnp.asarray(self._hist),
-                    jnp.asarray(self._max_new), jnp.asarray(self._stops),
-                    self._extras_slots, chunk=self.chunk,
-                    page_size=self.page_size, k=self.spec.k,
-                    ngram_n=self.spec.ngram_n, pad_id=self.pad_id)
+                if self._draft_mode:
+                    self._dcache["block_tables"] = jnp.asarray(self._bt)
+                if self.mesh is None:
+                    (self._cache, self._dcache, tok, pos, n_out, done, hist,
+                     wctr, emits, ms) = spec_mod._spec_chunk(
+                        self.params, self.cfg, self._cache,
+                        self.draft_params, self._dcache,
+                        jnp.asarray(self._tok), jnp.asarray(self._pos),
+                        jnp.asarray(self._n_out), jnp.asarray(self._done),
+                        jnp.asarray(self._hist), jnp.asarray(self._wctr),
+                        jnp.asarray(self._rids), jnp.asarray(self._max_new),
+                        jnp.asarray(self._stops), self._key,
+                        jnp.float32(temperature), self._extras_slots,
+                        draft_cfg=self.draft_cfg, chunk=self.chunk,
+                        page_size=self.page_size, k=self.spec.k,
+                        mode=self.spec.mode, ngram_n=self.spec.ngram_n,
+                        pad_id=self.pad_id, greedy=bool(greedy),
+                        top_k=int(top_k))
+                else:
+                    (self._cache, tok, pos, n_out, done, hist, wctr, emits,
+                     ms) = spec_mod._spec_chunk_sharded(
+                        self.params, self.cfg, self._cache,
+                        jnp.asarray(self._tok), jnp.asarray(self._pos),
+                        jnp.asarray(self._n_out), jnp.asarray(self._done),
+                        jnp.asarray(self._hist), jnp.asarray(self._wctr),
+                        jnp.asarray(self._rids), jnp.asarray(self._max_new),
+                        jnp.asarray(self._stops), self._key,
+                        jnp.float32(temperature), self._extras_slots,
+                        mesh=self.mesh, chunk=self.chunk,
+                        page_size=self.page_size, k=self.spec.k,
+                        ngram_n=self.spec.ngram_n, pad_id=self.pad_id,
+                        greedy=bool(greedy), top_k=int(top_k))
                 self._hist = np.array(hist)
+                self._wctr = np.array(wctr)
                 emits, ms = np.asarray(emits), np.asarray(ms)
                 for t in range(self.chunk):
                     for slot in range(self.slots):
@@ -877,11 +999,12 @@ class ContinuousBatchingEngine:
                 step = (_decode_chunk if self.mesh is None
                         else functools.partial(_decode_chunk_sharded,
                                                mesh=self.mesh))
-                (self._cache, tok, pos, n_out, done, self._key, emits,
+                (self._cache, tok, pos, n_out, done, emits,
                  lives) = step(
                     self.params, self.cfg, self._cache, jnp.asarray(self._tok),
                     jnp.asarray(self._pos), jnp.asarray(self._n_out),
-                    jnp.asarray(self._done), jnp.asarray(self._max_new),
+                    jnp.asarray(self._done), jnp.asarray(self._rids),
+                    jnp.asarray(self._max_new),
                     jnp.asarray(self._stops), self._key,
                     jnp.float32(temperature), self._extras_slots,
                     chunk=self.chunk, page_size=self.page_size,

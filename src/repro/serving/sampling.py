@@ -1,0 +1,155 @@
+"""Sampled-decoding primitives: counter-derived per-row PRNG keys, the
+temperature/top-k warp, and rejection-sampling speculative verification.
+
+Key discipline (the exactness half of the sampled-speculation contract):
+every sampled draw is keyed by ``(base key, stream tag, request id, draw
+counter)`` via ``fold_in`` — never by splitting one global key through the
+decode loop.  The request id is the row index on the fixed-batch engine
+and the trace index on the continuous engine, so a request's random
+stream depends only on that identity and its own progress — not on slot
+assignment, chunk boundaries, page allocation, device count, or which
+engine runs it.  The fixed-batch dense engine, the paged
+continuous-batching scheduler, and their ``shard_map`` variants emit
+IDENTICAL tokens for the same ``key`` when requests keep the same indices
+(tests/test_sampled_speculative.py enforces the matrix), and recompute
+preemption replays the same stream deterministically.
+
+Two independent streams per request:
+
+* ``TAG_TOKEN`` — plain autoregressive sampling: draw ``n`` samples the
+  row's n-th emitted token (draw 0 is the prefill/admit token);
+* ``TAG_WINDOW`` — speculative verify windows: draw ``w`` covers the
+  row's w-th window, fanning out inside the window to the draft-proposal
+  draws and the accept/resample draws of ``rejection_sample``.
+
+Rejection-sampling verification (speculative sampling, Leviathan et al.
+2023 / Chen et al. 2023): proposal ``d_i ~ q_i`` is accepted with
+probability ``min(1, p_i(d_i) / q_i(d_i))`` against the target's verify
+distribution ``p_i``; the first rejection is resampled from the
+normalised residual ``max(p_i - q_i, 0)``; if all ``k`` proposals are
+accepted, the bonus token is sampled from ``p_{k+1}``.  The emitted
+prefix is then distributed EXACTLY as ancestral sampling from ``p`` —
+speculation changes how many weight streams are paid per token, never
+the output distribution.  With the deterministic n-gram proposer ``q``
+is a point mass, so acceptance degenerates to ``u < p(d)`` and the
+residual to ``p`` with the proposal zeroed — still exact.  The
+chi-square harness in tests/test_sampled_speculative.py verifies the
+distribution-preservation claim per model family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TAG_TOKEN = 0   # plain per-token sampling stream
+TAG_WINDOW = 1  # speculative verify-window stream
+
+
+def draw_keys(base, rids: jnp.ndarray, idx, tag: int):
+    """Per-row PRNG keys for draw ``idx`` of stream ``tag``:
+    ``fold_in(fold_in(fold_in(base, tag), rid), idx)`` per row.  ``rids``
+    (B,) int32 request ids; ``idx`` a scalar or (B,) per-row draw
+    counters.  Inactive slots may pass any rid — their draws are masked
+    by the caller."""
+    tbase = jax.random.fold_in(base, tag)
+    idx = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), rids.shape)
+
+    def one(r, i):
+        return jax.random.fold_in(jax.random.fold_in(tbase, r), i)
+
+    return jax.vmap(one)(rids.astype(jnp.int32), idx)
+
+
+def warp_logits(logits: jnp.ndarray, temperature, top_k: int) -> jnp.ndarray:
+    """Temperature/top-k warped logits (f32, last axis = vocab): softmax of
+    the result is the distribution plain sampled decode draws from, and
+    therefore the distribution rejection-sampling verification must
+    preserve — ``p`` and ``q`` are both built from this one warp so the
+    accept ratio compares like with like."""
+    lg = logits.astype(jnp.float32) / jnp.maximum(
+        jnp.asarray(temperature, jnp.float32), 1e-6)
+    top_k = min(top_k, lg.shape[-1])  # top_k >= vocab is plain sampling
+    if top_k:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return lg
+
+
+def sample_rows(logits: jnp.ndarray, keys, *, greedy: bool, temperature,
+                top_k: int) -> jnp.ndarray:
+    """(B, V) logits -> (B,) int32 tokens, one independent key per row
+    (``keys`` from ``draw_keys``; ignored when greedy)."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = warp_logits(logits, temperature, top_k)
+    return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+
+
+# ------------------------------------------------------ rejection sampling --
+def acceptance_probs(drafts: jnp.ndarray, q: jnp.ndarray,
+                     p: jnp.ndarray) -> jnp.ndarray:
+    """The textbook acceptance probability ``min(1, p(d)/q(d))`` per
+    proposal, (B, k) in [0, 1].  ``drafts`` (B, k) int32; ``q`` (B, k, V)
+    proposal distributions; ``p`` (B, k+1, V) target distributions
+    (position k is the bonus position, unused here).  Where ``q(d) == 0``
+    (a proposal q could never emit) the ratio is 1 if ``p(d) > 0`` else 0
+    — the limit the division-free accept rule ``u * q(d) < p(d)`` of
+    ``rejection_sample`` realises."""
+    k = drafts.shape[1]
+    qd = jnp.take_along_axis(q, drafts[..., None], axis=-1)[..., 0]
+    pd = jnp.take_along_axis(p[:, :k], drafts[..., None], axis=-1)[..., 0]
+    return jnp.where(qd > 0.0,
+                     jnp.minimum(1.0, pd / jnp.maximum(qd, 1e-38)),
+                     (pd > 0.0).astype(jnp.float32))
+
+
+def residual_dist(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Normalised rejection residual ``max(p - q, 0)`` over the last axis.
+    Zero residual mass means ``p <= q`` pointwise, i.e. ``p == q`` for
+    distributions — rejection is then impossible (the accept rule fires
+    with probability 1), so the ``p`` fallback keeps the helper total
+    without ever being reachable from ``rejection_sample``."""
+    r = jnp.maximum(p - q, 0.0)
+    s = jnp.sum(r, axis=-1, keepdims=True)
+    return jnp.where(s > 0.0, r / jnp.maximum(s, 1e-38), p)
+
+
+def rejection_sample(keys, drafts: jnp.ndarray, q: jnp.ndarray,
+                     p: jnp.ndarray):
+    """Per-row rejection-sampling verification of a proposal window.
+
+    ``keys`` (B,) per-row window keys (``draw_keys(..., TAG_WINDOW)``);
+    ``drafts`` (B, k) proposed tokens; ``q`` (B, k, V) the distributions
+    they were proposed from (a one-hot point mass for deterministic
+    proposers); ``p`` (B, k+1, V) the target's warped verify
+    distributions.
+
+    Returns ``(tokens (B, k+1), a (B,))`` laid out like
+    ``speculative.greedy_accept``: ``a`` is the number of accepted
+    proposals and the row emits ``tokens[:, :a+1]`` — the accepted
+    proposals followed by the residual resample (``a < k``) or the bonus
+    draw from ``p[:, k]`` (``a == k``).  Positions past ``a`` repeat the
+    final draw; they are dead filler matching greedy_accept's convention
+    that only ``:a+1`` is ever read.
+
+    Acceptance uses the division-free rule ``u * q(d) < p(d)`` (``u ~
+    U[0,1)``), equivalent to ``u < min(1, p(d)/q(d))`` and exact even
+    when ``q(d)`` underflows; ``q == p`` therefore accepts everything
+    (``u < 1``)."""
+    b, k = drafts.shape
+
+    def row(key, d, qr, pr):
+        ku, kf = jax.random.split(key)
+        u = jax.random.uniform(ku, (k,))
+        qd = jnp.take_along_axis(qr, d[:, None], axis=1)[:, 0]
+        pd = jnp.take_along_axis(pr[:k], d[:, None], axis=1)[:, 0]
+        acc = (u * qd < pd).astype(jnp.int32)
+        a = jnp.sum(jnp.cumprod(acc))
+        j = jnp.minimum(a, k - 1)  # residual position (clip: a==k uses p[k])
+        dist = jnp.where(a == k, pr[k], residual_dist(pr[j], qr[j]))
+        final = jax.random.categorical(kf, jnp.log(dist)).astype(jnp.int32)
+        padded = jnp.concatenate([d, d[-1:]])
+        return jnp.where(jnp.arange(k + 1) < a, padded, final), a
+
+    return jax.vmap(row)(keys, drafts, q.astype(jnp.float32),
+                         p.astype(jnp.float32))

@@ -4,13 +4,48 @@ emitted tokens.
 The paper's bound — and ``BENCH_decode.json``'s — is weight bytes per token:
 every decode step streams the whole quantized tree to emit ONE token.
 Speculation proposes ``k`` cheap draft tokens, then runs the target model
-ONCE over the ``k+1``-token window (``models.verify_step``) and accepts the
-longest prefix whose greedy argmax agrees with the proposals, emitting
-``accepted + 1`` tokens (the accepted drafts plus the verify pass's own
-next token) per weight stream.  Verification is GREEDY: an accepted token
-is by construction exactly what non-speculative greedy decode would have
-emitted, so output is token-identical to the baseline and the speedup is
-pure (``tests/test_speculative.py`` enforces the parity matrix).
+ONCE over the ``k+1``-token window (``models.verify_step``) and emits
+``accepted + 1`` tokens (the accepted drafts plus one token the verify pass
+itself produces) per weight stream.  Verification comes in two flavours:
+
+* **Greedy** (``greedy=True`` decode): accept the longest prefix whose
+  greedy argmax agrees with the proposals.  An accepted token is by
+  construction exactly what non-speculative greedy decode would have
+  emitted, so output is TOKEN-IDENTICAL to the baseline
+  (tests/test_speculative.py enforces the parity matrix).
+* **Sampled** (``greedy=False``, temperature/top-k): rejection-sampling
+  verification (``sampling.rejection_sample``): accept proposal ``d_i ~
+  q_i`` with probability ``min(1, p_i(d_i)/q_i(d_i))`` against the
+  target's warped verify distribution ``p_i``, resample the first
+  rejection from the normalised residual ``max(p_i - q_i, 0)``, and draw
+  the bonus token from ``p_{k+1}`` when everything is accepted.
+
+**Distribution-preservation guarantee.**  Sampled speculation leaves the
+output distribution of plain sampled decode EXACTLY unchanged: the
+accept/residual construction makes each emitted token marginally (and
+jointly) distributed as ancestral sampling from the warped target
+distribution, for ANY proposal distribution q — proposer quality moves
+the acceptance rate (weight streams paid), never the law of the output.
+The test methodology is two-layered (tests/test_sampled_speculative.py):
+
+* **Seeded exactness** where the algorithm is key-deterministic: the
+  per-row ``(base key, request id, counter)`` fold_in discipline
+  (``serving.sampling``) makes the same ``key`` produce identical tokens
+  across {dense fixed engine, paged continuous engine} x {1, 8 devices},
+  across slot assignments/chunk sizes, and across preemption/recompute
+  replays — asserted token-for-token.  One scoped caveat: the moe archs'
+  dense-vs-paged cache layouts yield ~1e-3 logit differences (expert
+  top-k gates amplify contraction-order ulps; pre-existing since the
+  PR 2 paged cache), so THEIR cross-engine guarantee is distributional
+  only — per-engine key-determinism, schedule independence, and
+  mesh-width invariance still hold exactly
+  (tests/helpers.PAGED_BITEXACT_ARCHS documents the split).
+* **Distributional equivalence** where it is not (speculative vs plain
+  sampled decode consume different draw counts): empirical token
+  histograms over thousands of seeded decodes are compared with a
+  pooled-bin chi-square homogeneity test at alpha=0.01 (plus a
+  total-variation report), per model family
+  (``tests/helpers.histogram_decode`` / ``chi_square_homogeneity``).
 
 Two proposers:
 
@@ -19,12 +54,18 @@ Two proposers:
   position and propose the ``k`` tokens that followed the most recent
   match; fall back to repeating the last token.  Zero extra parameters,
   runs inside the compiled program, and thrives on the repetitive tails
-  real decodes (and untrained-model attractors) produce.
+  real decodes (and untrained-model attractors) produce.  Deterministic,
+  so its ``q`` is a one-hot point mass: acceptance degenerates to
+  ``u < p(d)`` and the residual to ``p`` with the proposal zeroed.
 * ``mode="draft"`` — a small draft model (its own cache) proposes ``k``
-  tokens autoregressively; its per-step states stack across the chain
-  (``models.stack_verify_caches``) and commit once at the accepted length
-  with the same ``commit_verify`` machinery as the target — no re-sync
-  forward (single-device ``ServingEngine`` path).
+  tokens autoregressively — argmax under greedy decode, sampled from its
+  own warped distribution ``q_i`` under sampling; its per-step states
+  stack across the chain (``models.stack_verify_caches``) and commit once
+  at the accepted length with the same ``commit_verify`` machinery as the
+  target — no re-sync forward.  On the fixed engine the draft cache is
+  dense; on the continuous engine it is a PAGED pool sharing the target's
+  block tables (same page ids, its own storage), so draft speculation
+  survives admit/retire/preemption like any other per-slot state.
 
 Rollback discipline (see ``models.verify_step``): attention/MLA writes at
 rejected positions are dead by masking and rewritten by the next window;
@@ -50,6 +91,14 @@ from repro.models import (
     verify_step,
 )
 from repro.models.lm import stack_verify_caches
+from repro.serving.sampling import (
+    TAG_TOKEN,
+    TAG_WINDOW,
+    draw_keys,
+    rejection_sample,
+    sample_rows,
+    warp_logits,
+)
 from repro.serving.sharded import tree_pspecs
 
 
@@ -128,68 +177,121 @@ def greedy_accept(window: jnp.ndarray, logits: jnp.ndarray):
     return g, a
 
 
+def _accept(window, drafts, lg, *, greedy: bool, temperature, top_k: int,
+            wkeys, q):
+    """One verification: greedy longest-prefix, or rejection sampling
+    against the warped target distribution.  Returns ``(g, a)`` with the
+    shared contract that the row emits ``g[:, :a+1]``.  ``q`` is the
+    proposal distribution (B, k, V) or None for deterministic proposers
+    (one-hot point mass)."""
+    if greedy:
+        return greedy_accept(window, lg)
+    p = jax.nn.softmax(warp_logits(lg, temperature, top_k), axis=-1)
+    if q is None:
+        q = jax.nn.one_hot(drafts, lg.shape[-1], dtype=jnp.float32)
+    return rejection_sample(wkeys, drafts, q, p)
+
+
 # ------------------------------------------------- fixed-batch spec engine --
-def _draft_propose(draft_params, draft_cfg, dcache, tok, pos, extras, k):
+def _draft_propose(draft_params, draft_cfg, dcache, tok, pos, extras, k,
+                   *, page_size: int = 0, wkeys=None, greedy: bool = True,
+                   temperature=1.0, top_k: int = 0):
     """Autoregressive draft proposals: k+1 single-token steps consume the
     whole window ``[tok, d_1..d_k]`` (the extra step eats ``d_k`` so every
-    accepted length has a state; its own proposal is discarded).  Returns
-    ``(drafts (B,k), stacked)`` where ``stacked`` is the chain's states
-    merged into one verify cache (``models.stack_verify_caches``) — the
-    caller commits it once at the accepted length, no re-sync forward."""
-    dc, t, ds, vcs = dcache, tok, [], []
+    accepted length has a state).  Greedy decode proposes the draft's
+    argmax; sampled decode draws ``d_i ~ q_i`` from the draft's warped
+    distribution using per-row subkeys of the window key, and returns the
+    stacked ``q`` (B, k, V) for the rejection-sampling accept ratio.
+    Returns ``(drafts (B, k), q or None, stacked)`` where ``stacked`` is
+    the chain's states merged into one verify cache
+    (``models.stack_verify_caches``) — the caller commits it once at the
+    accepted length, no re-sync forward.  With a paged ``dcache`` (the
+    continuous engine) the chain scatters/gathers through the draft pool's
+    block tables at per-slot positions."""
+    dc, t, ds, qs, vcs = dcache, tok, [], [], []
     zero = jnp.zeros((tok.shape[0],), jnp.int32)
     for i in range(k + 1):
-        lg, vc = verify_step(draft_params, draft_cfg, t, dc, pos + i, extras)
+        lg, vc = verify_step(draft_params, draft_cfg, t, dc, pos + i, extras,
+                             page_size=page_size)
         vcs.append(vc)
         dc = commit_verify(draft_cfg, vc, zero)
-        t = jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
         if i < k:
+            last = lg[:, -1, :]
+            if greedy:
+                t = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+            else:
+                wl = warp_logits(last, temperature, top_k)
+                ki = jax.vmap(lambda kk: jax.random.fold_in(kk, 3 + i))(wkeys)
+                t = jax.vmap(jax.random.categorical)(ki, wl).astype(
+                    jnp.int32)[:, None]
+                qs.append(jax.nn.softmax(wl, axis=-1))
             ds.append(t)
     return (jnp.concatenate(ds, axis=1),
+            jnp.stack(qs, axis=1) if qs else None,
             stack_verify_caches(draft_cfg, vcs))
 
 
 def _spec_generate_body(params, cfg: ModelConfig, prompt, extras, draft_params,
-                        *, draft_cfg, n_new: int, max_seq: int, k: int,
-                        mode: str, ngram_n: int):
+                        key, temperature, *, draft_cfg, n_new: int,
+                        max_seq: int, k: int, mode: str, ngram_n: int,
+                        greedy: bool, top_k: int):
     """Whole speculative generation — prefill + a verify-window loop — as
-    one XLA program.  Greedy only.  Returns (tokens (B, n_new),
-    verify_steps, live_row_steps): tokens are identical to the plain greedy
-    ``generate``; emitted-per-live-row-step = ``B*(n_new-1) /
-    live_row_steps`` is the speculation multiplier."""
+    one XLA program.  Greedy verification or rejection sampling (see module
+    docstring).  Returns (tokens (B, n_new), verify_steps, live_row_steps):
+    greedy tokens are identical to the plain greedy ``generate``; sampled
+    tokens are key-deterministic (per-row fold_in streams) and
+    distributionally identical to plain sampled decode.
+    emitted-per-live-row-step = ``B*(n_new-1) / live_row_steps`` is the
+    speculation multiplier."""
     b, s = prompt.shape
     if n_new == 0:
         return (jnp.zeros((b, 0), jnp.int32), jnp.int32(0), jnp.int32(0))
+    rids = jnp.arange(b, dtype=jnp.int32)
     cache = init_cache(cfg, b, max_seq)
     logits, cache = prefill(params, cfg, prompt, cache, extras)
-    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    tok = sample_rows(
+        logits[:, -1, :],
+        None if greedy else draw_keys(key, rids, 0, TAG_TOKEN),
+        greedy=greedy, temperature=temperature, top_k=top_k)[:, None]
     hist = jnp.zeros((b, max_seq), jnp.int32)
     hist = jax.lax.dynamic_update_slice(hist, prompt.astype(jnp.int32), (0, 0))
     hist = hist.at[:, s].set(tok[:, 0])
     out = jnp.zeros((b, n_new), jnp.int32).at[:, 0].set(tok[:, 0])
     n_em = jnp.ones((b,), jnp.int32)
     if mode == "draft":
-        dcache = init_cache(draft_cfg, b, max_seq)
+        # k extra positions: the draft chain reads back the speculative
+        # positions it writes, and near the max_seq frontier those reads
+        # must hit real stored values (a dense out-of-store write DROPS),
+        # mirroring the paged engine's _store_seq over-provisioning so the
+        # two engines stay key-identical at the boundary.
+        dcache = init_cache(draft_cfg, b, max_seq + k)
         _, dcache = prefill(draft_params, draft_cfg, prompt, dcache, extras)
     else:
         dcache = ()
     rows = jnp.arange(b)[:, None]
     steps0 = jnp.int32(0)
+    wctr0 = jnp.zeros((b,), jnp.int32)
 
     def cond(carry):
         return jnp.any(carry[3] < n_new)
 
     def body(carry):
-        tok, cache, dcache, n_em, out, hist, steps, live_steps = carry
+        tok, cache, dcache, n_em, out, hist, wctr, steps, live_steps = carry
         pos = jnp.int32(s) - 1 + n_em  # (B,) tokens already consumed
+        wkeys = (None if greedy
+                 else draw_keys(key, rids, wctr, TAG_WINDOW))
         if mode == "draft":
-            drafts, dstack = _draft_propose(draft_params, draft_cfg, dcache,
-                                            tok, pos, extras, k)
+            drafts, q, dstack = _draft_propose(
+                draft_params, draft_cfg, dcache, tok, pos, extras, k,
+                wkeys=wkeys, greedy=greedy, temperature=temperature,
+                top_k=top_k)
         else:
             drafts = propose_ngram(hist, jnp.int32(s) + n_em, k, ngram_n)
+            q = None
         window = jnp.concatenate([tok, drafts], axis=1)  # (B, k+1)
         lg, vc = verify_step(params, cfg, window, cache, pos, extras)
-        g, a = greedy_accept(window, lg)
+        g, a = _accept(window, drafts, lg, greedy=greedy,
+                       temperature=temperature, top_k=top_k, wkeys=wkeys, q=q)
         live = n_em < n_new
         m = jnp.where(live, jnp.minimum(a + 1, n_new - n_em), 0)  # (B,)
         emit = jnp.arange(k + 1)[None, :] < m[:, None]
@@ -205,69 +307,93 @@ def _spec_generate_body(params, cfg: ModelConfig, prompt, extras, draft_params,
                                             axis=1),
                         tok)
         n_em = n_em + m
-        return (tok, cache, dcache, n_em, out, hist, steps + 1,
+        return (tok, cache, dcache, n_em, out, hist,
+                wctr + live.astype(jnp.int32), steps + 1,
                 live_steps + jnp.sum(live.astype(jnp.int32)))
 
     carry = jax.lax.while_loop(
-        cond, body, (tok, cache, dcache, n_em, out, hist, steps0, steps0))
-    return carry[4], carry[6], carry[7]
+        cond, body,
+        (tok, cache, dcache, n_em, out, hist, wctr0, steps0, steps0))
+    return carry[4], carry[7], carry[8]
 
 
 _spec_generate = functools.partial(
     jax.jit,
     static_argnames=("cfg", "draft_cfg", "n_new", "max_seq", "k", "mode",
-                     "ngram_n"),
+                     "ngram_n", "greedy", "top_k"),
 )(_spec_generate_body)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "mesh", "n_new", "max_seq", "k", "ngram_n"),
+    static_argnames=("cfg", "mesh", "n_new", "max_seq", "k", "ngram_n",
+                     "greedy", "top_k"),
 )
-def _spec_generate_sharded(params, cfg: ModelConfig, prompt, extras, *, mesh,
-                           n_new: int, max_seq: int, k: int, ngram_n: int):
+def _spec_generate_sharded(params, cfg: ModelConfig, prompt, extras, key,
+                           temperature, *, mesh, n_new: int, max_seq: int,
+                           k: int, ngram_n: int, greedy: bool, top_k: int):
     """``_spec_generate_body`` (ngram mode) under ``shard_map``: weight
-    shards per device, everything else replicated — the loop condition is
-    computed from replicated values, so every device iterates in
+    shards per device, everything else — including the PRNG key — is
+    replicated, so every device draws the same samples and iterates in
     lockstep."""
 
-    def f(p, pr, ex):
-        return _spec_generate_body(p, cfg, pr, ex, None, draft_cfg=None,
-                                   n_new=n_new, max_seq=max_seq, k=k,
-                                   mode="ngram", ngram_n=ngram_n)
+    def f(p, pr, ex, ky, t):
+        return _spec_generate_body(p, cfg, pr, ex, None, ky, t,
+                                   draft_cfg=None, n_new=n_new,
+                                   max_seq=max_seq, k=k, mode="ngram",
+                                   ngram_n=ngram_n, greedy=greedy,
+                                   top_k=top_k)
 
     return shard_map(
         f, mesh=mesh,
-        in_specs=(tree_pspecs(params), P(), P()),
+        in_specs=(tree_pspecs(params), P(), P(), P(), P()),
         out_specs=(P(), P(), P()), check_rep=False,
-    )(params, prompt, extras)
+    )(params, prompt, extras, key, temperature)
 
 
 # ------------------------------------------- continuous-batching spec chunk --
-def _spec_chunk_body(params, cfg: ModelConfig, cache, tok, pos, n_out, done,
-                     hist, max_new, stops, extras, *, chunk: int,
-                     page_size: int, k: int, ngram_n: int, pad_id: int):
+def _spec_chunk_body(params, cfg: ModelConfig, cache, draft_params, dcache,
+                     tok, pos, n_out, done, hist, wctr, rids, max_new, stops,
+                     key, temperature, extras, *, draft_cfg, chunk: int,
+                     page_size: int, k: int, mode: str, ngram_n: int,
+                     pad_id: int, greedy: bool, top_k: int):
     """``chunk`` speculative verify windows over all batch slots as one
     compiled scan — the speculation analogue of ``engine._decode_chunk_body``
-    (greedy only).  Each iteration proposes ``k`` tokens per slot from its
-    history, verifies the window against the paged cache, and advances each
-    slot by its own accepted length (done slots advance 0 and write only
-    their own pages or the trash page).  Emissions are truncated at the
-    slot's first stop token and at ``max_new``.  Returns per-iteration
-    ``emits`` (chunk, B, k+1) and counts ``ms`` (chunk, B) — the host
-    appends ``emits[t, s, :ms[t, s]]``."""
+    (greedy or rejection-sampled).  Each iteration proposes ``k`` tokens per
+    slot (n-gram history lookup, or the paged draft model), verifies the
+    window against the paged cache, and advances each slot by its own
+    accepted length (done slots advance 0 and write only their own pages or
+    the trash page).  Sampled draws are keyed per slot by ``(key, rid,
+    window counter)`` so slot assignment and chunk boundaries never change
+    a request's tokens.  Emissions are truncated at the slot's first stop
+    token and at ``max_new``.  Returns per-iteration ``emits``
+    (chunk, B, k+1) and counts ``ms`` (chunk, B) — the host appends
+    ``emits[t, s, :ms[t, s]]``."""
     b = tok.shape[0]
     rows = jnp.arange(b)[:, None]
 
     def body(carry, _):
-        tok, cache, pos, n_out, done, hist = carry
-        drafts = propose_ngram(hist, pos + 1, k, ngram_n)
+        tok, cache, dcache, pos, n_out, done, hist, wctr = carry
+        wkeys = (None if greedy
+                 else draw_keys(key, rids, wctr, TAG_WINDOW))
+        if mode == "draft":
+            drafts, q, dstack = _draft_propose(
+                draft_params, draft_cfg, dcache, tok, pos, extras, k,
+                page_size=page_size, wkeys=wkeys, greedy=greedy,
+                temperature=temperature, top_k=top_k)
+        else:
+            drafts = propose_ngram(hist, pos + 1, k, ngram_n)
+            q = None
         window = jnp.concatenate([tok, drafts], axis=1)
         lg, vc = verify_step(params, cfg, window, cache, pos, extras,
                              page_size=page_size)
-        g, a = greedy_accept(window, lg)
+        g, a = _accept(window, drafts, lg, greedy=greedy,
+                       temperature=temperature, top_k=top_k, wkeys=wkeys, q=q)
         live = ~done
         m = jnp.minimum(a + 1, max_new - n_out)
+        # A stop token accepted mid-window truncates the window THERE: the
+        # stop itself is emitted, everything after it in the window is
+        # masked (never reaches the output, the history, or `tok`).
         hit = jnp.any(g[:, :, None] == stops[:, None, :], axis=-1)  # (B, k+1)
         hitm = hit & (jnp.arange(k + 1)[None, :] < m[:, None])
         any_hit = jnp.any(hitm, axis=1)
@@ -287,41 +413,52 @@ def _spec_chunk_body(params, cfg: ModelConfig, cache, tok, pos, n_out, done,
         n_out = n_out + m
         done = done | (live & any_hit) | (n_out >= max_new)
         cache = commit_verify(cfg, vc, jnp.maximum(m - 1, 0))
-        return (tok, cache, pos, n_out, done, hist), (emit, m)
+        if mode == "draft":
+            dcache = commit_verify(draft_cfg, dstack, jnp.maximum(m - 1, 0))
+        return ((tok, cache, dcache, pos, n_out, done, hist,
+                 wctr + live.astype(jnp.int32)), (emit, m))
 
     carry, (emits, ms) = jax.lax.scan(
-        body, (tok, cache, pos, n_out, done, hist), None, length=chunk)
-    tok, cache, pos, n_out, done, hist = carry
-    return cache, tok, pos, n_out, done, hist, emits, ms
+        body, (tok, cache, dcache, pos, n_out, done, hist, wctr), None,
+        length=chunk)
+    tok, cache, dcache, pos, n_out, done, hist, wctr = carry
+    return cache, dcache, tok, pos, n_out, done, hist, wctr, emits, ms
 
 
 _spec_chunk = functools.partial(
     jax.jit,
-    static_argnames=("cfg", "chunk", "page_size", "k", "ngram_n", "pad_id"),
-    donate_argnames=("cache",),
+    static_argnames=("cfg", "draft_cfg", "chunk", "page_size", "k", "mode",
+                     "ngram_n", "pad_id", "greedy", "top_k"),
+    donate_argnames=("cache", "dcache"),
 )(_spec_chunk_body)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "mesh", "chunk", "page_size", "k", "ngram_n",
-                     "pad_id"),
+                     "pad_id", "greedy", "top_k"),
     donate_argnames=("cache",),
 )
 def _spec_chunk_sharded(params, cfg: ModelConfig, cache, tok, pos, n_out,
-                        done, hist, max_new, stops, extras, *, mesh,
-                        chunk: int, page_size: int, k: int, ngram_n: int,
-                        pad_id: int):
-    """``_spec_chunk_body`` under ``shard_map`` (weight shards per device,
-    paged pools / history / scheduler carry replicated)."""
+                        done, hist, wctr, rids, max_new, stops, key,
+                        temperature, extras, *, mesh, chunk: int,
+                        page_size: int, k: int, ngram_n: int, pad_id: int,
+                        greedy: bool, top_k: int):
+    """``_spec_chunk_body`` (ngram mode) under ``shard_map`` (weight shards
+    per device; paged pools, history, PRNG key, and scheduler carry
+    replicated — every device draws identical samples)."""
 
-    def f(p, c, tk, ps_, no, dn, hs, mn, st, ex):
-        return _spec_chunk_body(p, cfg, c, tk, ps_, no, dn, hs, mn, st, ex,
-                                chunk=chunk, page_size=page_size, k=k,
-                                ngram_n=ngram_n, pad_id=pad_id)
+    def f(p, c, tk, ps_, no, dn, hs, wc, ri, mn, st, ky, t, ex):
+        (c, _, tk, ps_, no, dn, hs, wc, emits, ms) = _spec_chunk_body(
+            p, cfg, c, None, (), tk, ps_, no, dn, hs, wc, ri, mn, st, ky, t,
+            ex, draft_cfg=None, chunk=chunk, page_size=page_size, k=k,
+            mode="ngram", ngram_n=ngram_n, pad_id=pad_id, greedy=greedy,
+            top_k=top_k)
+        return c, tk, ps_, no, dn, hs, wc, emits, ms
 
     return shard_map(
         f, mesh=mesh,
-        in_specs=(tree_pspecs(params),) + (P(),) * 9,
+        in_specs=(tree_pspecs(params),) + (P(),) * 13,
         out_specs=P(), check_rep=False,
-    )(params, cache, tok, pos, n_out, done, hist, max_new, stops, extras)
+    )(params, cache, tok, pos, n_out, done, hist, wctr, rids, max_new, stops,
+      key, temperature, extras)

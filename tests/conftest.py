@@ -13,6 +13,30 @@ import types
 
 import pytest
 
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--run-slow", action="store_true", default=False,
+        help="run tests marked slow (the >=2000-draw chi-square legs of "
+        "the sampled-speculation statistical harness; CI runs them in a "
+        "dedicated seeded leg)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: many-seed statistical tests — skipped unless --run-slow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(reason="slow statistical leg; pass --run-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
 try:
     from hypothesis import HealthCheck, settings
 

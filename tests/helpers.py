@@ -9,7 +9,18 @@ one in test_speculative) all drive the same fixtures.
 
 ``FAMILY_ARCHS`` is THE canonical one-arch-per-family list (moe is covered
 both with and without MLA, so "six families" tests iterate seven archs).
+
+The sampled-decoding additions serve tests/test_sampled_speculative.py's
+two-layer methodology: ``assert_sampled_parity`` is the seeded-exactness
+layer (the per-row fold_in key discipline makes the same key produce
+identical temperature/top-k tokens on the dense fixed engine and the paged
+continuous engine), and ``histogram_decode`` + ``chi_square_homogeneity`` /
+``total_variation`` are the distributional layer (empirical token
+frequencies over thousands of seeded decodes, compared with a pooled-bin
+chi-square homogeneity test).
 """
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -30,6 +41,20 @@ FAMILY_ARCHS = [
 ]
 
 ENGINE_KINDS = ("fixed", "continuous")
+
+# Dense-cache and paged-cache logits are BIT-IDENTICAL for these archs
+# (measured: ``verify_step`` and ``decode_step`` agree to the last bit
+# across the two cache layouts), so cross-engine SAMPLED decode is
+# key-exact for them.  The two moe archs are excluded: their expert top-k
+# gates amplify sub-ulp contraction-order differences between the layouts
+# into ~1e-3 logit shifts (pre-existing since the PR 2 paged cache —
+# greedy parity passes on argmax margins), which can flip a sampled draw
+# sitting within 1e-3 of its accept boundary.  Their cross-engine
+# guarantee is therefore distributional (the chi-square leg covers all
+# seven archs); their per-engine sampled decode is still key-exact.
+PAGED_BITEXACT_ARCHS = [a for a in FAMILY_ARCHS
+                        if a not in ("deepseek-v2-lite-16b",
+                                     "moonshot-v1-16b-a3b")]
 
 
 def setup_family(arch, b=2, s=8, key=0, kv_bits=0):
@@ -100,6 +125,104 @@ def batch_requests(prompt, n_new, extras=None, stop_tokens=()):
                 extras=request_extras(extras, i))
         for i, row in enumerate(prompts)
     ]
+
+
+def assert_sampled_parity(cfg, params, prompt, extras=None, *, n_new=5,
+                          max_seq=24, key=None, temperature=0.8, top_k=8,
+                          speculate=None, bits=0, draft=False, msg="",
+                          slots=2, page_size=4, chunk=3):
+    """Seeded sampling parity: the SAME key must give IDENTICAL
+    temperature/top-k tokens on the dense fixed engine and the paged
+    continuous engine (plain or speculative) — the key-deterministic half
+    of the sampled-speculation contract.  Returns the tokens so callers
+    can chain further asserts."""
+    if key is None:
+        key = jax.random.PRNGKey(11)
+    dkw = dict(draft_cfg=cfg, draft_params=params) if draft else {}
+    fixed = ServingEngine(cfg, params, max_seq=max_seq, pim_bits=bits, **dkw)
+    want = np.asarray(fixed.generate(
+        prompt, n_new=n_new, extras=extras, greedy=False,
+        temperature=temperature, top_k=top_k, key=key, speculate=speculate))
+    cont = ContinuousBatchingEngine(
+        cfg, params, slots=slots, max_seq=max_seq, page_size=page_size,
+        chunk=chunk, pim_bits=bits, speculate=speculate, **dkw)
+    got = np.asarray(cont.generate(
+        prompt, n_new=n_new, extras=extras, greedy=False,
+        temperature=temperature, top_k=top_k, key=key))
+    assert_tokens_identical(want, got, msg=f"dense vs paged sampled {msg}")
+    return want
+
+
+def histogram_decode(gen_fn, vocab: int, n_draws: int, *, position=-1,
+                     base_seed: int = 1000) -> np.ndarray:
+    """Empirical token frequencies at ``position`` over ``n_draws`` seeded
+    decodes.  ``gen_fn(key) -> (B, n) tokens`` must derive per-row random
+    streams from (key, row id) — the engines' fold_in key discipline — so
+    every row of a replicated-prompt batch is an INDEPENDENT seeded decode;
+    the helper feeds fresh base keys until ``n_draws`` rows accumulate."""
+    counts = np.zeros(vocab, np.int64)
+    got, i = 0, 0
+    while got < n_draws:
+        toks = np.asarray(gen_fn(jax.random.PRNGKey(base_seed + i)))
+        take = min(toks.shape[0], n_draws - got)
+        counts += np.bincount(toks[:take, position], minlength=vocab)
+        got += take
+        i += 1
+    return counts
+
+
+def chi_square_homogeneity(c1, c2, pool_below: float = 10.0):
+    """Two-sample chi-square homogeneity test on token histograms.
+
+    Bins whose POOLED count falls below ``pool_below`` are merged into one
+    tail bin (the classic >=5-expected-per-cell validity rule for two
+    same-sized samples).  Returns ``(stat, df, pvalue)``; the p-value uses
+    ``scipy.stats.chi2`` when available and the Wilson-Hilferty cube-root
+    normal approximation otherwise (accurate to ~1e-3 for df >= 10 — far
+    tighter than the alpha=0.01 decisions made on it)."""
+    c1 = np.asarray(c1, np.float64)
+    c2 = np.asarray(c2, np.float64)
+    assert c1.shape == c2.shape and c1.sum() > 0 and c2.sum() > 0
+    tot = c1 + c2
+    keep = tot >= pool_below
+    b1 = np.concatenate([c1[keep], [c1[~keep].sum()]])
+    b2 = np.concatenate([c2[keep], [c2[~keep].sum()]])
+    if b1[-1] + b2[-1] == 0:
+        b1, b2 = b1[:-1], b2[:-1]
+    n1, n2 = b1.sum(), b2.sum()
+    pooled = (b1 + b2) / (n1 + n2)
+    e1, e2 = n1 * pooled, n2 * pooled
+    stat = float(np.sum((b1 - e1) ** 2 / e1) + np.sum((b2 - e2) ** 2 / e2))
+    df = int(len(b1) - 1)
+    try:
+        from scipy.stats import chi2
+
+        p = float(chi2.sf(stat, df))
+    except ImportError:  # pragma: no cover - scipy ships with jax
+        z = (((stat / df) ** (1.0 / 3.0) - (1.0 - 2.0 / (9.0 * df)))
+             / math.sqrt(2.0 / (9.0 * df)))
+        p = 0.5 * math.erfc(z / math.sqrt(2.0))
+    return stat, df, p
+
+
+def total_variation(c1, c2) -> float:
+    """TV distance between the empirical distributions of two histograms."""
+    c1 = np.asarray(c1, np.float64)
+    c2 = np.asarray(c2, np.float64)
+    return float(0.5 * np.abs(c1 / c1.sum() - c2 / c2.sum()).sum())
+
+
+def assert_distributions_match(c1, c2, alpha: float = 0.01, msg: str = ""):
+    """The distributional-equivalence assert: a chi-square homogeneity test
+    must NOT reject at ``alpha`` (deterministic for fixed seeds — either
+    the histograms are draws from one distribution and p is comfortably
+    large, or the sampler is wrong and p collapses to ~0).  The TV distance
+    rides along in the failure message as the effect-size report."""
+    stat, df, p = chi_square_homogeneity(c1, c2)
+    assert p >= alpha, (
+        f"{msg}: histograms differ (chi2={stat:.1f}, df={df}, p={p:.3g}, "
+        f"tv={total_variation(c1, c2):.4f}, n1={int(np.sum(c1))}, "
+        f"n2={int(np.sum(c2))})")
 
 
 def assert_serve_matches_solo(engine, cfg, params, requests, max_seq=None):

@@ -1,0 +1,665 @@
+"""Sampled speculative decoding via rejection sampling — the
+distributional-equivalence test harness.
+
+The contract has two layers, because the algorithm is only PARTLY
+key-deterministic:
+
+* **Seeded exactness** — every sampled draw is keyed by ``(base key,
+  request id, draw counter)`` (``serving.sampling``), so for one given
+  algorithm (plain sampled decode, or sampled speculation at a fixed k)
+  the same key must produce IDENTICAL tokens across {dense fixed engine,
+  paged continuous engine} x {1, 8 virtual devices}, across slot
+  assignments/chunk sizes, and across recompute-preemption replays.
+  Asserted token-for-token below.
+* **Distributional equivalence** — speculative and plain decode consume
+  DIFFERENT draw counts, so across algorithms only the output law is
+  preserved: rejection-sampling verification (accept ``d ~ q`` w.p.
+  ``min(1, p(d)/q(d))``, resample the first rejection from
+  ``norm(max(p-q, 0))``) leaves the distribution of plain sampled decode
+  exactly unchanged.  Asserted by pooled-bin chi-square homogeneity tests
+  at alpha=0.01 over thousands of seeded decodes
+  (``helpers.histogram_decode``) — per model family in the ``slow`` leg
+  (CI runs it seeded with PYTHONHASHSEED pinned).
+
+Plus hypothesis property tests (with stub-proof fixed-sample twins) for
+the rejection primitive in isolation, the stop-token x sampled-speculation
+interaction, and paged draft-cache coverage (leaks / freed-page reissue /
+preemption mid-speculation).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from helpers import (
+    FAMILY_ARCHS,
+    PAGED_BITEXACT_ARCHS,
+    assert_distributions_match,
+    assert_sampled_parity,
+    assert_tokens_identical,
+    chi_square_homogeneity,
+    histogram_decode,
+    setup_family,
+    total_variation,
+)
+
+from repro.serving import (
+    ContinuousBatchingEngine,
+    Request,
+    ServingEngine,
+    SpecConfig,
+    acceptance_probs,
+    rejection_sample,
+    residual_dist,
+)
+from repro.serving.sampling import TAG_WINDOW, draw_keys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rand_dists(rng, b, k, v, sharpness=1.0):
+    """Random (q (b,k,v), p (b,k+1,v)) distribution stacks."""
+    q = rng.gamma(sharpness, size=(b, k, v)) + 1e-9
+    p = rng.gamma(sharpness, size=(b, k + 1, v)) + 1e-9
+    return (jnp.asarray(q / q.sum(-1, keepdims=True), jnp.float32),
+            jnp.asarray(p / p.sum(-1, keepdims=True), jnp.float32))
+
+
+# ------------------------------------------ primitive: property + fixed twins
+def _check_acceptance_probs(q, p, drafts):
+    acc = np.asarray(acceptance_probs(drafts, q, p))
+    assert acc.shape == drafts.shape
+    assert (acc >= 0.0).all() and (acc <= 1.0).all()
+    # the ratio itself where q(d) > 0
+    qd = np.take_along_axis(np.asarray(q), np.asarray(drafts)[..., None],
+                            -1)[..., 0]
+    pd = np.take_along_axis(np.asarray(p)[:, :drafts.shape[1]],
+                            np.asarray(drafts)[..., None], -1)[..., 0]
+    mask = qd > 0
+    np.testing.assert_allclose(acc[mask], np.minimum(1.0, pd / qd)[mask],
+                               rtol=1e-5)
+
+
+def _check_residual(p, q):
+    r = np.asarray(residual_dist(p, q))
+    assert (r >= -1e-7).all()  # non-negative
+    np.testing.assert_allclose(r.sum(-1), 1.0, atol=1e-5)  # normalised
+    # wherever p <= q the residual puts no mass (up to float eps)
+    leq = np.asarray(p) <= np.asarray(q)
+    has_mass = (np.maximum(np.asarray(p) - np.asarray(q), 0)
+                .sum(-1, keepdims=True) > 0)
+    assert (r[leq & np.broadcast_to(has_mass, r.shape)] < 1e-6).all()
+
+
+@settings(max_examples=20)
+@given(seed=st.integers(0, 2**16), k=st.integers(1, 5),
+       v=st.integers(2, 17), sharpness=st.sampled_from([0.3, 1.0, 4.0]))
+def test_acceptance_probs_properties(seed, k, v, sharpness):
+    rng = np.random.default_rng(seed)
+    q, p = _rand_dists(rng, 3, k, v, sharpness)
+    drafts = jnp.asarray(rng.integers(0, v, size=(3, k)), jnp.int32)
+    _check_acceptance_probs(q, p, drafts)
+
+
+def test_acceptance_probs_fixed_samples():
+    rng = np.random.default_rng(0)
+    q, p = _rand_dists(rng, 2, 3, 8)
+    _check_acceptance_probs(q, p, jnp.asarray(rng.integers(0, 8, (2, 3)),
+                                              jnp.int32))
+    # q(d) == 0 corner: accept prob is 1 where p(d) > 0, 0 where p(d) == 0
+    q0 = jnp.zeros((1, 1, 4)).at[0, 0, 0].set(1.0)
+    p0 = jnp.asarray([[[0.0, 0.5, 0.5, 0.0], [0.25] * 4]])
+    acc = np.asarray(acceptance_probs(jnp.asarray([[1]], jnp.int32), q0, p0))
+    assert acc[0, 0] == 1.0  # p(1)=0.5 > 0, q(1)=0
+    acc = np.asarray(acceptance_probs(jnp.asarray([[3]], jnp.int32), q0, p0))
+    assert acc[0, 0] == 0.0  # p(3)=0, q(3)=0
+
+
+@settings(max_examples=20)
+@given(seed=st.integers(0, 2**16), v=st.integers(2, 17),
+       sharpness=st.sampled_from([0.3, 1.0, 4.0]))
+def test_residual_dist_properties(seed, v, sharpness):
+    rng = np.random.default_rng(seed)
+    q, p = _rand_dists(rng, 2, 1, v, sharpness)
+    _check_residual(p[:, 0], q[:, 0])
+
+
+def test_residual_dist_fixed_samples():
+    rng = np.random.default_rng(3)
+    q, p = _rand_dists(rng, 4, 1, 11)
+    _check_residual(p[:, 0], q[:, 0])
+    # q == p: zero residual mass falls back to p itself (unreachable from
+    # the sampler — q == p accepts with probability 1 — but total)
+    same = p[:, 0]
+    np.testing.assert_allclose(np.asarray(residual_dist(same, same)),
+                               np.asarray(same), atol=1e-7)
+    # disjoint supports: the residual IS p (plain target sampling)
+    pq = jnp.asarray([[0.0, 0.0, 0.3, 0.7]])
+    qq = jnp.asarray([[0.6, 0.4, 0.0, 0.0]])
+    np.testing.assert_allclose(np.asarray(residual_dist(pq, qq)),
+                               np.asarray(pq), atol=1e-7)
+
+
+def _check_q_equals_p_accepts_all(p, drafts, seed):
+    keys = draw_keys(jax.random.PRNGKey(seed),
+                     jnp.arange(p.shape[0], dtype=jnp.int32), 0, TAG_WINDOW)
+    toks, a = rejection_sample(keys, drafts, p[:, :-1], p)
+    k = drafts.shape[1]
+    np.testing.assert_array_equal(np.asarray(a), k)  # everything accepted
+    np.testing.assert_array_equal(np.asarray(toks)[:, :k], np.asarray(drafts))
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(0, 2**16), k=st.integers(1, 5), v=st.integers(2, 13))
+def test_rejection_q_equals_p_accepts_all_properties(seed, k, v):
+    rng = np.random.default_rng(seed)
+    _, p = _rand_dists(rng, 3, k, v)
+    # drafts must lie in q's support (they were "sampled from q"): resample
+    # until every draft has positive mass — gamma draws are a.s. positive,
+    # so any index works
+    drafts = jnp.asarray(rng.integers(0, v, size=(3, k)), jnp.int32)
+    _check_q_equals_p_accepts_all(p, drafts, seed)
+
+
+def test_rejection_q_equals_p_accepts_all_fixed():
+    rng = np.random.default_rng(9)
+    _, p = _rand_dists(rng, 4, 3, 16)
+    _check_q_equals_p_accepts_all(
+        p, jnp.asarray(rng.integers(0, 16, (4, 3)), jnp.int32), 123)
+
+
+def _check_disjoint_reduces_to_target(seed):
+    """q's support disjoint from p's: every proposal rejects at position 0
+    and the emitted token is a plain sample from p (the residual IS p)."""
+    v, b, k = 12, 64, 3
+    rng = np.random.default_rng(seed)
+    p_half = rng.gamma(1.0, size=(v // 2,)) + 1e-9
+    p_row = np.concatenate([np.zeros(v // 2), p_half])
+    p_row /= p_row.sum()
+    q_row = np.concatenate([np.ones(v // 2) / (v // 2), np.zeros(v // 2)])
+    p = jnp.asarray(np.tile(p_row, (b, k + 1, 1)), jnp.float32)
+    q = jnp.asarray(np.tile(q_row, (b, k, 1)), jnp.float32)
+    drafts = jnp.asarray(rng.integers(0, v // 2, size=(b, k)), jnp.int32)
+    keys = draw_keys(jax.random.PRNGKey(seed),
+                     jnp.arange(b, dtype=jnp.int32), 0, TAG_WINDOW)
+    toks, a = rejection_sample(keys, drafts, q, p)
+    np.testing.assert_array_equal(np.asarray(a), 0)  # nothing accepted
+    emitted = np.asarray(toks)[:, 0]
+    assert (p_row[emitted] > 0).all()  # in p's support, never q's
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 2**16))
+def test_rejection_disjoint_reduces_to_target_properties(seed):
+    _check_disjoint_reduces_to_target(seed)
+
+
+def test_rejection_disjoint_reduces_to_target_fixed():
+    _check_disjoint_reduces_to_target(5)
+
+
+def test_rejection_sample_primitive_preserves_target_distribution():
+    """The sharpest single-window check: drafts sampled from a KNOWN q,
+    verified against a KNOWN p — the first emitted token's histogram must
+    match direct categorical sampling from p (chi-square, alpha=0.01)."""
+    v, k, n = 24, 3, 4000
+    rng = np.random.default_rng(42)
+    q_row = rng.gamma(0.7, size=v) + 1e-9
+    q_row /= q_row.sum()
+    p_row = rng.gamma(0.7, size=v) + 1e-9
+    p_row /= p_row.sum()
+    q = jnp.asarray(np.tile(q_row, (n, k, 1)), jnp.float32)
+    p = jnp.asarray(np.tile(p_row, (n, k + 1, 1)), jnp.float32)
+    rids = jnp.arange(n, dtype=jnp.int32)
+    dkeys = draw_keys(jax.random.PRNGKey(1), rids, 7, TAG_WINDOW)
+    drafts = jax.vmap(
+        lambda kk: jax.random.categorical(kk, jnp.log(jnp.asarray(q_row)),
+                                          shape=(k,)))(dkeys).astype(jnp.int32)
+    wkeys = draw_keys(jax.random.PRNGKey(2), rids, 0, TAG_WINDOW)
+    toks, a = rejection_sample(wkeys, drafts, q, p)
+    got = np.bincount(np.asarray(toks)[:, 0], minlength=v)
+    ref_keys = draw_keys(jax.random.PRNGKey(3), rids, 0, TAG_WINDOW)
+    ref = jax.vmap(
+        lambda kk: jax.random.categorical(kk, jnp.log(jnp.asarray(p_row))))(
+            ref_keys)
+    want = np.bincount(np.asarray(ref), minlength=v)
+    assert_distributions_match(got, want, msg="rejection primitive vs p")
+    assert 0 < int(np.asarray(a).mean() * 1000)  # some acceptances happen
+
+
+# --------------------------------------------------------- seeded exactness -
+def test_sampled_spec_deterministic_and_key_sensitive():
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=24, pim_bits=8)
+    k1, k2 = jax.random.PRNGKey(3), jax.random.PRNGKey(4)
+    a = np.asarray(eng.generate(prompt, n_new=6, greedy=False,
+                                temperature=0.9, key=k1, speculate=4))
+    b = np.asarray(eng.generate(prompt, n_new=6, greedy=False,
+                                temperature=0.9, key=k1, speculate=4))
+    c = np.asarray(eng.generate(prompt, n_new=6, greedy=False,
+                                temperature=0.9, key=k2, speculate=4))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)  # 12 draws over vocab 256: astronomically unlikely
+
+
+@pytest.mark.parametrize("arch", PAGED_BITEXACT_ARCHS)
+def test_sampled_parity_plain_all_families(arch):
+    """Plain temperature/top-k generate: same key => identical tokens on the
+    dense fixed engine and the paged continuous engine, for every arch
+    whose two cache layouts are bit-identical (the moe archs' cross-engine
+    guarantee is distributional — see helpers.PAGED_BITEXACT_ARCHS)."""
+    cfg, params, prompt, extras = setup_family(arch)
+    assert_sampled_parity(cfg, params, prompt, extras, msg=arch)
+
+
+@pytest.mark.parametrize("arch", PAGED_BITEXACT_ARCHS)
+def test_sampled_spec_parity_all_families(arch):
+    """Sampled SPECULATIVE decode (rejection-sampling verification): same
+    key => identical tokens across dense/paged engines — the single-device
+    dense-vs-paged leg of the acceptance matrix (bit-exact archs; the moe
+    archs are covered by the chi-square leg plus the per-engine exactness
+    test below)."""
+    cfg, params, prompt, extras = setup_family(arch)
+    assert_sampled_parity(cfg, params, prompt, extras,
+                          speculate=SpecConfig(k=4), msg=arch)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-lite-16b",
+                                  "moonshot-v1-16b-a3b"])
+def test_sampled_spec_moe_per_engine_exactness(arch):
+    """The moe archs' dense-vs-paged logits differ ~1e-3 (expert gates
+    amplify contraction-order ulps — pre-existing since PR 2), so their
+    cross-engine sampled comparison is distributional, not bitwise.  What
+    MUST still hold per engine: key-determinism, and schedule independence
+    on the paged engine (slot count / chunk size / page permutation never
+    change a request's sampled tokens)."""
+    cfg, params, prompt, extras = setup_family(arch)
+    key = jax.random.PRNGKey(11)
+    kw = dict(greedy=False, temperature=0.8, top_k=8, key=key)
+    eng = ServingEngine(cfg, params, max_seq=24)
+    a = np.asarray(eng.generate(prompt, n_new=5, extras=extras,
+                                speculate=4, **kw))
+    b = np.asarray(eng.generate(prompt, n_new=5, extras=extras,
+                                speculate=4, **kw))
+    assert_tokens_identical(a, b, msg=f"{arch} fixed-engine determinism")
+    outs = []
+    for slots, chunk, seed in ((2, 3, 1), (3, 2, 9)):
+        cont = ContinuousBatchingEngine(
+            cfg, params, slots=slots, max_seq=24, page_size=4, chunk=chunk,
+            page_alloc_seed=seed, speculate=4)
+        outs.append(np.asarray(cont.generate(prompt, n_new=5, extras=extras,
+                                             **kw)))
+    assert_tokens_identical(outs[0], outs[1],
+                            msg=f"{arch} paged schedule independence")
+
+
+@pytest.mark.parametrize("temperature,top_k", [(0.7, 0), (1.2, 8), (0.5, 3)])
+def test_sampled_spec_parity_warp_grid(temperature, top_k):
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    assert_sampled_parity(cfg, params, prompt, extras, temperature=temperature,
+                          top_k=top_k, speculate=SpecConfig(k=3),
+                          msg=f"T={temperature} top_k={top_k}")
+
+
+def test_sampled_serve_schedule_independence():
+    """The fold_in key discipline makes a request's sampled tokens depend
+    only on (key, request index, progress): different slot counts, chunk
+    sizes, and page-allocation orders must serve IDENTICAL outputs for the
+    same key — speculative and plain."""
+    cfg, params, _, _ = setup_family("qwen2-1.5b")
+    rng = np.random.default_rng(0)
+    reqs = lambda: [
+        Request(prompt=rng_p, max_new=m)
+        for rng_p, m in [(rng.integers(0, cfg.vocab, size=L).astype(np.int32), m)
+                         for L, m in [(5, 6), (7, 4), (3, 7), (6, 5), (4, 6)]]]
+    trace = reqs()
+    key = jax.random.PRNGKey(21)
+    for spec in (None, SpecConfig(k=3)):
+        outs = []
+        for slots, chunk, seed in ((2, 3, 1), (3, 2, 9), (2, 4, None)):
+            eng = ContinuousBatchingEngine(
+                cfg, params, slots=slots, max_seq=16, page_size=4,
+                chunk=chunk, page_alloc_seed=seed, speculate=spec)
+            outs.append(eng.serve(trace, greedy=False, temperature=0.8,
+                                  key=key))
+        for other in outs[1:]:
+            for i, (x, y) in enumerate(zip(outs[0], other)):
+                assert_tokens_identical(x, y, msg=f"req {i} spec={spec}")
+
+
+def test_sampled_preemption_replays_same_stream():
+    """Recompute preemption under sampling: the preempted request re-draws
+    the SAME keys on re-admit, so a pool small enough to force preemption
+    serves exactly what a huge pool serves."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    key = jax.random.PRNGKey(13)
+    reqs = lambda: [Request(prompt=np.asarray(prompt[0]), max_new=18),
+                    Request(prompt=np.asarray(prompt[1]), max_new=18)]
+    big = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=32,
+                                   page_size=4, chunk=4, speculate=4)
+    want = big.serve(reqs(), greedy=False, temperature=0.8, key=key)
+    small = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=32,
+                                     page_size=4, num_pages=9, chunk=4,
+                                     speculate=4)
+    got = small.serve(reqs(), greedy=False, temperature=0.8, key=key)
+    assert small.preemptions > 0
+    for i, (x, y) in enumerate(zip(want, got)):
+        assert_tokens_identical(x, y, msg=f"request {i}")
+
+
+# ------------------------------------------- stop tokens x sampled windows --
+def test_sampled_spec_stop_token_truncates_inside_window():
+    """A stop token ACCEPTED mid-window must truncate the slot's emissions
+    at the stop and retire it — nothing after the stop may leak out of the
+    window (the sampled extension of the PR 3/4 stop-edge tests)."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    key = jax.random.PRNGKey(5)
+    base_eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=24,
+                                        page_size=4, chunk=2, speculate=4)
+    base = base_eng.serve(
+        [Request(prompt=np.asarray(prompt[0]), max_new=8),
+         Request(prompt=np.asarray(prompt[1]), max_new=8)],
+        greedy=False, temperature=0.9, key=key)
+    stop = int(base[0][3])  # row 0's 4th emission becomes the stop token
+    first = int(np.argmax(np.asarray(base[0]) == stop))
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=24,
+                                   page_size=4, chunk=2, speculate=4)
+    outs = eng.serve(
+        [Request(prompt=np.asarray(prompt[0]), max_new=8,
+                 stop_tokens=(stop,)),
+         Request(prompt=np.asarray(prompt[1]), max_new=8)],
+        greedy=False, temperature=0.9, key=key)
+    # same key => same stream up to the stop; emissions end AT the stop
+    assert_tokens_identical(np.asarray(base[0])[: first + 1], outs[0])
+    assert int(outs[0][-1]) == stop
+    assert_tokens_identical(base[1], outs[1])  # other slot unaffected
+    assert eng.pages_in_use() == 0
+
+
+def test_sampled_spec_fixed_engine_stop_tokens_masked():
+    """Fixed engine: stop handling is mask-after-stop post-processing; the
+    sampled speculative path must compose with it exactly (stop kept,
+    everything after masked — same key, same stream)."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=24)
+    key = jax.random.PRNGKey(17)
+    kw = dict(greedy=False, temperature=0.9, key=key, speculate=4)
+    base = np.asarray(eng.generate(prompt, n_new=7, **kw))
+    stop = int(base[0, 2])
+    got = np.asarray(eng.generate(prompt, n_new=7, stop_tokens=(stop,),
+                                  pad_id=-1, **kw))
+    for row_base, row in zip(base, got):
+        hits = np.flatnonzero(row_base == stop)
+        if hits.size:
+            t = hits[0]
+            np.testing.assert_array_equal(row[: t + 1], row_base[: t + 1])
+            assert (row[t + 1:] == -1).all()
+        else:
+            np.testing.assert_array_equal(row, row_base)
+    assert (got[0] == -1).any()  # the chosen stop actually truncated row 0
+
+
+# ------------------------------------------------- paged draft-cache cover --
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "falcon-mamba-7b",
+                                  "zamba2-1.2b"])
+def test_draft_mode_continuous_greedy_parity(arch):
+    """Draft-model speculation on the continuous engine (paged draft cache
+    sharing the target's block tables) stays token-identical to the plain
+    paged engine under greedy decode — incl. SSM/hybrid per-slot draft
+    state rollback."""
+    cfg, params, prompt, extras = setup_family(arch)
+    plain = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=32,
+                                     page_size=4, chunk=3)
+    want = np.asarray(plain.generate(prompt, n_new=6, extras=extras))
+    draft = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_seq=32, page_size=4, chunk=3,
+        speculate=SpecConfig(k=3, mode="draft"), draft_cfg=cfg,
+        draft_params=params)
+    got = np.asarray(draft.generate(prompt, n_new=6, extras=extras))
+    assert_tokens_identical(want, got, msg=arch)
+    assert draft.spec_emitted >= draft.spec_live_steps
+
+
+def test_draft_mode_sampled_parity_dense_vs_paged():
+    """Sampled draft speculation: same key => identical tokens on the fixed
+    engine (dense draft cache) and the continuous engine (PAGED draft
+    cache) — the read-back positions of the draft chain must come from its
+    provisioned pages, not the trash page."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    assert_sampled_parity(cfg, params, prompt, extras, n_new=7, max_seq=32,
+                          speculate=SpecConfig(k=3, mode="draft"), draft=True,
+                          msg="draft")
+
+
+def test_draft_mode_rejected_writes_do_not_leak_across_slots():
+    """Draft chains of two slots interleave writes (their own pages + the
+    shared trash page) in BOTH pools; page-permuted allocation must still
+    reproduce the dense fixed-engine draft run exactly."""
+    cfg, params, prompt, _ = setup_family("falcon-mamba-7b")
+    spec = SpecConfig(k=4, mode="draft")
+    dense = ServingEngine(cfg, params, max_seq=32, draft_cfg=cfg,
+                          draft_params=params)
+    want = np.asarray(dense.generate(prompt, n_new=8, speculate=spec))
+    for seed in (0, 11):
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=2, max_seq=32, page_size=4, chunk=2,
+            page_alloc_seed=seed, speculate=spec, draft_cfg=cfg,
+            draft_params=params)
+        got = np.asarray(eng.generate(prompt, n_new=8))
+        np.testing.assert_array_equal(want, got, err_msg=f"seed={seed}")
+
+
+def test_draft_mode_freed_page_reissue():
+    """A small pool forces freed pages to be re-issued across BOTH pools
+    (target + draft); every request still matches its solo dense-draft
+    run — no ghost K/V or draft state from the previous owner."""
+    cfg, params, _, _ = setup_family("qwen2-1.5b")
+    rng = np.random.default_rng(3)
+    spec = SpecConfig(k=3, mode="draft")
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=L).astype(np.int32),
+                    max_new=m)
+            for L, m in [(6, 6), (5, 7), (8, 4), (7, 5), (4, 8), (6, 5)]]
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=2, max_seq=20, page_size=4, num_pages=11, chunk=3,
+        page_alloc_seed=5, speculate=spec, draft_cfg=cfg, draft_params=params)
+    outs = eng.serve(reqs)
+    dense = ServingEngine(cfg, params, max_seq=20, draft_cfg=cfg,
+                          draft_params=params)
+    for i, (r, got) in enumerate(zip(reqs, outs)):
+        want = np.asarray(dense.generate(jnp.asarray(r.prompt)[None],
+                                         r.max_new, speculate=spec))[0]
+        assert_tokens_identical(want, got, msg=f"request {i}")
+    assert eng.pages_in_use() == 0
+
+
+def test_draft_mode_preemption_mid_speculation():
+    """Recompute preemption of a slot mid-speculation with a draft model:
+    the victim's pages (in both pools) are freed and re-admitted from
+    scratch; tokens must equal the no-preemption run (same key replay)."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    spec = SpecConfig(k=3, mode="draft")
+    kw = dict(slots=2, max_seq=32, page_size=4, chunk=4, speculate=spec,
+              draft_cfg=cfg, draft_params=params)
+    reqs = lambda: [Request(prompt=np.asarray(prompt[0]), max_new=16),
+                    Request(prompt=np.asarray(prompt[1]), max_new=16)]
+    big = ContinuousBatchingEngine(cfg, params, **kw)
+    want = big.serve(reqs())
+    small = ContinuousBatchingEngine(cfg, params, num_pages=11, **kw)
+    got = small.serve(reqs())
+    assert small.preemptions > 0
+    for i, (x, y) in enumerate(zip(want, got)):
+        assert_tokens_identical(x, y, msg=f"request {i}")
+
+
+def test_draft_mode_sampled_parity_at_max_seq_boundary():
+    """A request using the FULL max_seq budget: the draft chain's last
+    windows read speculative positions past the request frontier, which
+    must come from real provisioned storage on both engines (the paged
+    pools and the dense draft cache carry k positions of read-ahead) —
+    not the trash page / dropped writes — or cross-engine key-determinism
+    breaks exactly at the boundary."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    # len(prompt)=8 + n_new=8 == max_seq=16: zero slack
+    assert_sampled_parity(cfg, params, prompt, extras, n_new=8, max_seq=16,
+                          speculate=SpecConfig(k=3, mode="draft"), draft=True,
+                          msg="draft at max_seq boundary")
+
+
+def test_draft_mode_requires_draft_model():
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    with pytest.raises(ValueError, match="draft"):
+        ContinuousBatchingEngine(cfg, params, slots=1, max_seq=16,
+                                 page_size=4,
+                                 speculate=SpecConfig(mode="draft"))
+
+
+# ------------------------------------------------ distributional equivalence
+def _spec_vs_plain_histograms(arch, n_draws, *, batch=250, n_new=3,
+                              temperature=1.0, top_k=0, speculate=4,
+                              draft=False):
+    """Histograms of the LAST emitted token: plain sampled decode vs
+    sampled speculative decode on identical replicated prompts.  Rows of a
+    batch are independent seeded decodes under the per-row key discipline,
+    so one compiled call yields ``batch`` draws."""
+    cfg, params, prompt, extras = setup_family(arch, b=1, s=6)
+    prompt = jnp.tile(prompt, (batch, 1))
+    if extras is not None:
+        extras = jax.tree.map(lambda a: jnp.tile(
+            a, (batch,) + (1,) * (a.ndim - 1)), extras)
+    dkw = dict(draft_cfg=cfg, draft_params=params) if draft else {}
+    eng = ServingEngine(cfg, params, max_seq=16, **dkw)
+    spec = (SpecConfig(k=int(speculate), mode="draft") if draft
+            else SpecConfig(k=int(speculate)))
+
+    def gen(speculate_arg):
+        def f(key):
+            return eng.generate(prompt, n_new=n_new, extras=extras,
+                                greedy=False, temperature=temperature,
+                                top_k=top_k, key=key, speculate=speculate_arg)
+        return f
+
+    plain = histogram_decode(gen(None), cfg.vocab, n_draws, base_seed=100)
+    spec_h = histogram_decode(gen(spec), cfg.vocab, n_draws, base_seed=900)
+    return plain, spec_h
+
+
+def test_spec_distribution_matches_plain_quick():
+    """The fast (tier-1) distributional leg: one arch, 750 draws."""
+    plain, spec = _spec_vs_plain_histograms("qwen2-1.5b", 750)
+    assert_distributions_match(plain, spec, msg="qwen2-1.5b quick")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_spec_distribution_matches_plain_all_families(arch):
+    """ACCEPTANCE: for every model family, empirical token histograms of
+    sampled speculative decode vs plain sampled decode pass a chi-square
+    test at alpha=0.01 over >= 2000 seeded draws."""
+    plain, spec = _spec_vs_plain_histograms(arch, 2000)
+    assert_distributions_match(plain, spec, msg=arch)
+
+
+@pytest.mark.slow
+def test_spec_distribution_matches_plain_draft_mode():
+    """Draft-model sampled speculation preserves the distribution too (the
+    q used in the accept ratio is the draft's own warped softmax)."""
+    plain, spec = _spec_vs_plain_histograms("qwen2-1.5b", 2000, draft=True,
+                                            speculate=3)
+    assert_distributions_match(plain, spec, msg="draft")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("temperature,top_k", [(0.7, 0), (1.0, 8)])
+def test_spec_distribution_matches_plain_warped(temperature, top_k):
+    """Temperature/top-k warps shift both p and q consistently; the
+    preserved distribution is the WARPED one."""
+    plain, spec = _spec_vs_plain_histograms(
+        "qwen2-1.5b", 2000, temperature=temperature, top_k=top_k)
+    assert_distributions_match(plain, spec,
+                               msg=f"T={temperature} top_k={top_k}")
+
+
+def test_chi_square_helper_detects_mismatch():
+    """The harness itself must have power: clearly different distributions
+    reject at alpha=0.01, identical-sample splits do not."""
+    rng = np.random.default_rng(0)
+    a = rng.multinomial(2000, np.ones(64) / 64)
+    b = rng.multinomial(2000, np.ones(64) / 64)
+    _, _, p_same = chi_square_homogeneity(a, b)
+    assert p_same >= 0.01
+    skew = np.ones(64)
+    skew[:8] = 8.0
+    c = rng.multinomial(2000, skew / skew.sum())
+    _, _, p_diff = chi_square_homogeneity(a, c)
+    assert p_diff < 1e-6
+    assert total_variation(a, c) > total_variation(a, b)
+
+
+# ----------------------------------------------- 8-device key determinism ---
+SAMPLED_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import numpy as np
+import jax, jax.numpy as jnp
+sys.path.insert(0, os.path.join(r"{repo}", "tests"))
+from helpers import setup_family
+from repro.serving import (ContinuousBatchingEngine, ServingEngine,
+                           SpecConfig, make_decode_mesh)
+
+ARCHS = sys.argv[1].split(",")
+mesh = make_decode_mesh(8)
+key = jax.random.PRNGKey(23)
+kw = dict(greedy=False, temperature=0.8, top_k=8, key=key)
+out = []
+for arch in ARCHS:
+    cfg, params, prompt, extras = setup_family(arch)
+    row = {{"arch": arch}}
+    single = ServingEngine(cfg, params, max_seq=16, pim_bits=8)
+    want = np.asarray(single.generate(prompt, 5, extras=extras,
+                                      speculate=4, **kw))
+    shard = ServingEngine(cfg, params, max_seq=16, pim_bits=8, mesh=mesh)
+    got = np.asarray(shard.generate(prompt, 5, extras=extras,
+                                    speculate=4, **kw))
+    row["fixed_identical"] = bool(np.array_equal(want, got))
+    cont1 = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                     page_size=4, chunk=3, pim_bits=8,
+                                     speculate=4)
+    want_p = np.asarray(cont1.generate(prompt, 5, extras=extras, **kw))
+    cont8 = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                     page_size=4, chunk=3, pim_bits=8,
+                                     mesh=mesh, speculate=4)
+    got_p = np.asarray(cont8.generate(prompt, 5, extras=extras, **kw))
+    row["paged_identical"] = bool(np.array_equal(want_p, got_p))
+    out.append(row)
+print("RESULT " + json.dumps(out))
+""".format(repo=REPO)
+
+
+def test_sampled_spec_sharded_key_identity_all_families():
+    """ACCEPTANCE, 8-device leg: sampled speculative decode with one key is
+    token-identical between 1 and 8 virtual devices for BOTH engines,
+    every family (subprocess with forced host devices, like the PR 3/4
+    sharded suites) — the mesh all-gather is a pure concatenation, so
+    sharding never changes a sampled draw.  The dense-vs-paged axis is
+    asserted in-process at a single lowering
+    (test_sampled_spec_parity_all_families): the two cache layouts' logits
+    are bit-equal per arch there, which a cross-topology comparison cannot
+    promise (the moe gates amplify contraction-order ulps)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", SAMPLED_SNIPPET, ",".join(FAMILY_ARCHS)],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    for row in json.loads(line[len("RESULT "):]):
+        assert row["fixed_identical"], row
+        assert row["paged_identical"], row

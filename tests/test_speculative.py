@@ -191,15 +191,20 @@ def test_spec_draft_mode_requires_draft_model():
 
 
 # --------------------------------------------------------------- guardrails -
-def test_spec_rejects_sampling():
+def test_spec_sampling_now_supported():
+    """Sampling + speculation no longer raises: it routes to the
+    rejection-sampling verifier (tests/test_sampled_speculative.py owns the
+    behavioural matrix; this pins the API)."""
     cfg, params, prompt, _ = setup_family("qwen2-1.5b")
     eng = ServingEngine(cfg, params, max_seq=16)
-    with pytest.raises(ValueError, match="greedy"):
-        eng.generate(prompt, n_new=4, greedy=False, speculate=4)
-    with pytest.raises(ValueError, match="greedy"):
-        ContinuousBatchingEngine(cfg, params, slots=1, max_seq=16,
-                                 page_size=4, speculate=4).serve(
-            [Request(prompt=np.asarray(prompt[0]), max_new=2)], greedy=False)
+    out = eng.generate(prompt, n_new=4, greedy=False, temperature=0.8,
+                       speculate=4, key=jax.random.PRNGKey(0))
+    assert out.shape == (2, 4)
+    assert eng.spec_stats["greedy"] is False
+    outs = ContinuousBatchingEngine(
+        cfg, params, slots=1, max_seq=16, page_size=4, speculate=4).serve(
+        [Request(prompt=np.asarray(prompt[0]), max_new=2)], greedy=False)
+    assert len(outs) == 1 and len(outs[0]) <= 2
 
 
 def test_spec_config_validation():
@@ -208,7 +213,7 @@ def test_spec_config_validation():
     with pytest.raises(ValueError, match="mode"):
         SpecConfig(mode="oracle")
     cfg, params, _, _ = setup_family("qwen2-1.5b")
-    with pytest.raises(NotImplementedError, match="ngram"):
+    with pytest.raises(ValueError, match="draft"):
         ContinuousBatchingEngine(cfg, params, slots=1, max_seq=16,
                                  page_size=4,
                                  speculate=SpecConfig(mode="draft"))
