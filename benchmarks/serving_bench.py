@@ -26,12 +26,20 @@ speculation axis: the same trace through plain decode chunks vs n-gram
 verify windows, under greedy decode and ``--temperature T`` sampling
 (rejection-sampling verification — distribution-preserving), recording
 useful tokens/sec, tokens-per-weight-stream (chunk iterations paid), and
-per-slot window acceptance.  Run
-``python benchmarks/serving_bench.py`` (``--smoke`` for CI).
+per-slot window acceptance.  ``--fault-rate R1,R2,...`` adds the chaos
+axis: the same trace under seeded fault injection (chunk faults,
+stragglers, page squeezes at each rate) through the hardened
+``serve_detailed`` path, recording goodput, SLO attainment, p50/p99
+completion latency (virtual clock), shed/retried counts, and a
+``non_shed_token_identical`` flag against the fault-free run —
+``--deadline D`` additionally stamps every request with a D-virtual-
+second deadline so load shedding and goodput-vs-throughput divergence
+show up.  Run ``python benchmarks/serving_bench.py`` (``--smoke`` for CI).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 import time
@@ -284,6 +292,89 @@ def bench_speculative(arch: str, requests, slots: int, page_size: int,
     return {"k": speculate, "temperature": temperature, "grid": rows}
 
 
+def bench_chaos(arch: str, requests, slots: int, page_size: int, chunk: int,
+                max_seq: int, num_pages: int, fault_rates, deadline: float,
+                seed: int, scale: bool) -> dict:
+    """The robustness axis: the SAME trace through the hardened
+    ``serve_detailed`` path at each injected fault rate (chunk faults +
+    stragglers + page squeezes, all at rate R, one seeded injector per
+    run).  Time runs on a virtual clock with ``round_time=1.0`` so
+    deadlines, latency percentiles, and SLO attainment are DETERMINISTIC
+    scheduling quantities (in virtual seconds ~ scheduling rounds), while
+    goodput tokens/sec uses the wall clock.  Every row checks that all
+    non-shed requests emitted exactly the fault-free run's tokens
+    (``non_shed_token_identical`` — the PR-6 robustness bar, same
+    assertion tests/test_chaos.py makes)."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serving import (ChaosConfig, ContinuousBatchingEngine,
+                               FaultInjector, ResiliencePolicy, VirtualClock)
+
+    cfg = get_reduced(arch)
+    if scale:
+        cfg = scaled_config(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    if deadline > 0:
+        requests = [dataclasses.replace(r, deadline=deadline)
+                    for r in requests]
+    policy = ResiliencePolicy(round_time=1.0)
+    key = jax.random.PRNGKey(2)
+    base_outputs = None
+    rows = []
+    for rate in fault_rates:
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=slots, max_seq=max_seq, page_size=page_size,
+            num_pages=num_pages, chunk=chunk, clock=VirtualClock())
+        eng.serve_detailed(requests, policy=policy, key=key)  # warm/compile
+        chaos = (FaultInjector(ChaosConfig(
+            seed=seed, fault_rate=rate, straggle_rate=rate,
+            squeeze_rate=rate)) if rate > 0 else None)
+        eng2 = ContinuousBatchingEngine(
+            cfg, params, slots=slots, max_seq=max_seq, page_size=page_size,
+            num_pages=num_pages, chunk=chunk, clock=VirtualClock())
+        t0 = time.perf_counter()
+        report = eng2.serve_detailed(requests, policy=policy, chaos=chaos,
+                                     key=key)
+        dt = time.perf_counter() - t0
+        if base_outputs is None:  # first row must be the fault-free run
+            assert rate == 0
+            base_outputs = [r.tokens for r in report.records]
+        parity = all(
+            np.array_equal(base_outputs[i], rec.tokens)
+            for i, rec in enumerate(report.records) if rec.status == "done")
+        lat = sorted(report.latencies())
+        pct = lambda q: (float(lat[min(len(lat) - 1,
+                                       int(q * (len(lat) - 1)))])
+                         if lat else None)
+        statuses = [r.status for r in report.records]
+        rows.append({
+            "fault_rate": rate,
+            "goodput_tokens": report.goodput_tokens(),
+            "goodput_tokens_per_sec": report.goodput_tokens() / dt,
+            "slo_attainment": report.slo_attainment(),
+            "p50_latency_vsec": pct(0.50),
+            "p99_latency_vsec": pct(0.99),
+            "done": statuses.count("done"),
+            "shed": report.sheds,
+            "rejected": report.rejects,
+            "retried_chunks": report.retries,
+            "straggle_vsec": report.straggle_s,
+            "squeezed_pages": report.squeezed_pages,
+            "max_ladder_level": report.max_ladder_level,
+            "rounds": report.rounds,
+            "non_shed_token_identical": parity,
+        })
+        r = rows[-1]
+        print(f"fault_rate={rate}: {r['goodput_tokens_per_sec']:10.1f} "
+              f"goodput tok/s, SLO {r['slo_attainment']:.2f}, "
+              f"p50/p99 {r['p50_latency_vsec']}/{r['p99_latency_vsec']} "
+              f"vsec, {r['retried_chunks']} retries, {r['shed']} shed, "
+              f"parity={r['non_shed_token_identical']}")
+    return {"fault_rates": list(fault_rates), "deadline": deadline or None,
+            "round_time_vsec": 1.0, "chaos_seed": seed, "grid": rows}
+
+
 def bench_sharded(arch: str, requests, slots: int, page_size: int, chunk: int,
                   max_seq: int, num_pages: int, devices: int) -> dict:
     """Continuous engine, INT8 weights, single-device vs mesh-sharded on the
@@ -355,6 +446,15 @@ def main(argv=None) -> None:
                     "rejection-sampling verification at this temperature, "
                     "recording acceptance rate and tokens-per-weight-"
                     "stream under sampling (0 disables)")
+    ap.add_argument("--fault-rate", default="0,0.05",
+                    help="comma list of injected fault rates for the chaos "
+                    "axis (chunk faults + stragglers + page squeezes, "
+                    "seeded); 0 is always run first as the parity/goodput "
+                    "reference; empty string disables")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="stamp every request with this deadline in virtual "
+                    "seconds (~scheduling rounds) on the chaos axis, so "
+                    "shedding and SLO attainment bite (0 disables)")
     ap.add_argument("--out", default=str(_ROOT / "BENCH_serving.json"))
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: tiny trace, tiny shapes")
@@ -409,6 +509,15 @@ def main(argv=None) -> None:
             args.arch, spec_requests, kw["slots"], kw["page_size"],
             kw["chunk"], sp_max_seq, sp_num_pages, args.speculate,
             args.temperature, kw["scale"])
+    if args.fault_rate.strip():
+        rates = sorted({float(r) for r in args.fault_rate.split(",")} | {0.0})
+        ch_max_seq, ch_num_pages = pool_geometry(
+            kw["slots"], kw["page_size"], kw["max_prompt"],
+            kw["max_new_cap"], kw["pool_frac"])
+        result["chaos"] = bench_chaos(
+            args.arch, trace_for(kw, args.arch), kw["slots"],
+            kw["page_size"], kw["chunk"], ch_max_seq, ch_num_pages, rates,
+            args.deadline, kw["seed"], kw["scale"])
     result.update({
         "note": ("reduced config on CPU: tokens/sec measures scheduling "
                  "efficiency (useful tokens vs ride-along waste); "

@@ -3,13 +3,21 @@
 Design (mirrors Orbax semantics at framework scale):
   * one directory per step, written to ``<step>.tmp`` then atomically renamed
     — a crash mid-save never corrupts the latest checkpoint;
+  * durability discipline: every leaf file is fsync'd, the MANIFEST is
+    written LAST (it is the commit record — ``latest_step`` only counts
+    directories whose manifest exists), and the parent directory is
+    fsync'd around the publish rename, so a kill -9 / power cut at ANY
+    point leaves either the old checkpoint or the complete new one, never
+    a half-written directory that parses as valid;
   * leaves stored as .npy inside a flat key->file layout with a JSON manifest
     (pytree structure, dtypes, shapes) — restore works without the model;
   * per-host shard files (``shard<k>``) so each data-parallel host writes
     only its addressable slice at scale;
-  * ``keep_last`` garbage collection;
+  * ``keep_last`` garbage collection (also sweeps orphaned ``.tmp``/``.old``
+    staging directories left by a crash mid-save);
   * ``latest_step`` + manifest validation gives crash-safe resume, which the
-    runtime (repro.runtime) uses for restart-on-failure.
+    runtime (repro.runtime) uses for restart-on-failure and
+    crash-mid-save behavior is locked by tests/test_checkpoint_atomic.py.
 """
 from __future__ import annotations
 
@@ -22,6 +30,29 @@ import jax.numpy as jnp
 import numpy as np
 
 _MANIFEST = "manifest.json"
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory; directory fsync makes renames/creates
+    inside it durable (no-op where unsupported)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir-open
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _step_of(name: str) -> int | None:
+    """Parse ``step_<n>`` directory names; None for staging/foreign entries
+    (``step_00000001.tmp``, ``step_00000001.old``, stray files) so a crash's
+    leftovers never break resume."""
+    if not name.startswith("step_"):
+        return None
+    suffix = name[len("step_"):]
+    return int(suffix) if suffix.isdigit() else None
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -37,6 +68,9 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 
 
 def save_tree(tree, directory: str, shard: int = 0) -> None:
+    """Write every leaf (fsync'd), then the manifest LAST (fsync'd): the
+    manifest is the commit record, so a directory with a manifest always
+    has all its leaf files durably on disk."""
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
     manifest = {
@@ -46,9 +80,15 @@ def save_tree(tree, directory: str, shard: int = 0) -> None:
     }
     for k, v in flat.items():
         fn = os.path.join(directory, k.replace("/", "__") + f".shard{shard}.npy")
-        np.save(fn, v)
+        with open(fn, "wb") as f:
+            np.save(f, v)
+            f.flush()
+            os.fsync(f.fileno())
     with open(os.path.join(directory, _MANIFEST), "w") as f:
         json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(directory)
 
 
 def restore_tree(template, directory: str, shard: int = 0):
@@ -78,9 +118,10 @@ def latest_step(root: str) -> int | None:
         return None
     steps = []
     for name in os.listdir(root):
-        if name.startswith("step_") and not name.endswith(".tmp"):
+        step = _step_of(name)
+        if step is not None:
             if os.path.exists(os.path.join(root, name, _MANIFEST)):
-                steps.append(int(name.split("_")[1]))
+                steps.append(step)
     return max(steps) if steps else None
 
 
@@ -96,14 +137,27 @@ class CheckpointManager:
         return os.path.join(self.root, f"step_{step:08d}")
 
     def save(self, step: int, tree, shard: int = 0) -> str:
+        """Stage to ``<dir>.tmp`` (fully fsync'd, manifest last), then
+        publish with one atomic rename.  Re-saving an existing step moves
+        the old directory aside FIRST (``.old``, invisible to
+        ``latest_step``) instead of deleting it in place — there is no
+        instant at which the step exists half-written or not at all; the
+        aside copy is swept after the rename (and by ``_gc`` if the
+        process dies in between)."""
         final = self.dir_for(step)
         tmp = final + ".tmp"
+        old = final + ".old"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         save_tree(tree, tmp, shard=shard)
+        if os.path.exists(old):
+            shutil.rmtree(old)
         if os.path.exists(final):
-            shutil.rmtree(final)
+            os.rename(final, old)
         os.rename(tmp, final)  # atomic publish
+        _fsync_path(self.root)  # make the rename itself durable
+        if os.path.exists(old):
+            shutil.rmtree(old)
         self._gc()
         return final
 
@@ -114,10 +168,13 @@ class CheckpointManager:
         return step, restore_tree(template, self.dir_for(step), shard=shard)
 
     def _gc(self) -> None:
-        steps = sorted(
-            int(n.split("_")[1])
-            for n in os.listdir(self.root)
-            if n.startswith("step_") and not n.endswith(".tmp")
-        )
-        for s in steps[: -self.keep_last]:
+        steps = []
+        for n in os.listdir(self.root):
+            if n.startswith("step_") and (n.endswith(".tmp")
+                                          or n.endswith(".old")):
+                # Orphaned staging dir from a crash mid-save.
+                shutil.rmtree(os.path.join(self.root, n), ignore_errors=True)
+            elif _step_of(n) is not None:
+                steps.append(_step_of(n))
+        for s in sorted(steps)[: -self.keep_last]:
             shutil.rmtree(self.dir_for(s), ignore_errors=True)

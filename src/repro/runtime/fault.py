@@ -12,6 +12,14 @@ reconstructable from the CheckpointManager + the stateless data pipeline, so
 recovery = restore latest atomic checkpoint, re-plan the mesh over the
 surviving hosts, re-lower the step, continue.  That is exactly what
 ``TrainingSupervisor.run`` implements.
+
+The serving tier reuses the same liveness primitives: the continuous-
+batching engine heartbeats a ``HeartbeatMonitor`` every scheduling round,
+and ``serving.resilience.ServingSupervisor`` detects crashes through
+``sweep``, ``revive``-s the restarted engine, and replays in-flight
+requests from the engine's last snapshot — serving state is (request
+queue, emitted tokens, draw counters), all host-side and tiny, so its
+"checkpoint" is a JSON snapshot rather than a parameter tree.
 """
 from __future__ import annotations
 
@@ -55,6 +63,15 @@ class HeartbeatMonitor:
         ]
         self.dead.update(newly)
         return newly
+
+    def revive(self, host: int) -> None:
+        """Re-admit a restarted host: clears its dead mark and restarts its
+        heartbeat window at now.  Used by the serving supervisor
+        (``serving.resilience.ServingSupervisor``), which restarts a
+        crashed engine process and replays its in-flight requests — the
+        serving analogue of ``TrainingSupervisor``'s restore path."""
+        self.dead.discard(host)
+        self.last_seen[host] = self._clock()
 
     @property
     def healthy(self) -> list[int]:

@@ -18,7 +18,32 @@ plain sampled output distribution exactly, with every draw keyed per
 (request, counter) so the same ``key`` gives identical tokens on either
 engine and any mesh width.  Realised acceptance lands in
 ``ServingEngine.spec_stats`` / ``ContinuousBatchingEngine.spec_emitted``
-/ ``spec_live_steps``."""
+/ ``spec_live_steps``.
+
+Failure semantics (``serving.resilience`` + ``serving.chaos``): the
+continuous engine's ``serve_detailed`` accepts a ``ResiliencePolicy``
+(per-request deadlines/SLO classes, bounded admission queue with load
+shedding, retry-with-backoff for transient chunk faults, a graceful-
+degradation ladder, periodic crash-replay snapshots) and a seeded
+``FaultInjector`` that makes every failure mode reproducible.  Transient
+chunk faults are RETRIED (the failed attempt never ran); expired,
+overflowing, or unschedulable requests are SHED (lowest SLO class first,
+partial tokens kept); corrupt/invalid payloads are REJECTED at admission;
+under sustained pressure service DEGRADES one ladder rung at a time
+(shrink the speculative window → disable speculation → halve the chunk →
+shed low-SLO queue entries — token-preserving for greedy decode); and
+after a crash the ``ServingSupervisor`` (built on
+``runtime.fault.HeartbeatMonitor``) restores the last ``ServeSnapshot``
+and REPLAYS in-flight requests token-identically — the fold_in
+(request, counter) draw keys continue the exact random stream.  See the
+``serving.resilience`` module docstring for the full contract."""
+from .chaos import (
+    ChaosConfig,
+    ChunkFault,
+    EngineCrash,
+    FaultInjector,
+    VirtualClock,
+)
 from .engine import (
     ContinuousBatchingEngine,
     Request,
@@ -26,6 +51,15 @@ from .engine import (
     mask_after_stop,
     pim_bytes,
     quantize_tree,
+)
+from .resilience import (
+    LadderConfig,
+    ResiliencePolicy,
+    ServeReport,
+    ServeSnapshot,
+    ServingSupervisor,
+    load_snapshot,
+    save_snapshot,
 )
 from .sampling import (
     acceptance_probs,
@@ -44,4 +78,7 @@ __all__ = [
     "shard_quantized_tree", "tree_pspecs", "SpecConfig", "propose_ngram",
     "acceptance_probs", "residual_dist", "rejection_sample", "sample_rows",
     "warp_logits", "draw_keys",
+    "ChaosConfig", "FaultInjector", "ChunkFault", "EngineCrash",
+    "VirtualClock", "ResiliencePolicy", "LadderConfig", "ServeReport",
+    "ServeSnapshot", "ServingSupervisor", "save_snapshot", "load_snapshot",
 ]

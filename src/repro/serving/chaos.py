@@ -1,0 +1,212 @@
+"""Deterministic fault injection for the serving tier.
+
+A ``FaultInjector`` wraps the ``ContinuousBatchingEngine`` scheduling
+boundaries — chunk execution, request admission, page top-up — and injects
+seeded failures so every failure mode the resilience layer handles
+(``serving.resilience``) is REPRODUCIBLE: the same ``ChaosConfig.seed``
+produces the same fault trace on the same request schedule, which is what
+lets tests and benches assert exact token parity under chaos
+(tests/test_chaos.py) instead of eyeballing flaky runs.
+
+Failure modes, each drawn from its own counter-based PRNG stream (so e.g.
+the chunk-fault schedule does not shift when admission consumes more or
+fewer draws):
+
+* **chunk-step faults** (``fault_rate``) — a transient ``ChunkFault``
+  raised at the chunk boundary BEFORE the compiled step runs (the step's
+  donated cache buffers are untouched, so the engine's retry-with-backoff
+  simply re-invokes it).  Models a failed collective, a poisoned dispatch,
+  a device OOM that clears on retry.
+* **engine crashes** (``crash_rate``) — an ``EngineCrash`` raised at the
+  round boundary.  ``serve_detailed`` lets it propagate after stashing its
+  latest snapshot; ``resilience.ServingSupervisor`` restarts the engine
+  and replays in-flight requests token-identically.
+* **stragglers** (``straggle_rate`` / ``straggle_s``) — artificial chunk
+  latency, surfaced to the engine as virtual-clock skew (no real sleeps:
+  deadline/SLO behavior under stragglers stays deterministic and tests
+  stay fast).
+* **page-pool pressure** (``squeeze_rate`` / ``squeeze_frac``) — a
+  fraction of the free list is withheld for one scheduling round, forcing
+  the engine down its recompute-preemption path exactly as a real
+  burst of long prompts would.
+* **request corruption** (``corrupt_rate``) — a request's prompt payload
+  is corrupted at admission (an out-of-range token id); the engine's
+  admission validation must reject the request instead of serving garbage
+  or wedging the compiled program.
+
+Every injection is recorded in ``FaultInjector.log`` as an
+``InjectedFault`` — the seeded chaos trace benches store next to their
+goodput numbers (benchmarks/serving_bench.py ``--fault-rate``).
+
+The ``*_rounds`` / ``corrupt_rids`` script fields override the
+probabilistic draws with exact schedules ("crash at round 2, fault at
+round 5") for surgical tests.  Scripted schedules count each site's CALLS
+globally across supervisor restarts (a crashed-and-restored engine does
+not re-fire the same scripted crash at its restarted round 0), while the
+engine's local round number is recorded in the log for readability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+class ChunkFault(RuntimeError):
+    """Transient failure of one decode chunk: retryable — the compiled
+    step never ran, so the engine's host state and cache are intact."""
+
+
+class EngineCrash(RuntimeError):
+    """The engine process is gone.  ``serve_detailed`` re-raises it after
+    stashing ``engine.last_snapshot``; only the ``ServingSupervisor``
+    recovers from it (restore + replay)."""
+
+
+class VirtualClock:
+    """A monotonic clock advanced explicitly — deadlines, heartbeat
+    timeouts, and injected straggler latency become deterministic instead
+    of wall-clock flaky.  Callable like ``time.monotonic``."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def __call__(self) -> float:
+        return self._now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError("time only moves forward")
+        self._now += float(dt)
+        return self._now
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded fault-injection rates; all default to 0 (no chaos).
+
+    Rates are per-opportunity probabilities: ``fault_rate``/``crash_rate``/
+    ``straggle_rate``/``squeeze_rate`` per scheduling round, ``corrupt_rate``
+    per admitted request.  The ``*_rounds``/``corrupt_rids`` fields script
+    exact injection points on top of (or instead of) the random draws."""
+
+    seed: int = 0
+    fault_rate: float = 0.0
+    crash_rate: float = 0.0
+    straggle_rate: float = 0.0
+    straggle_s: float = 0.05
+    squeeze_rate: float = 0.0
+    squeeze_frac: float = 0.5
+    corrupt_rate: float = 0.0
+    max_faults: Optional[int] = None  # cap TOTAL injections (None = unbounded)
+    # Scripted schedules (exact, in addition to the random draws).  Each
+    # matches the site's GLOBAL call counter — calls accumulate across
+    # supervisor restarts, so "crash at call 2" fires exactly once even
+    # though the restored engine restarts its local round numbering:
+    fault_rounds: Sequence[int] = ()
+    crash_rounds: Sequence[int] = ()
+    straggle_rounds: Sequence[int] = ()
+    squeeze_rounds: Sequence[int] = ()
+    corrupt_rids: Sequence[int] = ()  # matches request ids, not calls
+
+
+@dataclasses.dataclass
+class InjectedFault:
+    site: str    # "chunk" | "crash" | "straggle" | "squeeze" | "corrupt"
+    round: int
+    detail: str = ""
+
+
+class FaultInjector:
+    """Draws each site's injections from an independent counter-based
+    stream (``SeedSequence([seed, site_id])``), so one site's consumption
+    never shifts another's schedule — the property that makes a chaos
+    trace comparable across engine configurations."""
+
+    _SITES = ("chunk", "crash", "straggle", "squeeze", "corrupt")
+
+    def __init__(self, cfg: ChaosConfig):
+        self.cfg = cfg
+        self._rng = {
+            site: np.random.default_rng(np.random.SeedSequence([cfg.seed, i]))
+            for i, site in enumerate(self._SITES)
+        }
+        self._calls = {site: 0 for site in self._SITES}
+        self.log: list[InjectedFault] = []
+
+    # ------------------------------------------------------------- helpers --
+    def _budget_left(self) -> bool:
+        return (self.cfg.max_faults is None
+                or len(self.log) < self.cfg.max_faults)
+
+    def _fire(self, site: str, rate: float, script: Sequence[int],
+              match=None) -> bool:
+        call = self._calls[site]
+        self._calls[site] += 1
+        hit = self._rng[site].random() < rate  # always draw: stable streams
+        scripted = (call if match is None else match) in script
+        return scripted or (hit and self._budget_left())
+
+    def reset_log(self) -> None:
+        """Forget recorded injections (NOT the PRNG streams): a supervisor
+        restart keeps consuming each stream where the crashed run left
+        off, so a crash_rate draw never re-fires deterministically at the
+        same post-restore round forever."""
+        self.log = []
+
+    @property
+    def counts(self) -> dict:
+        out: dict[str, int] = {}
+        for f in self.log:
+            out[f.site] = out.get(f.site, 0) + 1
+        return out
+
+    # ------------------------------------------------------ injection sites --
+    def chunk_fault(self, rnd: int) -> None:
+        """Raise ``ChunkFault`` for this chunk attempt, or return."""
+        if self._fire("chunk", self.cfg.fault_rate, self.cfg.fault_rounds):
+            self.log.append(InjectedFault("chunk", rnd))
+            raise ChunkFault(f"injected chunk fault at round {rnd}")
+
+    def crash(self, rnd: int) -> None:
+        """Raise ``EngineCrash`` at this round boundary, or return."""
+        if self._fire("crash", self.cfg.crash_rate, self.cfg.crash_rounds):
+            self.log.append(InjectedFault("crash", rnd))
+            raise EngineCrash(f"injected engine crash at round {rnd}")
+
+    def chunk_latency(self, rnd: int) -> float:
+        """Injected straggler latency (seconds of clock skew) for this
+        round; 0.0 when the straggler gremlin sleeps."""
+        if self._fire("straggle", self.cfg.straggle_rate,
+                      self.cfg.straggle_rounds):
+            self.log.append(InjectedFault(
+                "straggle", rnd, f"+{self.cfg.straggle_s}s"))
+            return float(self.cfg.straggle_s)
+        return 0.0
+
+    def squeeze_pages(self, n_free: int, rnd: int) -> int:
+        """How many free pages to withhold from the allocator this round
+        (returned to the pool at the end of the round)."""
+        if n_free and self._fire("squeeze", self.cfg.squeeze_rate,
+                                 self.cfg.squeeze_rounds):
+            n = max(1, int(n_free * self.cfg.squeeze_frac))
+            self.log.append(InjectedFault("squeeze", rnd, f"{n} pages"))
+            return n
+        return 0
+
+    def corrupt_request(self, prompt: np.ndarray, ridx: int,
+                        rnd: int) -> np.ndarray:
+        """Return the (possibly corrupted) prompt payload for admission:
+        corruption writes an out-of-range token id into one position —
+        the engine's admission validation must catch it."""
+        if self._fire("corrupt", self.cfg.corrupt_rate,
+                      self.cfg.corrupt_rids, match=ridx):
+            bad = np.array(prompt, np.int64, copy=True)
+            pos = int(self._rng["corrupt"].integers(0, len(bad)))
+            bad[pos] = np.iinfo(np.int32).max // 2  # far past any vocab
+            self.log.append(InjectedFault(
+                "corrupt", rnd, f"request {ridx} token {pos}"))
+            return bad
+        return prompt
+

@@ -75,6 +75,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from collections import deque
 from typing import Optional, Sequence
 
@@ -93,6 +94,16 @@ from repro.models import (
 )
 from repro.quant import quantize_symmetric
 from repro.serving import speculative as spec_mod
+from repro.serving.chaos import ChunkFault, EngineCrash
+from repro.serving.resilience import (
+    DegradationLadder,
+    InflightState,
+    LadderConfig,
+    RequestRecord,
+    ResiliencePolicy,
+    ServeReport,
+    ServeSnapshot,
+)
 from repro.serving.sampling import (
     TAG_TOKEN,
     draw_keys,
@@ -473,12 +484,21 @@ class Request:
 
     ``extras`` are this request's per-slot model inputs (vlm image embeds,
     encdec encoder output) WITHOUT a batch dim; every request in a trace
-    must share the same extras structure/shapes (or all pass None)."""
+    must share the same extras structure/shapes (or all pass None).
+
+    The SLO fields only matter under a ``ResiliencePolicy``
+    (``serve_detailed``): ``arrival`` is when the request becomes
+    admissible and ``deadline`` when its answer stops being useful, both
+    in engine-clock seconds from serve start; ``slo`` is the priority
+    class load-shedding protects (HIGHER sheds LAST)."""
 
     prompt: np.ndarray  # (len,) int32 token ids
     max_new: int  # emit at most this many tokens (>= 1)
     stop_tokens: tuple = ()  # retire early after emitting any of these
     extras: Optional[dict] = None
+    arrival: float = 0.0           # not admitted before this engine time
+    deadline: Optional[float] = None  # shed from queue / flag miss past this
+    slo: int = 1                   # shed priority class (lower sheds first)
 
 
 def _admit_body(params, cfg: ModelConfig, cache, prompt, length, slot, pages,
@@ -642,9 +662,16 @@ class ContinuousBatchingEngine:
                  chunk: int = 8, pim_bits: int = 0, pad_id: int = 0,
                  page_alloc_seed: Optional[int] = None, mesh=None,
                  speculate=None, draft_cfg: ModelConfig = None,
-                 draft_params=None, draft_pim_bits: int = 0):
+                 draft_params=None, draft_pim_bits: int = 0, clock=None):
         self.cfg = cfg
         self.mesh = mesh
+        # ``clock``: a 0-arg monotonic-seconds callable (time.monotonic by
+        # default; chaos.VirtualClock in tests) — drives request timing,
+        # deadlines, and retry backoff in ``serve_detailed``.
+        self._clock = clock if clock is not None else time.monotonic
+        self.last_snapshot = None  # latest ServeSnapshot (crash recovery)
+        self.last_round = -1
+        self.last_report = None
         self.spec = None if speculate is None else spec_mod.as_spec(speculate)
         if self.spec is not None and self.spec.mode == "draft":
             if draft_params is None or draft_cfg is None:
@@ -722,13 +749,42 @@ class ContinuousBatchingEngine:
         return (self.num_pages - 1) - len(self._free)
 
     def _alloc_pages(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page allocator overdraw: requested {n} pages with only "
+                f"{len(self._free)} free — admission/top-up must check the "
+                "free list before allocating")
         if self._rng is not None:
             self._rng.shuffle(self._free)
         pages, self._free = self._free[:n], self._free[n:]
+        self._allocated.update(pages)
         return pages
 
     def _free_pages(self, pages: list[int]) -> None:
+        for p in pages:
+            if p not in self._allocated:
+                raise ValueError(
+                    f"double-free: page {p} is not currently allocated — a "
+                    "page freed twice would be issued to two slots at once "
+                    "and silently cross-corrupt their KV state")
+            self._allocated.discard(p)
         self._free.extend(pages)
+
+    def assert_quiescent(self) -> None:
+        """Page-pool invariant at quiescence (no live slots): every page is
+        back on the free list exactly once and nothing is still marked
+        allocated.  ``serve_detailed`` checks this after every completed
+        trace, so a scheduling path that leaks or double-frees pages fails
+        loudly in ANY test that serves to completion."""
+        if self._allocated:
+            raise AssertionError(
+                f"page leak: {sorted(self._allocated)} still allocated "
+                "with no live requests")
+        expect = self.num_pages - 1  # page 0 (trash) never circulates
+        if len(self._free) != expect or len(set(self._free)) != expect:
+            raise AssertionError(
+                f"free-list corruption: {len(self._free)} entries "
+                f"({len(set(self._free))} unique), expected {expect}")
 
     # ------------------------------------------------------------ lifecycle --
     def _reset(self, requests, n_stops: int):
@@ -742,6 +798,8 @@ class ContinuousBatchingEngine:
                                          self.num_pages, self.page_size)
                         if self._draft_mode else ())
         self._free = list(range(1, self.num_pages))  # page 0 = trash
+        self._allocated: set[int] = set()
+        self._plen = np.zeros(b, np.int32)  # prompt length per slot
         self._bt = np.zeros((b, w), np.int32)
         self._pos = np.zeros(b, np.int32)
         self._n_out = np.zeros(b, np.int32)
@@ -766,22 +824,36 @@ class ContinuousBatchingEngine:
         self._hist = np.zeros((b, self.max_seq), np.int32)
 
     def _admit(self, requests, slot: int, ridx: int, greedy, temperature,
-               top_k) -> None:
+               top_k, resume: Optional[InflightState] = None) -> None:
+        """Admit request ``ridx`` into ``slot``.  With ``resume`` (crash
+        replay, resume_mode="prefill") the request is re-admitted mid-
+        stream: ONE prefill pass over ``prompt + emitted[:-1]`` rebuilds
+        its KV pages, the last emission becomes the slot's current token,
+        and the token draw counter restarts at ``len(emitted)`` — the
+        fold_in (rid, counter) keys then continue the exact random stream
+        the crashed run was consuming, so replay is token-identical."""
         req = requests[ridx]
         ps = self.page_size
         length = len(req.prompt)
-        spad = self._spad(length)
+        emitted = [int(t) for t in resume.emitted] if resume is not None else []
+        m = len(emitted)
+        seq = np.asarray(req.prompt, np.int32)
+        if m:
+            seq = np.concatenate(
+                [seq, np.asarray(emitted[:-1], np.int32)])
+        L = len(seq)  # length + m - 1 when resuming
+        spad = self._spad(L)
         pages = self._alloc_pages(spad // ps)
         self._bt[slot, :] = 0
         self._bt[slot, : len(pages)] = pages
         prompt = np.zeros((1, spad), np.int32)
-        prompt[0, :length] = np.asarray(req.prompt, np.int32)
+        prompt[0, :L] = seq
         admit = (_admit_prefill if self.mesh is None else functools.partial(
             _admit_prefill_sharded, mesh=self.mesh))
         ex1 = self._set_slot_extras(slot, req.extras)
         self._cache, tok0 = admit(
             self.params, self.cfg, self._cache, jnp.asarray(prompt),
-            jnp.int32(length), jnp.int32(slot), jnp.asarray(pages, jnp.int32),
+            jnp.int32(L), jnp.int32(slot), jnp.asarray(pages, jnp.int32),
             jnp.int32(ridx), self._key, jnp.float32(temperature), ex1,
             greedy=bool(greedy), top_k=int(top_k))
         if self._draft_mode:
@@ -790,24 +862,31 @@ class ContinuousBatchingEngine:
             # discarded — tok0 always comes from the target.
             self._dcache, _ = _admit_prefill(
                 self.draft_params, self.draft_cfg, self._dcache,
-                jnp.asarray(prompt), jnp.int32(length), jnp.int32(slot),
+                jnp.asarray(prompt), jnp.int32(L), jnp.int32(slot),
                 jnp.asarray(pages, jnp.int32), jnp.int32(ridx), self._key,
                 jnp.float32(temperature), ex1, greedy=True, top_k=0)
-        tok0 = int(tok0)
-        self._outputs[ridx].append(tok0)
+        if not m:
+            # Fresh admit: the prefill's sample IS emission 0 (draw key 0).
+            emitted = [int(tok0)]
+        # Resume admit: the prefill re-sampled draw 0 — discarded; draws
+        # are keyed by (rid, counter), not sequentially consumed, so the
+        # stream resumes at counter m untouched.
+        st = tuple(req.stop_tokens)
+        self._outputs[ridx] = list(emitted)
         self._hist[slot, :] = 0
         self._hist[slot, :length] = np.asarray(req.prompt, np.int32)
-        self._hist[slot, length] = tok0
-        self._pos[slot] = length
-        self._n_out[slot] = 1
+        self._hist[slot, length : length + len(emitted)] = emitted
+        self._plen[slot] = length
+        self._pos[slot] = length + len(emitted) - 1
+        self._n_out[slot] = len(emitted)
         self._max_new[slot] = req.max_new
         self._stops[slot, :] = -1
-        st = tuple(req.stop_tokens)
         self._stops[slot, : len(st)] = st
-        self._tok[slot, 0] = tok0
+        self._tok[slot, 0] = emitted[-1]
         self._rids[slot] = ridx
-        self._wctr[slot] = 0
-        self._done[slot] = req.max_new <= 1 or tok0 in st
+        self._wctr[slot] = int(resume.wctr) if resume is not None else 0
+        self._done[slot] = (len(emitted) >= req.max_new
+                            or emitted[-1] in st)
         self._slot_req[slot] = ridx
         self._slot_pages[slot] = list(pages)
         self._admit_seq[slot] = self._seq
@@ -842,9 +921,16 @@ class ContinuousBatchingEngine:
         self.preemptions += 1
         return True
 
-    def _top_up(self, requests, slot: int) -> None:
+    def _top_up(self, requests, slot: int,
+                eff_chunk: Optional[int] = None,
+                eff_k: Optional[int] = None) -> None:
         """Extend the slot's block table to cover the next chunk's writes,
-        preempting younger requests if the free list runs dry."""
+        preempting younger requests if the free list runs dry.
+
+        ``eff_chunk``/``eff_k`` are the ROUND's effective scheduling
+        parameters (the degradation ladder may shrink them below the
+        engine's configured ``chunk``/``spec.k``; ``eff_k=None`` means no
+        speculative window this round, so no verify-window overdraw)."""
         req = requests[self._slot_req[slot]]
         ps = self.page_size
         length = len(req.prompt)
@@ -864,10 +950,13 @@ class ContinuousBatchingEngine:
         # ``_store_seq``) to keep those reads out of the shared trash page:
         # a trash read would only degrade proposal quality, never
         # exactness, but it would break cross-engine key-determinism.
-        adv = self.chunk * (self.spec.k + 1 if self.spec else 1)
+        chunk = self.chunk if eff_chunk is None else eff_chunk
+        k = (self.spec.k if self.spec is not None else None) \
+            if eff_chunk is None else eff_k  # default call = engine config
+        adv = chunk * (k + 1 if k is not None else 1)
         cap = length + req.max_new - 2
-        if self._draft_mode:
-            cap = min(cap + self.spec.k, self._store_seq - 1)
+        if self._draft_mode and k is not None:
+            cap = min(cap + k, self._store_seq - 1)
         last = min(int(self._pos[slot]) + adv - 1, cap)
         need = max(last, spad - 1) // ps + 1
         have = len(self._slot_pages[slot])
@@ -885,8 +974,8 @@ class ContinuousBatchingEngine:
 
     # --------------------------------------------------------------- serve --
     def serve(self, requests: Sequence[Request], *, greedy: bool = True,
-              temperature: float = 1.0, top_k: int = 0, key=None
-              ) -> list[np.ndarray]:
+              temperature: float = 1.0, top_k: int = 0, key=None,
+              policy=None, chaos=None) -> list[np.ndarray]:
         """Run every request through the scheduler; returns one int32 array
         of emitted tokens per request (<= max_new; ends at the stop token
         if one fired).  Deterministic for a fixed key — and because draws
@@ -895,15 +984,120 @@ class ContinuousBatchingEngine:
         page allocation, and match the dense fixed-batch engine run in
         which it occupies the SAME batch row index (the fixed engine keys
         row i's draws by rid=i).  A solo batch-1 dense run matches request
-        0 only; greedy decode matches solo runs regardless."""
+        0 only; greedy decode matches solo runs regardless.
+
+        Thin wrapper over ``serve_detailed`` (which adds per-request
+        deadlines/SLOs, load shedding, fault retry, degradation, and crash
+        snapshots under a ``resilience.ResiliencePolicy``); without a
+        policy the scheduler behaves exactly as before — invalid requests
+        raise, faults propagate.  The full ``ServeReport`` of the last
+        call is kept on ``self.last_report``."""
+        report = self.serve_detailed(
+            requests, greedy=greedy, temperature=temperature, top_k=top_k,
+            key=key, policy=policy, chaos=chaos)
+        return [r.tokens for r in report.records]
+
+    def _shed(self, records, report, ridx: int, reason: str) -> None:
+        rec = records[ridx]
+        rec.status, rec.reason = "shed", reason
+        rec.tokens = np.asarray(self._outputs[ridx], np.int32)
+        report.sheds += 1
+
+    def _finish(self, requests, records, slot: int, t: float) -> None:
+        """Retire a finished slot, stamping completion time and deadline
+        attainment on its record."""
+        ridx = self._slot_req[slot]
+        rec = records[ridx]
+        rec.tokens = np.asarray(self._outputs[ridx], np.int32)
+        rec.status = "done"
+        rec.t_done = t
+        dl = requests[ridx].deadline
+        rec.met_deadline = None if dl is None else bool(t <= dl)
+        self._retire(slot)
+
+    def _take_snapshot(self, records, policy, rnd: int) -> ServeSnapshot:
+        """Host-side recovery point: finished outputs + in-flight replay
+        state (emitted tokens + verify-window counter, admit order
+        preserved) + the queue.  No device state — resume rebuilds KV
+        pages by re-prefilling (see ``_admit``)."""
+        live = sorted((s for s in range(self.slots)
+                       if self._slot_req[s] >= 0),
+                      key=lambda s: self._admit_seq[s])
+        inflight = {}
+        for s in live:
+            ridx = self._slot_req[s]
+            inflight[ridx] = InflightState(
+                emitted=[int(t) for t in self._outputs[ridx]],
+                wctr=int(self._wctr[s]),
+                t_admit=records[ridx].t_admit,
+                t_first=records[ridx].t_first)
+        snap = ServeSnapshot(
+            finished={i: [int(t) for t in self._outputs[i]]
+                      for i, r in enumerate(records) if r.status == "done"},
+            inflight=inflight,
+            queued=list(self._queue),
+            closed={i: (r.status, r.reason) for i, r in enumerate(records)
+                    if r.status in ("shed", "rejected")},
+            round=rnd)
+        self.last_snapshot = snap
+        if policy is not None and policy.snapshot_sink is not None:
+            policy.snapshot_sink(snap)
+        return snap
+
+    def serve_detailed(self, requests: Sequence[Request], *,
+                       greedy: bool = True, temperature: float = 1.0,
+                       top_k: int = 0, key=None,
+                       policy: Optional[ResiliencePolicy] = None,
+                       chaos=None, resume: Optional[ServeSnapshot] = None,
+                       heartbeat=None) -> ServeReport:
+        """``serve`` with the resilience layer: returns a ``ServeReport``
+        with per-request outcomes (done/shed/rejected + timing) and the
+        round-level counters.  See ``serving.resilience`` for the full
+        failure semantics (what is retried, shed, rejected, degraded, and
+        replayed).
+
+        ``policy`` enables request-level robustness: admission validation
+        (invalid/corrupt payloads become status "rejected" instead of
+        raising), deadline and queue-bound load shedding, per-chunk
+        retry-with-backoff for transient ``ChunkFault``s, the degradation
+        ladder, and periodic ``ServeSnapshot``s.  ``chaos`` (a
+        ``chaos.FaultInjector``) injects seeded failures at the scheduling
+        boundaries; passing chaos without a policy gets the default
+        ``ResiliencePolicy()``.  ``resume`` replays a snapshot: finished/
+        closed requests keep their outcome, in-flight requests re-admit
+        mid-stream (resume_mode="prefill"; exact for every family whose
+        prefill and decode paths agree bit-wise — MLA's absorbed decode
+        differs at ~1e-3, use "recompute" there) or requeue from scratch
+        ("recompute", universally exact, same semantics as recompute
+        preemption).  ``heartbeat`` is called once per scheduling round
+        (the supervisor's liveness signal).  Timing (``t_admit``/
+        ``t_done``/deadlines) is engine-clock seconds from THIS call's
+        start, plus accumulated skew: injected straggler latency, retry
+        backoff, and ``policy.round_time`` per round — fully deterministic
+        under a ``chaos.VirtualClock``.
+
+        On ``EngineCrash`` (injected, retry exhaustion, or a wrapped
+        compiled-step failure) the latest snapshot stays on
+        ``self.last_snapshot`` for the supervisor to replay."""
+        if chaos is not None and policy is None:
+            policy = ResiliencePolicy()
+        hardened = policy is not None
         ex_struct = jax.tree.structure(requests[0].extras) if requests else None
-        for r in requests:
+        records = [RequestRecord() for _ in requests]
+        rejected_upfront: set[int] = set()
+        for i, r in enumerate(requests):
+            bad = None
             if len(r.prompt) < 1 or r.max_new < 1:
-                raise ValueError("requests need len(prompt) >= 1, max_new >= 1")
-            if len(r.prompt) + r.max_new > self.max_seq:
-                raise ValueError(
-                    f"prompt ({len(r.prompt)}) + max_new ({r.max_new}) "
-                    f"exceeds max_seq ({self.max_seq})")
+                bad = "requests need len(prompt) >= 1, max_new >= 1"
+            elif len(r.prompt) + r.max_new > self.max_seq:
+                bad = (f"prompt ({len(r.prompt)}) + max_new ({r.max_new}) "
+                       f"exceeds max_seq ({self.max_seq})")
+            if bad is not None:
+                if not hardened:
+                    raise ValueError(bad)
+                records[i].status, records[i].reason = "rejected", bad
+                rejected_upfront.add(i)
+                continue
             if jax.tree.structure(r.extras) != ex_struct:
                 raise ValueError(
                     "all requests in a trace must share the same extras "
@@ -915,79 +1109,285 @@ class ContinuousBatchingEngine:
         self.spec_emitted = 0
         self.spec_live_steps = 0
         self.decode_chunk_iters = 0
+        report = ServeReport(records=records)
+        report.rejects += len(rejected_upfront)
+        clock = self._clock
+        t0 = clock()
+        skew = 0.0  # injected latency + retry backoff + per-round time
 
+        def now() -> float:
+            return (clock() - t0) + skew
+
+        ladder = DegradationLadder(
+            policy.ladder if hardened else LadderConfig(enabled=False),
+            has_spec=self.spec is not None)
+        # ---- resume: restore finished/closed outcomes, rebuild the queue
+        resume_inflight: dict[int, InflightState] = {}
+        if resume is not None:
+            for ridx, toks in resume.finished.items():
+                records[ridx].status = "done"
+                records[ridx].tokens = np.asarray(toks, np.int32)
+                self._outputs[ridx] = [int(t) for t in toks]
+            for ridx, (st, reason) in resume.closed.items():
+                if ridx in rejected_upfront:
+                    continue  # already re-rejected (and counted) upfront
+                records[ridx].status, records[ridx].reason = st, reason
+                if st == "shed":
+                    report.sheds += 1
+                else:
+                    report.rejects += 1
+            if hardened and policy.resume_mode == "prefill":
+                resume_inflight = dict(resume.inflight)
+                for ridx, st in resume.inflight.items():
+                    records[ridx].t_admit = st.t_admit
+                    records[ridx].t_first = st.t_first
+            # "recompute" (or no policy): in-flight requests requeue from
+            # scratch — same semantics as recompute preemption.
+            self._queue = deque(
+                list(resume.inflight)
+                + [r for r in resume.queued if r not in rejected_upfront])
+        else:
+            self._queue = deque(i for i in range(len(requests))
+                                if i not in rejected_upfront)
+        self.last_snapshot = None
+        snap_every = policy.snapshot_every if hardened else 0
+        if snap_every:
+            self._take_snapshot(records, policy, -1)
+
+        rnd = 0
         while self._queue or any(r >= 0 for r in self._slot_req):
-            # Admit queued requests into free slots while pages last.
+            self.last_round = rnd
+            if heartbeat is not None:
+                heartbeat()
+            if chaos is not None:
+                chaos.crash(rnd)  # raises EngineCrash; supervisor replays
+            retries_before = report.retries
+            preempt_before = self.preemptions
+            sheds_round = 0
+            # ---- queue management: deadline sheds, bounded queue, ladder
+            if hardened:
+                t = now()
+                if policy.shed_expired:
+                    for ridx in list(self._queue):
+                        dl = requests[ridx].deadline
+                        if dl is not None and t > dl:
+                            self._queue.remove(ridx)
+                            self._shed(records, report, ridx, "deadline")
+                            sheds_round += 1
+                if policy.max_queue is not None:
+                    while len(self._queue) > policy.max_queue:
+                        q = list(self._queue)
+                        # lowest SLO class first; ties shed the youngest
+                        i = min(range(len(q)),
+                                key=lambda j: (requests[q[j]].slo, -j))
+                        self._queue.remove(q[i])
+                        self._shed(records, report, q[i], "queue")
+                        sheds_round += 1
+                if ladder.shedding():
+                    for ridx in list(self._queue):
+                        if requests[ridx].slo < ladder.cfg.protect_slo:
+                            self._queue.remove(ridx)
+                            self._shed(records, report, ridx, "ladder")
+                            sheds_round += 1
+            # ---- admit queued requests into free slots while pages last
+            admitted_any = False
+            blocked = False
             for slot in range(self.slots):
-                if not self._queue or self._slot_req[slot] >= 0:
+                if blocked or self._slot_req[slot] >= 0:
                     continue
-                nxt = requests[self._queue[0]]
-                if len(self._free) < self._spad(len(nxt.prompt)) // self.page_size:
+                while self._queue:
+                    ridx = self._queue[0]
+                    req = requests[ridx]
+                    if hardened and req.arrival > now():
+                        blocked = True  # FIFO: an unarrived head waits
+                        break
+                    prompt = np.asarray(req.prompt)
+                    if chaos is not None:
+                        prompt = chaos.corrupt_request(prompt, ridx, rnd)
+                    if hardened and policy.validate:
+                        arr = np.asarray(prompt)
+                        if arr.size and (int(arr.min()) < 0
+                                         or int(arr.max()) >= self.cfg.vocab):
+                            self._queue.popleft()
+                            records[ridx].status = "rejected"
+                            records[ridx].reason = "corrupt"
+                            report.rejects += 1
+                            continue  # slot still free: try the next head
+                    rs = resume_inflight.pop(ridx, None)
+                    L = len(req.prompt) + (len(rs.emitted) - 1 if rs else 0)
+                    if len(self._free) < self._spad(L) // self.page_size:
+                        blocked = True
+                        break
+                    self._queue.popleft()
+                    self._admit(requests, slot, ridx, greedy, temperature,
+                                top_k, resume=rs)
+                    if records[ridx].t_admit is None:
+                        records[ridx].t_admit = now()
+                        records[ridx].t_first = records[ridx].t_admit
+                    admitted_any = True
                     break
-                self._admit(requests, slot, self._queue.popleft(), greedy,
-                            temperature, top_k)
             # Retire anything that finished at admit (max_new==1 / instant
             # stop) so its slot and pages free up immediately.
+            t_adm = now()
             for slot in range(self.slots):
                 if self._slot_req[slot] >= 0 and self._done[slot]:
-                    self._retire(slot)
+                    self._finish(requests, records, slot, t_adm)
             live = [s for s in range(self.slots) if self._slot_req[s] >= 0]
             if not live:
-                if self._queue and not any(
-                        r >= 0 for r in self._slot_req):
-                    # Nothing running and the head request could not admit.
-                    raise RuntimeError(
-                        "page pool too small to admit "
-                        f"request with prompt {len(requests[self._queue[0]].prompt)}"
-                        f" tokens; increase num_pages")
+                if self._queue and not admitted_any:
+                    head = self._queue[0]
+                    if hardened and requests[head].arrival > now():
+                        # Idle until the head arrives; advance deterministic
+                        # time so a virtual clock cannot spin forever.
+                        skew += policy.round_time or policy.backoff_s
+                    elif hardened:
+                        self._queue.popleft()
+                        self._shed(records, report, head, "oom")
+                    else:
+                        # Nothing running and the head could not admit.
+                        raise RuntimeError(
+                            "page pool too small to admit request with "
+                            f"prompt {len(requests[head].prompt)} tokens; "
+                            "increase num_pages")
+                rnd += 1
                 continue
-            for slot in live:
-                # An earlier top-up in this round may have preempted this
-                # slot — it is no longer live, don't grow a retired slot.
-                if self._slot_req[slot] >= 0:
-                    self._top_up(requests, slot)
+            # ---- effective scheduling parameters for this round (ladder)
+            eff_chunk, eff_k = ladder.params(
+                self.chunk, self.spec.k if self.spec is not None else None)
+            spec_on = self.spec is not None and eff_k is not None
+            # ---- page top-up, under injected pool pressure
+            withheld: list[int] = []
+            if chaos is not None:
+                n_w = chaos.squeeze_pages(len(self._free), rnd)
+                if n_w:
+                    withheld = self._free[-n_w:]
+                    del self._free[-n_w:]
+                    report.squeezed_pages += n_w
+
+            def _top_ups():
+                for s in live:
+                    # An earlier top-up in this round may have preempted
+                    # this slot — don't grow a retired slot.
+                    if self._slot_req[s] >= 0:
+                        self._top_up(requests, s, eff_chunk, eff_k)
+
+            try:
+                _top_ups()
+            except RuntimeError:
+                if withheld:
+                    # The squeeze alone exhausted the pool: give the pages
+                    # back and retry before escalating.
+                    self._free.extend(withheld)
+                    withheld = []
+                    try:
+                        _top_ups()
+                    except RuntimeError:
+                        if not hardened:
+                            raise
+                        withheld = None  # sentinel: shed below
+                elif hardened:
+                    withheld = None
+                else:
+                    raise
+            if withheld is None:
+                # Pool genuinely too small for the single remaining live
+                # request: shed it with its partial output.
+                s0 = next(s for s in range(self.slots)
+                          if self._slot_req[s] >= 0)
+                ridx = self._slot_req[s0]
+                self._shed(records, report, ridx, "oom")
+                self._retire(s0)
+                rnd += 1
+                continue
+            if withheld:
+                self._free.extend(withheld)
             self.peak_pages_in_use = max(self.peak_pages_in_use,
                                          self.pages_in_use())
+            # ---- transient chunk faults: retry with (virtual) backoff
+            if chaos is not None:
+                attempt = 0
+                while True:
+                    try:
+                        chaos.chunk_fault(rnd)
+                        break
+                    except ChunkFault as e:
+                        report.retries += 1
+                        if attempt >= policy.max_retries:
+                            raise EngineCrash(
+                                f"chunk retries exhausted: {e}") from e
+                        skew += policy.backoff_s * (2.0 ** attempt)
+                        attempt += 1
+                lag = chaos.chunk_latency(rnd)
+                skew += lag
+                report.straggle_s += lag
 
+            n0 = self._n_out.copy()
             self._cache["block_tables"] = jnp.asarray(self._bt)
-            self.decode_chunk_iters += self.chunk
-            if self.spec is not None:
-                if self._draft_mode:
-                    self._dcache["block_tables"] = jnp.asarray(self._bt)
-                if self.mesh is None:
-                    (self._cache, self._dcache, tok, pos, n_out, done, hist,
-                     wctr, emits, ms) = spec_mod._spec_chunk(
-                        self.params, self.cfg, self._cache,
-                        self.draft_params, self._dcache,
-                        jnp.asarray(self._tok), jnp.asarray(self._pos),
-                        jnp.asarray(self._n_out), jnp.asarray(self._done),
-                        jnp.asarray(self._hist), jnp.asarray(self._wctr),
-                        jnp.asarray(self._rids), jnp.asarray(self._max_new),
-                        jnp.asarray(self._stops), self._key,
-                        jnp.float32(temperature), self._extras_slots,
-                        draft_cfg=self.draft_cfg, chunk=self.chunk,
-                        page_size=self.page_size, k=self.spec.k,
-                        mode=self.spec.mode, ngram_n=self.spec.ngram_n,
-                        pad_id=self.pad_id, greedy=bool(greedy),
-                        top_k=int(top_k))
+            self.decode_chunk_iters += eff_chunk
+            try:
+                if spec_on:
+                    if self._draft_mode:
+                        self._dcache["block_tables"] = jnp.asarray(self._bt)
+                    if self.mesh is None:
+                        (self._cache, self._dcache, tok, pos, n_out, done,
+                         hist, wctr, emits, ms) = spec_mod._spec_chunk(
+                            self.params, self.cfg, self._cache,
+                            self.draft_params, self._dcache,
+                            jnp.asarray(self._tok), jnp.asarray(self._pos),
+                            jnp.asarray(self._n_out), jnp.asarray(self._done),
+                            jnp.asarray(self._hist), jnp.asarray(self._wctr),
+                            jnp.asarray(self._rids), jnp.asarray(self._max_new),
+                            jnp.asarray(self._stops), self._key,
+                            jnp.float32(temperature), self._extras_slots,
+                            draft_cfg=self.draft_cfg, chunk=eff_chunk,
+                            page_size=self.page_size, k=eff_k,
+                            mode=self.spec.mode, ngram_n=self.spec.ngram_n,
+                            pad_id=self.pad_id, greedy=bool(greedy),
+                            top_k=int(top_k))
+                    else:
+                        (self._cache, tok, pos, n_out, done, hist, wctr,
+                         emits, ms) = spec_mod._spec_chunk_sharded(
+                            self.params, self.cfg, self._cache,
+                            jnp.asarray(self._tok), jnp.asarray(self._pos),
+                            jnp.asarray(self._n_out), jnp.asarray(self._done),
+                            jnp.asarray(self._hist), jnp.asarray(self._wctr),
+                            jnp.asarray(self._rids), jnp.asarray(self._max_new),
+                            jnp.asarray(self._stops), self._key,
+                            jnp.float32(temperature), self._extras_slots,
+                            mesh=self.mesh, chunk=eff_chunk,
+                            page_size=self.page_size, k=eff_k,
+                            ngram_n=self.spec.ngram_n, pad_id=self.pad_id,
+                            greedy=bool(greedy), top_k=int(top_k))
                 else:
-                    (self._cache, tok, pos, n_out, done, hist, wctr, emits,
-                     ms) = spec_mod._spec_chunk_sharded(
+                    step = (_decode_chunk if self.mesh is None
+                            else functools.partial(_decode_chunk_sharded,
+                                                   mesh=self.mesh))
+                    (self._cache, tok, pos, n_out, done, emits,
+                     lives) = step(
                         self.params, self.cfg, self._cache,
-                        jnp.asarray(self._tok), jnp.asarray(self._pos),
-                        jnp.asarray(self._n_out), jnp.asarray(self._done),
-                        jnp.asarray(self._hist), jnp.asarray(self._wctr),
-                        jnp.asarray(self._rids), jnp.asarray(self._max_new),
+                        jnp.asarray(self._tok),
+                        jnp.asarray(self._pos), jnp.asarray(self._n_out),
+                        jnp.asarray(self._done), jnp.asarray(self._rids),
+                        jnp.asarray(self._max_new),
                         jnp.asarray(self._stops), self._key,
                         jnp.float32(temperature), self._extras_slots,
-                        mesh=self.mesh, chunk=self.chunk,
-                        page_size=self.page_size, k=self.spec.k,
-                        ngram_n=self.spec.ngram_n, pad_id=self.pad_id,
-                        greedy=bool(greedy), top_k=int(top_k))
+                        chunk=eff_chunk, page_size=self.page_size,
+                        greedy=bool(greedy), top_k=int(top_k),
+                        pad_id=self.pad_id)
+            except (ChunkFault, EngineCrash):
+                raise
+            except Exception as e:
+                if hardened:
+                    # The compiled step died mid-execution (its donated
+                    # cache is gone) — surface as a crash: the supervisor
+                    # rebuilds everything from the last snapshot.
+                    raise EngineCrash(f"chunk execution failed: {e}") from e
+                raise
+            if spec_on:
                 self._hist = np.array(hist)
                 self._wctr = np.array(wctr)
                 emits, ms = np.asarray(emits), np.asarray(ms)
-                for t in range(self.chunk):
+                for t in range(eff_chunk):
                     for slot in range(self.slots):
                         mm = int(ms[t, slot])
                         if mm and self._slot_req[slot] >= 0:
@@ -996,35 +1396,62 @@ class ContinuousBatchingEngine:
                             self.spec_emitted += mm
                             self.spec_live_steps += 1
             else:
-                step = (_decode_chunk if self.mesh is None
-                        else functools.partial(_decode_chunk_sharded,
-                                               mesh=self.mesh))
-                (self._cache, tok, pos, n_out, done, emits,
-                 lives) = step(
-                    self.params, self.cfg, self._cache, jnp.asarray(self._tok),
-                    jnp.asarray(self._pos), jnp.asarray(self._n_out),
-                    jnp.asarray(self._done), jnp.asarray(self._rids),
-                    jnp.asarray(self._max_new),
-                    jnp.asarray(self._stops), self._key,
-                    jnp.float32(temperature), self._extras_slots,
-                    chunk=self.chunk, page_size=self.page_size,
-                    greedy=bool(greedy), top_k=int(top_k),
-                    pad_id=self.pad_id)
                 emits, lives = np.asarray(emits), np.asarray(lives)
-                for t in range(self.chunk):
+                cnt = n0.copy()
+                for t in range(eff_chunk):
                     for slot in range(self.slots):
                         if lives[t, slot] and self._slot_req[slot] >= 0:
-                            self._outputs[self._slot_req[slot]].append(
-                                int(emits[t, slot]))
+                            tv = int(emits[t, slot])
+                            self._outputs[self._slot_req[slot]].append(tv)
+                            if self.spec is not None:
+                                # Ladder degraded a speculative engine to
+                                # plain decode this round: keep the n-gram
+                                # history warm so re-enabling speculation
+                                # proposes from the full stream.
+                                self._hist[slot,
+                                           self._plen[slot] + cnt[slot]] = tv
+                                cnt[slot] += 1
             self._tok = np.array(tok)  # np.array: writable host copies
             self._pos = np.array(pos)
             self._n_out = np.array(n_out)
             self._done = np.array(done)
+            if hardened:
+                skew += policy.round_time
+            t_end = now()
             for slot in range(self.slots):
                 if self._slot_req[slot] >= 0 and self._done[slot]:
-                    self._retire(slot)
+                    self._finish(requests, records, slot, t_end)
+            # ---- ladder signals + snapshot
+            if hardened:
+                bad = []
+                if report.retries > retries_before:
+                    bad.append("retries")
+                if self.preemptions > preempt_before:
+                    bad.append("preempt")
+                if sheds_round:
+                    bad.append("shed")
+                if (len(self._free) / max(1, self.num_pages - 1)
+                        < ladder.cfg.free_frac):
+                    bad.append("pressure")
+                if chaos is not None and lag > 0:
+                    bad.append("straggle")
+                ladder.update(rnd, bool(bad), "+".join(bad))
+                if snap_every and rnd % snap_every == 0:
+                    self._take_snapshot(records, policy, rnd)
+            rnd += 1
 
-        return [np.asarray(toks, np.int32) for toks in self._outputs]
+        report.rounds = rnd
+        report.ladder_trace = list(ladder.trace)
+        report.max_ladder_level = max(
+            (lvl for _, lvl, _ in ladder.trace), default=0)
+        for rec in records:  # defensive; every request should be closed
+            if rec.status == "pending":
+                rec.status = "done"
+        self.assert_quiescent()
+        if snap_every:
+            self._take_snapshot(records, policy, rnd)
+        self.last_report = report
+        return report
 
     def generate(self, prompt_tokens, n_new: int, *,
                  extras: Optional[dict] = None, greedy: bool = True,

@@ -35,6 +35,21 @@ is a point mass, so acceptance degenerates to ``u < p(d)`` and the
 residual to ``p`` with the proposal zeroed — still exact.  The
 chi-square harness in tests/test_sampled_speculative.py verifies the
 distribution-preservation claim per model family.
+
+Snapshot/replay contract (what crash recovery must save): because the
+streams above are keyed by nothing but (request id, draw counter), a
+request's full sampling state is TWO integers — its token-draw counter,
+which IS ``len(emitted)`` (draw ``n`` samples the n-th emission, draw 0
+is the admit token), and its window counter ``wctr``.  A
+``resilience.ServeSnapshot`` therefore stores only the emitted tokens
+and ``wctr`` per in-flight request; after a crash the engine re-admits
+from ``prompt + emitted``, resumes the counters at exactly those values,
+and every subsequent ``fold_in`` key — token or verify-window — continues
+the SAME random stream the dead engine was drawing from.  That is the
+whole mechanism behind token-identical crash replay
+(tests/test_chaos.py::test_crash_replay_sampled_speculative): no PRNG
+state is serialized, counters are reconstructed from data that must be
+kept anyway.
 """
 from __future__ import annotations
 

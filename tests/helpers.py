@@ -27,7 +27,13 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import encode, init_params
-from repro.serving import ContinuousBatchingEngine, Request, ServingEngine
+from repro.serving import (
+    ContinuousBatchingEngine,
+    FaultInjector,
+    Request,
+    ResiliencePolicy,
+    ServingEngine,
+)
 
 # One arch per family (moe is covered both with and without MLA).
 FAMILY_ARCHS = [
@@ -223,6 +229,37 @@ def assert_distributions_match(c1, c2, alpha: float = 0.01, msg: str = ""):
         f"{msg}: histograms differ (chi2={stat:.1f}, df={df}, p={p:.3g}, "
         f"tv={total_variation(c1, c2):.4f}, n1={int(np.sum(c1))}, "
         f"n2={int(np.sum(c2))})")
+
+
+def assert_chaos_parity(cfg, params, requests, chaos_cfg, *, policy=None,
+                        key=None, greedy=True, temperature=1.0, top_k=0,
+                        engine_kw=None, msg=""):
+    """The PR-6 robustness bar: serve a trace fault-free, then again under
+    a seeded ``ChaosConfig`` on a fresh identical engine — every request
+    the chaos run finished (not shed/rejected) must be TOKEN-IDENTICAL to
+    the undisturbed run.  Returns ``(baseline_outputs, chaos_report)`` so
+    callers can additionally assert on the injected-fault counters."""
+    if key is None:
+        key = jax.random.PRNGKey(11)
+    engine_kw = {**dict(slots=2, max_seq=24, page_size=4, chunk=3),
+                 **(engine_kw or {})}
+    base_eng = ContinuousBatchingEngine(cfg, params, **engine_kw)
+    base = base_eng.serve(requests, greedy=greedy, temperature=temperature,
+                          top_k=top_k, key=key)
+    eng = ContinuousBatchingEngine(cfg, params, **engine_kw)
+    inj = FaultInjector(chaos_cfg)
+    report = eng.serve_detailed(
+        requests, greedy=greedy, temperature=temperature, top_k=top_k,
+        key=key, policy=policy or ResiliencePolicy(), chaos=inj)
+    for i, (want, rec) in enumerate(zip(base, report.records)):
+        if rec.status != "done":
+            continue
+        assert_tokens_identical(
+            want, rec.tokens,
+            msg=f"{msg} request {i} diverged under chaos "
+                f"(injected: {inj.counts})")
+    eng.assert_quiescent()
+    return base, report
 
 
 def assert_serve_matches_solo(engine, cfg, params, requests, max_seq=None):

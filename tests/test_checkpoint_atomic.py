@@ -1,0 +1,155 @@
+"""Crash-mid-save atomicity of CheckpointManager.
+
+The recovery contract claimed in runtime/fault.py ("restore latest atomic
+checkpoint") only holds if a save that dies at ANY point — mid leaf write,
+before the manifest, between the rename-aside and the publish rename —
+leaves ``latest_step``/``restore_latest`` pointing at a COMPLETE
+checkpoint.  These tests inject crashes at each stage with monkeypatched
+I/O and assert resume still works; they also lock the manifest-last commit
+ordering and the ``.tmp``/``.old`` staging-dir hygiene that makes the
+parsing in ``latest_step``/``_gc`` crash-proof.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.checkpoint.ckpt import CheckpointManager, latest_step, save_tree
+
+
+def tree_for(step: int):
+    return {"w": np.full((4, 3), float(step), np.float32),
+            "b": {"x": np.arange(step + 1, dtype=np.int32)}}
+
+
+def assert_restores(mgr, want_step):
+    step, got = mgr.restore_latest(tree_for(0))
+    assert step == want_step
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  tree_for(want_step)["w"])
+
+
+class Boom(RuntimeError):
+    pass
+
+
+def crash_after(monkeypatch, obj, name, n_calls):
+    """Let ``obj.name`` run ``n_calls`` times, then raise Boom forever."""
+    real = getattr(obj, name)
+    state = {"n": 0}
+
+    def wrapper(*a, **kw):
+        state["n"] += 1
+        if state["n"] > n_calls:
+            raise Boom(f"injected crash in {name} after {n_calls}")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(obj, name, wrapper)
+    return state
+
+
+def test_crash_mid_leaf_write_keeps_previous(tmp_path, monkeypatch):
+    """Dying while writing leaf .npy files (manifest never written) must
+    leave the previous checkpoint as the restorable latest."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    mgr.save(1, tree_for(1))
+    crash_after(monkeypatch, ckpt_mod.np, "save", 1)  # 2nd leaf dies
+    with pytest.raises(Boom):
+        mgr.save(2, tree_for(2))
+    monkeypatch.undo()
+    assert latest_step(str(tmp_path)) == 1
+    assert_restores(mgr, 1)
+    # the half-written staging dir must not shadow anything or crash parsing
+    leftovers = [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+    assert leftovers == ["step_00000002.tmp"]
+    # ...and the next manager sweep cleans it up
+    mgr.save(3, tree_for(3))
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_crash_before_publish_rename(tmp_path, monkeypatch):
+    """Dying after staging completes but before the publish rename: the
+    .tmp dir is complete (manifest and all) yet must stay invisible."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    mgr.save(5, tree_for(5))
+    crash_after(monkeypatch, ckpt_mod.os, "rename", 0)
+    with pytest.raises(Boom):
+        mgr.save(6, tree_for(6))
+    monkeypatch.undo()
+    assert os.path.exists(os.path.join(tmp_path, "step_00000006.tmp",
+                                       "manifest.json"))
+    assert latest_step(str(tmp_path)) == 5
+    assert_restores(mgr, 5)
+
+
+def test_crash_between_aside_and_publish_on_resave(tmp_path, monkeypatch):
+    """Re-saving an existing step dies between the rename-aside of the old
+    dir and the publish of the new one: resume must survive — the .old
+    aside is ignored by latest_step (this window is why the old dir is
+    renamed aside rather than deleted: a complete .tmp still exists, and
+    nothing half-deleted can be picked up)."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    mgr.save(1, tree_for(1))
+    mgr.save(7, tree_for(7))
+    crash_after(monkeypatch, ckpt_mod.os, "rename", 1)  # aside ok, publish no
+    with pytest.raises(Boom):
+        mgr.save(7, tree_for(3))
+    monkeypatch.undo()
+    # step 7 is aside as .old; step 1 is the newest PUBLISHED checkpoint,
+    # and the int() parse must not trip on "step_00000007.old"/".tmp"
+    assert latest_step(str(tmp_path)) == 1
+    assert_restores(mgr, 1)
+    # recovery path: the next save sweeps the staging leftovers
+    mgr.save(8, tree_for(8))
+    assert not any(n.endswith((".tmp", ".old")) for n in os.listdir(tmp_path))
+    assert_restores(mgr, 8)
+
+
+def test_manifest_written_last(tmp_path, monkeypatch):
+    """The manifest is the commit record: every leaf file must hit disk
+    before it.  Crash the manifest write itself and assert the directory
+    is not counted as a checkpoint."""
+    calls = []
+    real_open = ckpt_mod.open if hasattr(ckpt_mod, "open") else open
+
+    def tracking_open(path, *a, **kw):
+        calls.append(os.path.basename(str(path)))
+        if os.path.basename(str(path)) == "manifest.json" and "w" in (
+                a[0] if a else kw.get("mode", "r")):
+            raise Boom("manifest write dies")
+        return real_open(path, *a, **kw)
+
+    monkeypatch.setattr(ckpt_mod, "open", tracking_open, raising=False)
+    with pytest.raises(Boom):
+        save_tree(tree_for(1), str(tmp_path / "step_00000001.tmp"))
+    monkeypatch.undo()
+    # all leaves were opened (written) before the manifest was attempted
+    assert calls[-1] == "manifest.json"
+    assert len([c for c in calls if c.endswith(".npy")]) == 2
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_gc_keeps_last_and_ignores_foreign_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    os.makedirs(tmp_path / "step_notanumber")  # foreign dir: must not crash
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree_for(s))
+    steps = sorted(n for n in os.listdir(tmp_path)
+                   if ckpt_mod._step_of(n) is not None)
+    assert steps == ["step_00000003", "step_00000004"]
+    assert latest_step(str(tmp_path)) == 4
+
+
+def test_roundtrip_still_exact(tmp_path):
+    """The durability changes must not disturb the save/restore contract."""
+    tree = {"a": np.random.default_rng(0).normal(size=(5, 4)).astype(
+        np.float32), "b": [np.arange(3), np.ones((2, 2), np.int32)]}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(11, tree)
+    step, got = mgr.restore_latest(jax.tree.map(np.zeros_like, tree))
+    assert step == 11
+    for w, g in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g))

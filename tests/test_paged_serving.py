@@ -377,3 +377,54 @@ def test_pim_bytes_skips_int4_markers():
         if name in ("codes", "scale")
     )
     assert pim_bytes(q) == want
+
+
+# ------------------------------------------------------ page-pool guards ----
+def test_page_pool_quiescent_after_serve():
+    """After every request retires, every page is back on the free list
+    exactly once — the no-leak invariant serve_detailed also self-checks."""
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                   page_size=4, chunk=3)
+    eng.serve([Request(prompt=np.asarray(prompt[0]), max_new=6),
+               Request(prompt=np.asarray(prompt[1]), max_new=8)])
+    assert eng.pages_in_use() == 0
+    eng.assert_quiescent()  # raises on leak or double-free
+
+
+def test_free_pages_rejects_double_free():
+    """A page freed twice would be issued to two slots at once and
+    silently cross-corrupt their KV state — _free_pages must refuse."""
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                   page_size=4, chunk=3)
+    eng._reset([], 0)
+    pages = eng._alloc_pages(2)
+    eng._free_pages(pages)
+    with pytest.raises(ValueError, match="double-free"):
+        eng._free_pages(pages)
+    with pytest.raises(ValueError, match="double-free"):
+        eng._free_pages([0])  # the trash page never circulates
+
+
+def test_alloc_pages_rejects_overdraw():
+    """Allocating past the free list must fail loudly, not hand out a
+    short page list that would silently alias the trash page."""
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                   page_size=4, num_pages=5, chunk=3)
+    eng._reset([], 0)
+    with pytest.raises(RuntimeError, match="overdraw"):
+        eng._alloc_pages(5)  # only 4 circulating pages (page 0 = trash)
+    eng.assert_quiescent()  # failed alloc must not have taken anything
+
+
+def test_quiescence_detects_injected_leak():
+    """assert_quiescent actually fires: simulate a leaked page."""
+    cfg, params, prompt, _ = _setup("qwen2-1.5b")
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=16,
+                                   page_size=4, chunk=3)
+    eng._reset([], 0)
+    eng._alloc_pages(1)  # taken, never freed
+    with pytest.raises(AssertionError, match="page leak"):
+        eng.assert_quiescent()
