@@ -222,19 +222,42 @@ def bench(arch: str, n_requests: int, slots: int, page_size: int, chunk: int,
     }
 
 
+def spec_config_for(mode: str, k: int):
+    """``--spec-mode`` name -> SpecConfig.  ``fixed`` is the static
+    window, ``adaptive`` the acceptance-EMA controller (collapses to
+    plain decode when speculation is losing), ``tree`` a fan-2 depth-k/2
+    multi-candidate draft with the same verify-node budget as ``fixed``
+    (1 + fan*depth == k + 1 nodes), ``typical`` the lossy entropy-band
+    acceptance on the fixed window."""
+    from repro.serving import SpecConfig
+
+    if mode == "fixed":
+        return SpecConfig(k=k)
+    if mode == "adaptive":
+        return SpecConfig(k=k, adaptive=True)
+    if mode == "tree":
+        return SpecConfig(k=max(k // 2, 1), tree_fan=2)
+    if mode == "typical":
+        return SpecConfig(k=k, accept="typical")
+    raise ValueError(f"unknown --spec-mode {mode!r}")
+
+
 def bench_speculative(arch: str, requests, slots: int, page_size: int,
                       chunk: int, max_seq: int, num_pages: int,
-                      speculate: int, temperature: float,
-                      scale: bool) -> dict:
+                      speculate: int, temperature: float, scale: bool,
+                      spec_modes=("fixed", "adaptive")) -> dict:
     """The speculation axis on the continuous engine: the SAME trace with
-    ``speculate=0`` (plain chunks) vs ``K`` (verify windows), under greedy
+    ``speculate=0`` (plain chunks) vs each requested ``--spec-mode``
+    (fixed / adaptive / tree / typical verify windows), under greedy
     decode AND ``--temperature T`` sampling (rejection-sampling
     verification), recording useful tokens/sec, ``emitted_per_stream``
     (batch-aggregate tokens per chunk iteration — each iteration streams
     the weight tree once, and it is computed for the plain row too, so the
-    K-row / 0-row ratio is the weight streams saved), and
+    spec-row / 0-row ratio is the weight streams saved), and
     ``acceptance_per_live_window`` (per-slot window acceptance — the
-    proposer-quality number that sampling moves)."""
+    proposer-quality number that sampling moves).  ``typical`` is LOSSY
+    and only meaningful under sampling, so its greedy leg is skipped
+    (typical-with-greedy IS greedy acceptance)."""
     import jax
     from repro.configs import get_reduced
     from repro.models import init_params
@@ -249,11 +272,14 @@ def bench_speculative(arch: str, requests, slots: int, page_size: int,
     if temperature > 0:
         modes.append((False, temperature))
     for greedy, temp in modes:
-        for k in (0, speculate):
+        for mode in (None, *spec_modes):
+            if mode == "typical" and greedy:
+                continue
+            spec = spec_config_for(mode, speculate) if mode else None
             eng = ContinuousBatchingEngine(
                 cfg, params, slots=slots, max_seq=max_seq,
                 page_size=page_size, num_pages=num_pages, chunk=chunk,
-                speculate=k if k else None)
+                speculate=spec)
             serve = lambda: sum(len(o) for o in eng.serve(
                 requests, greedy=greedy, temperature=temp or 1.0,
                 key=jax.random.PRNGKey(2)))
@@ -266,7 +292,8 @@ def bench_speculative(arch: str, requests, slots: int, page_size: int,
             # request
             chunk_emitted = useful - len(requests)
             rows.append({
-                "speculate_k": k,
+                "spec_mode": mode or "plain",
+                "speculate_k": spec.k if spec else 0,
                 "greedy": greedy,
                 "temperature": None if greedy else temp,
                 "useful_tokens": useful,
@@ -275,21 +302,98 @@ def bench_speculative(arch: str, requests, slots: int, page_size: int,
                 / max(eng.decode_chunk_iters, 1),
                 "acceptance_per_live_window": (eng.spec_emitted
                                                / max(eng.spec_live_steps, 1)
-                                               if k else 1.0),
+                                               if mode else 1.0),
             })
-            if k:
-                base = [r for r in rows if r["speculate_k"] == 0
+            if mode:
+                base = [r for r in rows if r["spec_mode"] == "plain"
                         and r["greedy"] == greedy][0]
                 rows[-1]["speedup_vs_plain"] = (rows[-1]["tokens_per_sec"]
                                                 / base["tokens_per_sec"])
             r = rows[-1]
             tag = "greedy" if greedy else f"T={temp}"
-            print(f"speculate={k} {tag}: "
+            print(f"spec={r['spec_mode']:8s} {tag}: "
                   f"{r['tokens_per_sec']:10.1f} useful tok/s, "
                   f"{r['emitted_per_stream']:.2f} tok/stream, "
                   f"{r['acceptance_per_live_window']:.2f} tok/live-window"
-                  + (f", {r.get('speedup_vs_plain', 1.0):.2f}x" if k else ""))
-    return {"k": speculate, "temperature": temperature, "grid": rows}
+                  + (f", {r.get('speedup_vs_plain', 1.0):.2f}x"
+                     if mode else ""))
+    return {"k": speculate, "temperature": temperature,
+            "modes": list(spec_modes), "grid": rows}
+
+
+def make_repetitive_trace(n_requests: int, mean_new: int, vocab: int,
+                          seed: int, period: int = 4, plen: int = 24):
+    """The proposer-friendly counterpart of ``make_trace``: every prompt
+    is a short random pattern tiled out to ``plen``, so the trailing
+    n-gram always has an earlier occurrence and the continuation is
+    genuinely predictable — structured/templated generation (code, JSON,
+    retrieval-echo) rather than open-ended prose."""
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n_requests):
+        pat = rng.integers(0, vocab, size=period).astype(np.int32)
+        prompt = np.tile(pat, plen // period + 1)[:plen]
+        max_new = int(np.clip(rng.poisson(mean_new), 2, 4 * mean_new))
+        reqs.append(Request(prompt=prompt, max_new=max_new))
+    return reqs
+
+
+def bench_repetitive(arch: str, slots: int, page_size: int, chunk: int,
+                     speculate: int, seed: int, scale: bool,
+                     n_requests: int = 16, mean_new: int = 48) -> dict:
+    """The workload speculation exists for: repetitive/templated text
+    where the n-gram proposer is near-perfect.  Plain decode vs the
+    adaptive controller on the SAME repetitive trace, greedy — the
+    controller must discover the high acceptance rate and hold the window
+    wide (the acceptance bar: >= 1.5x plain wall-clock).  The window cap
+    is ``2 * speculate``: with a measured per-extra-token window cost of
+    ~ctrl_cost decode steps, the achievable speedup is roughly
+    ``(a + 1) / (1 + ctrl_cost * k)``, so near-perfect acceptance wants
+    DEEP windows — exactly the asymmetry the controller exploits (deep
+    when winning, k=0 when losing) that a fixed k cannot."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serving import ContinuousBatchingEngine
+
+    cfg = get_reduced(arch)
+    if scale:
+        cfg = scaled_config(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    requests = make_repetitive_trace(n_requests, mean_new, cfg.vocab, seed)
+    max_seq, num_pages = pool_geometry(slots, page_size, 24,
+                                       4 * mean_new, 1.0)
+    rows = []
+    for mode in (None, "adaptive"):
+        spec = spec_config_for(mode, 2 * speculate) if mode else None
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=slots, max_seq=max_seq, page_size=page_size,
+            num_pages=num_pages, chunk=chunk, speculate=spec)
+        serve = lambda: sum(len(o) for o in eng.serve(requests))
+        serve()  # warm/compile
+        t0 = time.perf_counter()
+        useful = serve()
+        dt = time.perf_counter() - t0
+        rows.append({
+            "spec_mode": mode or "plain",
+            "useful_tokens": useful,
+            "tokens_per_sec": useful / dt,
+            "acceptance_per_live_window": (eng.spec_emitted
+                                           / max(eng.spec_live_steps, 1)
+                                           if mode else 1.0),
+        })
+        if mode:
+            rows[-1]["speedup_vs_plain"] = (rows[-1]["tokens_per_sec"]
+                                            / rows[0]["tokens_per_sec"])
+        r = rows[-1]
+        print(f"repetitive spec={r['spec_mode']:8s}: "
+              f"{r['tokens_per_sec']:10.1f} useful tok/s, "
+              f"{r['acceptance_per_live_window']:.2f} tok/live-window"
+              + (f", {r.get('speedup_vs_plain', 1.0):.2f}x" if mode else ""))
+    return {"k": speculate, "requests": n_requests, "mean_new": mean_new,
+            "grid": rows}
 
 
 def bench_chaos(arch: str, requests, slots: int, page_size: int, chunk: int,
@@ -446,6 +550,11 @@ def main(argv=None) -> None:
                     "rejection-sampling verification at this temperature, "
                     "recording acceptance rate and tokens-per-weight-"
                     "stream under sampling (0 disables)")
+    ap.add_argument("--spec-mode", default="fixed,adaptive,tree,typical",
+                    help="comma list from {fixed,adaptive,tree,typical}: "
+                    "which speculation shapes the --speculate axis runs "
+                    "against the plain baseline (typical is lossy and only "
+                    "runs on the sampled leg)")
     ap.add_argument("--fault-rate", default="0,0.05",
                     help="comma list of injected fault rates for the chaos "
                     "axis (chunk faults + stragglers + page squeezes, "
@@ -505,10 +614,16 @@ def main(argv=None) -> None:
             kw["slots"], kw["page_size"], kw["max_prompt"],
             kw["max_new_cap"], kw["pool_frac"])
         spec_requests = trace_for(kw, args.arch)
+        spec_modes = tuple(m for m in args.spec_mode.split(",") if m)
         result["speculative"] = bench_speculative(
             args.arch, spec_requests, kw["slots"], kw["page_size"],
             kw["chunk"], sp_max_seq, sp_num_pages, args.speculate,
-            args.temperature, kw["scale"])
+            args.temperature, kw["scale"], spec_modes=spec_modes)
+        result["speculative_repetitive"] = bench_repetitive(
+            args.arch, kw["slots"], kw["page_size"], kw["chunk"],
+            args.speculate, kw["seed"], kw["scale"],
+            n_requests=4 if args.smoke else 16,
+            mean_new=12 if args.smoke else 48)
     if args.fault_rate.strip():
         rates = sorted({float(r) for r in args.fault_rate.split(",")} | {0.0})
         ch_max_seq, ch_num_pages = pool_geometry(

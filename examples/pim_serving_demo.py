@@ -94,6 +94,46 @@ def main():
           f"{st['emitted_per_step']:.2f} tokens per weight stream, "
           f"acceptance {st['acceptance_per_live_row']:.2f} tok/window")
 
+    # Making speculation PAY under load — three shapes beyond the fixed
+    # window.  ADAPTIVE: a per-request acceptance EMA drives a bucketed
+    # cost model that re-picks the window width every round, all the way
+    # down to k=0 (plain decode + a free probe) when the proposer is
+    # losing — greedy tokens stay identical at ANY window schedule.
+    t0 = time.time()
+    out_ad = engine.generate(prompts, n_new=24,
+                             speculate=SpecConfig(k=4, adaptive=True))
+    dt_ad = time.time() - t0
+    st = engine.spec_stats
+    assert np.array_equal(np.asarray(out), np.asarray(out_ad)), \
+        "adaptive speculation must be token-identical to greedy"
+    print(f"adaptive (k<=4): {4 * 24 / dt_ad:.1f} tok/s, "
+          f"{st['emitted_per_step']:.2f} tokens per weight stream — "
+          f"controller tunes k from measured acceptance, same tokens")
+
+    # TREE: fan-2 multi-candidate drafts (the top-2 n-gram history
+    # matches), verified in ONE pass via shared-prefix tree attention;
+    # the winning chain's cache columns are relocated into canonical
+    # positions before commit.  Static schedule, so sampled tree decode
+    # is even key-identical across engines.
+    out_tr = engine.generate(prompts, n_new=24,
+                             speculate=SpecConfig(k=2, tree_fan=2))
+    assert np.array_equal(np.asarray(out), np.asarray(out_tr)), \
+        "tree speculation must be token-identical to greedy"
+    print("tree (fan=2, depth=2): token-identical to plain greedy, "
+          f"{engine.spec_stats['emitted_per_step']:.2f} tokens per stream")
+
+    # TYPICAL: the explicitly LOSSY entropy-band acceptance — a draft is
+    # accepted deterministically once the target puts enough mass on it
+    # (min(eps, delta*exp(-H)) threshold), trading exactness for
+    # acceptance on hard text.  Opt-in via accept="typical".
+    out_ty = engine.generate(prompts, n_new=24, greedy=False,
+                             temperature=0.8, top_k=40, key=key,
+                             speculate=SpecConfig(k=4, accept="typical"))
+    print(f"typical acceptance (lossy, T=0.8): "
+          f"{engine.spec_stats['emitted_per_step']:.2f} tokens per stream — "
+          f"biased toward the proposer, deterministic per key")
+    del out_ty
+
     # Chaos: the same trace with the engine KILLED twice mid-flight (seeded
     # injection) plus transient chunk faults.  The supervisor detects each
     # death via the heartbeat monitor, restores the last snapshot (prompt +

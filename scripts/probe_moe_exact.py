@@ -1,0 +1,122 @@
+"""Probe: reproduce the two moe dense-vs-paged divergence mechanisms and
+check the fixes in ``models.moe.moe_apply``.
+
+The fixed-batch engine prefills B rows in one batch while the continuous
+engine admits batch-1 prompts, so historically the same row went through
+different dispatch groupings between engines.  Two distinct bugs followed:
+
+1. REDUCTION ORDER (ulp-scale, amplified to ~1e-3 across layers): the old
+   combine ``einsum("ebcd,bsec->bsd")`` reduced jointly over (E, C); the k
+   nonzero products sat at capacity-dependent flat offsets, so different C
+   gave different float association.  Fixed by gathering each (token, slot)
+   expert output exactly (<= 1 nonzero per slot) and reducing over the
+   fixed top-k axis.
+
+2. CROSS-ROW CAPACITY DROPS (semantic, ~1e-2): the old grouping flattened
+   all B*S tokens and split by GROUP_TOKENS, merging rows into shared
+   expert buffers — row 1's tokens faced buffers pre-filled by row 0, so
+   its drops changed with batch composition.  Fixed by grouping per row
+   (splitting only rows longer than the budget), making routing a per-row
+   function.
+
+Run: PYTHONPATH=src python scripts/probe_moe_exact.py
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import moe as M
+from repro.models.common import dq, linear
+
+
+def moe_apply_old(p, x, cfg, exact_combine: bool):
+    """The PRE-fix moe_apply: cross-row merged grouping, and optionally the
+    old joint (E, C) combine — kept here as the historical repro."""
+    b0, s0, d = x.shape
+    t = b0 * s0
+    gt = cfg.group_tokens or M.GROUP_TOKENS
+    n_groups = max(1, -(-t // gt))
+    if t % n_groups == 0:
+        x = x.reshape(n_groups, t // n_groups, d)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = M._capacity(s, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    sel = jax.nn.one_hot(top_i, e, dtype=jnp.float32)
+    sel_flat = sel.reshape(b, s * k, e)
+    pos_in_e = jnp.cumsum(sel_flat, axis=1) - 1.0
+    pos = jnp.einsum("bte,bte->bt", pos_in_e, sel_flat).reshape(b, s, k)
+    keep = (pos < cap).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("bske,bskc->bsec", sel, pos_oh)
+
+    xe = jnp.einsum("bsd,bsec->ebcd", x.astype(jnp.float32), disp)
+    xe = xe.astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, dq(p["gate"], xe.dtype)))
+    h = h * jnp.einsum("ebcd,edf->ebcf", xe, dq(p["up"], xe.dtype))
+    ye = jnp.einsum("ebcf,efd->ebcd", h, dq(p["down"], h.dtype))
+
+    if exact_combine:
+        ye_g = jnp.einsum("ebcd,bske,bskc->bskd", ye.astype(jnp.float32),
+                          sel, pos_oh)
+        y = jnp.einsum("bsk,bskd->bsd", top_p, ye_g).astype(x.dtype)
+    else:
+        comb = jnp.einsum("bske,bskc,bsk->bsec", sel, pos_oh, top_p)
+        y = jnp.einsum("ebcd,bsec->bsd", ye.astype(jnp.float32),
+                       comb).astype(x.dtype)
+
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + linear(jax.nn.silu(linear(x, sh["gate"])) * linear(x, sh["up"]),
+                       sh["down"])
+    return y.reshape(b0, s0, d)
+
+
+def rowwise(fn, x):
+    return jnp.concatenate([fn(x[i : i + 1]) for i in range(x.shape[0])], 0)
+
+
+def main():
+    d = 32
+    key = jax.random.PRNGKey(0)
+    kp, kx = jax.random.split(key)
+    x = jax.random.normal(kx, (4, 16, d), jnp.float32)
+
+    # Mechanism 1: merged grouping + joint combine, drop-free capacity —
+    # pure reduction-order divergence.
+    cfg = MoEConfig(n_experts=8, n_shared=1, top_k=3, d_ff_expert=64,
+                    capacity_factor=8.0, group_tokens=4096)
+    p = M.moe_init(kp, d, cfg, jnp.float32)
+    f_old = lambda xx: moe_apply_old(p, xx, cfg, exact_combine=False)
+    f_ex = lambda xx: moe_apply_old(p, xx, cfg, exact_combine=True)
+    d1 = float(jnp.max(jnp.abs(f_old(x) - rowwise(f_old, x))))
+    e1 = bool(jnp.all(f_ex(x) == rowwise(f_ex, x)))
+    print(f"merged grouping, joint combine:  max|diff|={d1:.3e} (ulp drift)")
+    print(f"merged grouping, exact combine:  bitexact={e1} (drop-free cap)")
+
+    # Mechanism 2: merged grouping at STOCK capacity — cross-row drops.
+    cfg2 = MoEConfig(n_experts=8, n_shared=1, top_k=3, d_ff_expert=64,
+                     capacity_factor=1.25, group_tokens=4096)
+    p2 = M.moe_init(kp, d, cfg2, jnp.float32)
+    f2 = lambda xx: moe_apply_old(p2, xx, cfg2, exact_combine=True)
+    d2 = float(jnp.max(jnp.abs(f2(x) - rowwise(f2, x))))
+    print(f"merged grouping, stock capacity: max|diff|={d2:.3e} "
+          f"(cross-row drops)")
+
+    # The shipped moe_apply: per-row grouping + exact combine — bitexact
+    # batched-vs-rowwise even at stock (dropping) capacity.
+    f_new = lambda xx: M.moe_apply(p2, xx, cfg2)[0]
+    e3 = bool(jnp.all(f_new(x) == rowwise(f_new, x)))
+    print(f"shipped moe_apply, stock capacity: bitexact={e3}")
+    return 0 if (d1 > 0 and e1 and e3) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

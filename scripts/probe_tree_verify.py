@@ -1,0 +1,146 @@
+"""Probe: tree verify_step exactness contracts, all seven family archs.
+
+1. chain-0-vs-linear: chain 0 occupies the same store columns as a linear
+   window, so its logits must be BIT-identical to linear verify.  The
+   linear window is padded with dummy tokens to the tree's T=1+fan*depth
+   (causality keeps the first 1+depth logits independent of the tail) so
+   both runs share one window shape — plain linear verify already drifts
+   ulps across DIFFERENT window sizes (MLA dot shapes, moe capacity).
+2. tree dense-vs-paged: the same tree window on the dense cache and the
+   paged pool must produce bit-identical node logits (the PAGED_BITEXACT
+   contract extended to tree windows).
+3. relocation: after accepting a non-zero chain, tree_relocate + commit on
+   both layouts must give bit-identical follow-up window logits.
+
+Chains at non-zero fan offsets score the same math as a linear run but sum
+the softmax at different store indices, so vs-linear they drift by ulps —
+that leg is intentionally not asserted bitwise.
+
+Run: PYTHONPATH=src python scripts/probe_tree_verify.py
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "tests")
+from helpers import FAMILY_ARCHS, setup_family  # noqa: E402
+
+from repro.models import (  # noqa: E402
+    commit_verify,
+    init_cache,
+    init_paged_cache,
+    prefill,
+    tree_relocate,
+    verify_step,
+)
+
+
+def dense_setup(cfg, params, prompt, extras, max_seq):
+    b, s = prompt.shape
+    cache = init_cache(cfg, b, max_seq)
+    logits, cache = prefill(params, cfg, prompt, cache, extras)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    return cache, tok, pos
+
+
+def paged_setup(cfg, params, prompt, extras, max_seq, ps):
+    b, s = prompt.shape
+    if max_seq % ps:
+        max_seq += ps - max_seq % ps
+    width = max_seq // ps
+    npages = 1 + b * width
+    cache = init_paged_cache(cfg, b, max_seq, npages, ps)
+    bt = np.zeros((b, width), np.int32)
+    spad = s + (-s) % ps
+    toks = []
+    for i in range(b):
+        pages = 1 + i * width + np.arange(width)
+        bt[i] = pages
+        row = np.zeros((1, spad), np.int32)
+        row[0, :s] = np.asarray(prompt[i])
+        ex1 = None if extras is None else jax.tree.map(
+            lambda a: jnp.asarray(a)[i : i + 1], extras)
+        lg, cache = prefill(params, cfg, jnp.asarray(row), cache, ex1,
+                            length=jnp.int32(s),
+                            pages=jnp.asarray(pages[: spad // ps], jnp.int32),
+                            slot=jnp.int32(i))
+        toks.append(int(jnp.argmax(lg[0, s - 1])))
+    cache = {**cache, "block_tables": jnp.asarray(bt)}
+    tok = jnp.asarray(toks, jnp.int32)[:, None]
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    return cache, tok, pos
+
+
+def main():
+    fan, depth, ps = 2, 2, 4
+    bad = 0
+    for arch in FAMILY_ARCHS:
+        cfg, params, prompt, extras = setup_family(arch, b=2, s=8)
+        b, s = prompt.shape
+        max_seq = s + 12 + fan * depth  # page-aligned: dense == paged store
+        ok = True
+
+        # --- leg 1: chain 0 vs same-shape padded linear window, dense -----
+        cache, tok, pos = dense_setup(cfg, params, prompt, extras, max_seq)
+        chains = jax.random.randint(jax.random.PRNGKey(7), (b, fan, depth),
+                                    0, cfg.vocab)
+        window = jnp.concatenate([tok, chains.reshape(b, fan * depth)], 1)
+        lg_tree, _ = verify_step(params, cfg, window, cache, pos, extras,
+                                 tree=(fan, depth))
+        pad = jnp.zeros((b, (fan - 1) * depth), jnp.int32)
+        lin = jnp.concatenate([tok, chains[:, 0], pad], 1)
+        lg_lin, _ = verify_step(params, cfg, lin, cache, pos, extras)
+        if not bool(jnp.all(lg_tree[:, : 1 + depth] == lg_lin[:, : 1 + depth])):
+            d = float(jnp.max(jnp.abs(lg_tree[:, : 1 + depth]
+                                      - lg_lin[:, : 1 + depth])))
+            print(f"  {arch}: chain0-vs-linear maxdiff={d:.3e}")
+            ok = False
+
+        # --- legs 2+3: tree + relocation, dense vs paged, stock cfg -------
+        dc, dtok, dpos = dense_setup(cfg, params, prompt, extras, max_seq)
+        pc, ptok, ppos = paged_setup(cfg, params, prompt, extras, max_seq, ps)
+        if not bool(jnp.all(dtok == ptok)):
+            print(f"  {arch}: prefill argmax differs dense vs paged")
+            ok = False
+        window = jnp.concatenate([dtok, chains.reshape(b, fan * depth)], 1)
+        lg_d, vc_d = verify_step(params, cfg, window, dc, dpos, extras,
+                                 tree=(fan, depth))
+        lg_p, vc_p = verify_step(params, cfg, window, pc, ppos, extras,
+                                 page_size=ps, tree=(fan, depth))
+        if not bool(jnp.all(lg_d == lg_p)):
+            d = float(jnp.max(jnp.abs(lg_d - lg_p)))
+            print(f"  {arch}: tree dense-vs-paged maxdiff={d:.3e}")
+            ok = False
+
+        # accept chain 1 fully on both layouts
+        a = jnp.full((b,), depth, jnp.int32)
+        cf = jnp.ones((b,), jnp.int32)
+        sel = 1 + cf * depth + (depth - 1)
+        rc_d = commit_verify(cfg, tree_relocate(cfg, vc_d, dpos, a, cf,
+                                                fan=fan, depth=depth), sel)
+        rc_p = commit_verify(cfg, tree_relocate(cfg, vc_p, ppos, a, cf,
+                                                fan=fan, depth=depth,
+                                                page_size=ps), sel)
+        nxt = jax.random.randint(jax.random.PRNGKey(8), (b, 2), 0, cfg.vocab)
+        pos2 = dpos + depth + 1
+        lg_a, _ = verify_step(params, cfg, nxt, rc_d, pos2, extras)
+        lg_b, _ = verify_step(params, cfg, nxt, rc_p, pos2, extras,
+                              page_size=ps)
+        if not bool(jnp.all(lg_a == lg_b)):
+            d = float(jnp.max(jnp.abs(lg_a - lg_b)))
+            print(f"  {arch}: relocated follow-up dense-vs-paged "
+                  f"maxdiff={d:.3e}")
+            ok = False
+
+        print(f"{arch}: {'OK' if ok else 'FAIL'}")
+        bad += not ok
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,11 +10,12 @@ from .lm import (
     loss_fn,
     paged_insert,
     prefill,
+    tree_relocate,
     verify_step,
 )
 
 __all__ = [
     "init_params", "forward", "loss_fn", "init_cache", "decode_step",
     "encode", "prefill", "init_paged_cache", "paged_insert",
-    "verify_step", "commit_verify",
+    "verify_step", "commit_verify", "tree_relocate",
 ]

@@ -7,10 +7,12 @@ partial products through the reduction network instead of buffering them.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .common import apply_rope, dense_init, linear, split_keys
 
@@ -55,6 +57,40 @@ def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int, dtype,
 
 def _split_heads(x, n, d):
     return x.reshape(x.shape[:-1] + (n, d))
+
+
+@functools.lru_cache(maxsize=None)
+def tree_layout(fan: int, depth: int):
+    """Static layout of a fan-of-chains candidate tree of ``1 + fan*depth``
+    nodes in *node order*: node 0 is the shared root (the last accepted
+    token), node ``1 + f*depth + i`` is step ``i`` of candidate chain ``f``.
+
+    Returns ``(dep, vis)`` numpy arrays: ``dep[j]`` is node j's logical
+    depth (rope position offset from the root), ``vis[q, j]`` is True when
+    node j is an ancestor-or-self of query node q — the shared-prefix
+    attention mask.  With ``fan == 1`` this degenerates to the linear
+    window: ``dep == arange`` and ``vis`` lower-triangular, making the tree
+    code path boolean-identical to the plain verify mask."""
+    t = 1 + fan * depth
+    dep = np.zeros((t,), np.int32)
+    vis = np.zeros((t, t), np.bool_)
+    vis[:, 0] = True  # the root is every node's ancestor
+    for f in range(fan):
+        for i in range(depth):
+            j = 1 + f * depth + i
+            dep[j] = i + 1
+            vis[j, 1 + f * depth : j + 1] = True  # own-chain prefix + self
+    return dep, vis
+
+
+def _tree_valid(vis, pos, t: int, store: int):
+    """(B, T, S) bool: query node q of the window rooted at per-row ``pos``
+    may attend store column c iff c is in the cached prefix (c < pos) or c
+    holds a window node on q's root-path (``vis[q, c - pos]``)."""
+    rel = jnp.arange(store, dtype=pos.dtype)[None, :] - pos[:, None]  # (B, S)
+    inwin = (rel >= 0) & (rel < t)
+    vm = jnp.asarray(vis)[:, jnp.clip(rel, 0, t - 1)]  # (T, B, S)
+    return (rel < 0)[:, None, :] | (inwin[:, None, :] & jnp.moveaxis(vm, 0, 1))
 
 
 def _direct_attention(q, k, v, causal: bool, q_offset: int = 0):
@@ -421,10 +457,17 @@ def attn_verify(
     rope_theta: float = 0.0,
     block_tables: Optional[jnp.ndarray] = None,
     page_size: int = 0,
+    tree: Optional[tuple[int, int]] = None,
 ) -> tuple[jnp.ndarray, dict]:
     """T-token decode for speculative verification: consume T proposed
     tokens at per-row positions ``pos .. pos+T-1`` against an existing cache
     (dense or paged), causal *within* the window and over the cached prefix.
+
+    ``tree=(fan, depth)`` switches the window to a fan-of-chains candidate
+    tree in node order (``T == 1 + fan*depth``, see ``tree_layout``): write
+    columns stay ``pos + node``, rope positions become ``pos + dep[node]``,
+    and the causal mask is replaced by the shared-prefix ancestor mask, so
+    each chain scores exactly as if it were verified alone.
 
     Per query t the math is exactly ``attn_decode``'s — same projections,
     same f32 score accumulation, same masked softmax over the full store —
@@ -440,9 +483,14 @@ def attn_verify(
     k = _split_heads(linear(x, p["wk"], p.get("bk")), n_kv, head_dim)
     v = _split_heads(linear(x, p["wv"], p.get("bv")), n_kv, head_dim)
     posm = pos[:, None] + jnp.arange(t, dtype=pos.dtype)[None, :]  # (B, T)
+    if tree is None:
+        posr = posm  # linear window: logical position == write column
+    else:
+        dep, _ = tree_layout(*tree)
+        posr = pos[:, None] + jnp.asarray(dep, pos.dtype)[None, :]
     if rope_theta:
-        q = apply_rope(q, posm, rope_theta)
-        k = apply_rope(k, posm, rope_theta)
+        q = apply_rope(q, posr, rope_theta)
+        k = apply_rope(k, posr, rope_theta)
     quantized = "k_scale" in cache
     # k/v are already (B, T, KV, D) — the scatter-row layout — and
     # _quant_kv reduces over the last axis, so it applies in place.
@@ -498,10 +546,14 @@ def attn_verify(
     s = jnp.einsum("bqhgd,bhkd->bhgqk", qg, ck,
                    preferred_element_type=jnp.float32)
     s = s / jnp.sqrt(head_dim)
-    # query t's frontier is pos + t: the cached prefix plus the window's
-    # earlier tokens and itself — causal across cache and window at once.
-    valid = (jnp.arange(ck.shape[2])[None, None, None, None, :]
-             <= posm[:, None, None, :, None])
+    if tree is None:
+        # query t's frontier is pos + t: the cached prefix plus the window's
+        # earlier tokens and itself — causal across cache and window at once.
+        valid = (jnp.arange(ck.shape[2])[None, None, None, None, :]
+                 <= posm[:, None, None, :, None])
+    else:
+        _, vis = tree_layout(*tree)
+        valid = _tree_valid(vis, pos, t, ck.shape[2])[:, None, None, :, :]
     s = jnp.where(valid, s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bqhgd", w.astype(cv.dtype), cv,

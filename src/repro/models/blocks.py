@@ -86,14 +86,15 @@ def dense_block_decode_paged(p, x, cache, block_tables, pos, cfg: ModelConfig,
 
 
 def dense_block_verify(p, x, cache, block_tables, pos, cfg: ModelConfig,
-                       page_size: int):
+                       page_size: int, tree=None):
     """T-token speculative-verify step (dense cache when ``block_tables`` is
-    None, paged pool otherwise); ``pos`` is per-row (B,)."""
+    None, paged pool otherwise); ``pos`` is per-row (B,); ``tree=(fan,
+    depth)`` verifies a candidate tree (see ``attention.attn_verify``)."""
     h, cache = attn_verify(
         p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cache, pos,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
         rope_theta=cfg.rope_theta, block_tables=block_tables,
-        page_size=page_size,
+        page_size=page_size, tree=tree,
     )
     x = x + h
     return x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps)), cache
@@ -177,7 +178,7 @@ def moe_block_decode_paged(p, x, cache, block_tables, pos, cfg: ModelConfig,
 
 
 def moe_block_verify(p, x, cache, block_tables, pos, cfg: ModelConfig,
-                     page_size: int):
+                     page_size: int, tree=None):
     """T-token speculative-verify step for the MoE block (MLA or GQA
     attention; the expert MLP is per-position, nothing to roll back)."""
     xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
@@ -185,13 +186,13 @@ def moe_block_verify(p, x, cache, block_tables, pos, cfg: ModelConfig,
         h, cache = mla_verify(
             p["attn"], xin, cache, pos, n_heads=cfg.n_heads, m=cfg.mla,
             rope_theta=cfg.rope_theta, block_tables=block_tables,
-            page_size=page_size)
+            page_size=page_size, tree=tree)
     else:
         h, cache = attn_verify(
             p["attn"], xin, cache, pos, n_heads=cfg.n_heads,
             n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
             rope_theta=cfg.rope_theta, block_tables=block_tables,
-            page_size=page_size)
+            page_size=page_size, tree=tree)
     x = x + h
     y, _ = moe_apply(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.moe)
     return x + y, cache

@@ -686,6 +686,33 @@ def decode_step(
 
 
 # ---------------------------------------------------------- verify (spec) ---
+def _tree_to_chains(x: jnp.ndarray, fan: int, depth: int) -> jnp.ndarray:
+    """Node-order tree window ``(B, 1+fan*depth, ...)`` -> chain batch
+    ``(B*fan, 1+depth, ...)``: each candidate chain gets the shared root
+    prepended, so per-slot recurrences (SSM/conv state) can run every chain
+    as an ordinary sequential verify window."""
+    b = x.shape[0]
+    root = jnp.broadcast_to(x[:, None, 0:1], (b, fan, 1) + x.shape[2:])
+    chains = x[:, 1:].reshape((b, fan, depth) + x.shape[2:])
+    return jnp.concatenate([root, chains], axis=2).reshape(
+        (b * fan, 1 + depth) + x.shape[2:])
+
+
+def _chains_to_tree(y: jnp.ndarray, fan: int, depth: int,
+                    axis: int = 0) -> jnp.ndarray:
+    """Inverse of ``_tree_to_chains`` along ``(axis, axis+1)``: chain batch
+    ``(..., B*fan, 1+depth, ...)`` -> node order ``(..., B, 1+fan*depth,
+    ...)``.  The root step is identical across a row's chains (same input,
+    same starting state), so chain 0's copy stands for node 0."""
+    y = jnp.moveaxis(y, (axis, axis + 1), (0, 1))
+    b = y.shape[0] // fan
+    y = y.reshape((b, fan, 1 + depth) + y.shape[2:])
+    out = jnp.concatenate(
+        [y[:, 0, 0:1], y[:, :, 1:].reshape((b, fan * depth) + y.shape[3:])],
+        axis=1)
+    return jnp.moveaxis(out, (0, 1), (axis, axis + 1))
+
+
 def verify_step(
     params: dict,
     cfg: ModelConfig,
@@ -694,6 +721,7 @@ def verify_step(
     pos: jnp.ndarray,  # (B,) int32 per-row lengths (tokens already cached)
     extras: Optional[dict] = None,
     page_size: int = 0,
+    tree: Optional[tuple[int, int]] = None,
 ) -> tuple[jnp.ndarray, dict]:
     """Speculative-verify forward: run the target model ONCE over a window
     of T proposed tokens at per-row positions ``pos .. pos+T-1`` against an
@@ -719,7 +747,17 @@ def verify_step(
     and the next window rewrites them) and SSM/conv per-slot state leaves
     come back STACKED with a time axis after the batch axis — pass the
     result through ``commit_verify`` with the per-row accepted step to get
-    a normal cache back."""
+    a normal cache back.
+
+    ``tree=(fan, depth)`` verifies a fan-of-chains candidate tree of
+    ``T == 1 + fan*depth`` tokens in node order (``attention.tree_layout``):
+    attention scores each node against the cached prefix plus its own
+    root-path via the shared-prefix mask, and SSM/conv recurrences run each
+    chain as an ordinary sequential window (``_tree_to_chains``) so every
+    chain's logits are bit-identical to verifying that chain alone.  The
+    stacked state time axis and the returned logits stay in node order —
+    ``commit_verify`` selects by node index, and the accepted chain's
+    attention rows are moved into linear positions by ``tree_relocate``."""
     extras = extras or {}
     fam = cfg.family
     bt = cache.get("block_tables")
@@ -727,10 +765,26 @@ def verify_step(
     new_cache = dict(cache)
 
     dense_body = lambda lp, h, c: bk.dense_block_verify(
-        lp, h, c, bt, pos, cfg, page_size)
+        lp, h, c, bt, pos, cfg, page_size, tree=tree)
     moe_body = lambda lp, h, c: bk.moe_block_verify(
-        lp, h, c, bt, pos, cfg, page_size)
+        lp, h, c, bt, pos, cfg, page_size, tree=tree)
     ssm_body = lambda lp, h, c: bk.ssm_block_verify(lp, h, c, cfg)
+    if tree is not None:
+        fan, dpt = tree
+        tile = lambda c: jax.tree.map(lambda l: jnp.repeat(l, fan, axis=0), c)
+        ssm_body = lambda lp, h, c: bk.ssm_block_verify(lp, h, tile(c), cfg)
+
+    def ssm_stack(stack, caches, h):
+        """Run an SSM layer stack; in tree mode convert the node-order
+        window to per-chain windows around it (states come back stacked
+        (L, B, T, ...) in node order either way)."""
+        if tree is None:
+            return _scan_cached(stack, caches, h, ssm_body)
+        hc, cs = _scan_cached(stack, caches, _tree_to_chains(h, fan, dpt),
+                              ssm_body)
+        return (_chains_to_tree(hc, fan, dpt),
+                jax.tree.map(lambda l: _chains_to_tree(l, fan, dpt, axis=1),
+                             cs))
 
     if fam == "dense":
         x, cs = _scan_cached(params["layers"], cache["layers"], x, dense_body)
@@ -744,14 +798,14 @@ def verify_step(
         x, cs = _scan_cached(params["layers"], cache["layers"], x, moe_body)
         new_cache["layers"] = cs
     elif fam == "ssm":
-        x, cs = _scan_cached(params["layers"], cache["layers"], x, ssm_body)
+        x, cs = ssm_stack(params["layers"], cache["layers"], x)
         new_cache["layers"] = cs
     elif fam == "hybrid":
         shared = params["shared_attn"]
 
         def f(h, xs):
             gp, sc, ac = xs
-            h, ssm_new = _scan_cached(gp, sc, h, ssm_body)
+            h, ssm_new = ssm_stack(gp, sc, h)
             h, attn_new = dense_body(shared, h, ac)
             return h, (ssm_new, attn_new)
 
@@ -760,7 +814,7 @@ def verify_step(
         )
         new_cache["groups_ssm"], new_cache["groups_attn"] = ssm_cs, attn_cs
         if params.get("tail") is not None:
-            x, cs = _scan_cached(params["tail"], cache["tail"], x, ssm_body)
+            x, cs = ssm_stack(params["tail"], cache["tail"], x)
             new_cache["tail"] = cs
     elif fam == "vlm":
         img = extras["image_embeds"].astype(x.dtype)
@@ -781,7 +835,7 @@ def verify_step(
                 lp["self"], rmsnorm(h, lp["ln1"], cfg.norm_eps), c, pos,
                 n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
                 head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
-                block_tables=bt, page_size=page_size,
+                block_tables=bt, page_size=page_size, tree=tree,
             )
             h = h + hh
             hh = attn_apply(
@@ -854,6 +908,92 @@ def commit_verify(cfg: ModelConfig, cache: dict, sel: jnp.ndarray) -> dict:
         out["groups_ssm"] = _select_step(cache["groups_ssm"], sel, lead=2)
         if "tail" in cache:
             out["tail"] = _select_step(cache["tail"], sel, lead=1)
+    return out
+
+
+def _reloc_dense(arr, nlead: int, sax: int, pos, a, cf, depth: int):
+    """Move ``a[b]`` rows of a dense sequence leaf ``lead-dims + (B, ...,
+    S@sax, ...)`` from chain ``cf[b]``'s tree columns ``pos+1+cf*depth+i``
+    to linear columns ``pos+1+i`` (masked scatter, gather-before-scatter so
+    chain 0 relocation is the identity)."""
+    sh = arr.shape
+    x = arr.reshape((-1,) + sh[nlead:])  # (LL, B, ..., S, ...)
+    x = jnp.moveaxis(x, sax, 2)  # (LL, B, S, rest...)
+    x = jnp.moveaxis(x, 0, 1)  # (B, LL, S, rest...)
+    seq = x.shape[2]
+    steps = jnp.arange(depth, dtype=pos.dtype)
+    src = pos[:, None] + 1 + cf[:, None] * depth + steps[None, :]  # (B, D)
+    dst = pos[:, None] + 1 + steps[None, :]
+
+    def one(xb, s_row, d_row, a_b):
+        rows = xb[:, jnp.clip(s_row, 0, seq - 1)]  # (LL, D, rest...)
+        d_ok = jnp.where(steps < a_b, d_row, seq)  # out-of-range -> dropped
+        return xb.at[:, d_ok].set(rows, mode="drop")
+
+    x = jax.vmap(one)(x, src, dst, a)
+    x = jnp.moveaxis(x, 1, 0)
+    return jnp.moveaxis(x, 2, sax).reshape(sh)
+
+
+def _reloc_paged(arr, nlead: int, sax: int, bt, pos, a, cf, depth: int,
+                 ps: int):
+    """Paged-pool variant of ``_reloc_dense``: source/destination columns go
+    through the block tables; masked or out-of-store destinations route to
+    an out-of-range page and are dropped."""
+    sh = arr.shape
+    x = arr.reshape((-1,) + sh[nlead:])  # (LL, NP, ...)
+    x = jnp.moveaxis(x, sax, 2)  # (LL, NP, ps, rest...)
+    npg = x.shape[1]
+    w = bt.shape[1]
+    steps = jnp.arange(depth, dtype=pos.dtype)
+    src = pos[:, None] + 1 + cf[:, None] * depth + steps[None, :]  # (B, D)
+    dst = pos[:, None] + 1 + steps[None, :]
+    sp = jnp.take_along_axis(bt, jnp.clip(src // ps, 0, w - 1), axis=1)
+    sp = jnp.where(src < w * ps, sp, 0)
+    dp = jnp.take_along_axis(bt, jnp.clip(dst // ps, 0, w - 1), axis=1)
+    dp = jnp.where((steps[None, :] < a[:, None]) & (dst < w * ps), dp, npg)
+    rows = x[:, sp, src % ps]  # (LL, B, D, rest...)
+    x = x.at[:, dp, dst % ps].set(rows, mode="drop")
+    return jnp.moveaxis(x, 2, sax).reshape(sh)
+
+
+def tree_relocate(cfg: ModelConfig, cache: dict, pos: jnp.ndarray,
+                  a: jnp.ndarray, cf: jnp.ndarray, *, fan: int, depth: int,
+                  page_size: int = 0) -> dict:
+    """After tree verification accepted ``a[b]`` draft tokens from chain
+    ``cf[b]``, rewrite the accepted chain's attention/MLA rows from their
+    tree columns ``pos+1+cf*depth .. pos+cf*depth+a`` into the linear
+    columns ``pos+1 .. pos+a`` the next window's frontier mask expects.
+    SSM/conv per-slot state is positionless — ``commit_verify`` with the
+    node-order step index already handles it.  Requires the store to be
+    over-provisioned by ``fan*depth`` columns past ``max_seq`` so tree
+    columns of rows near the cap stay addressable (mirrors the draft-mode
+    reserve in the engines)."""
+    bt = cache.get("block_tables")
+    fam = cfg.family
+    out = dict(cache)
+
+    def reloc(sub: dict, nlead: int) -> dict:
+        new = {}
+        for kk, vv in sub.items():
+            sax = -1 if kk.endswith("_scale") else -2
+            if bt is None:
+                new[kk] = _reloc_dense(vv, nlead, sax, pos, a, cf, depth)
+            else:
+                new[kk] = _reloc_paged(vv, nlead, sax, bt, pos, a, cf, depth,
+                                       page_size)
+        return new
+
+    if fam in ("dense", "moe"):
+        out["layers"] = reloc(cache["layers"], 1)
+        if fam == "moe" and "dense_layers" in cache:
+            out["dense_layers"] = reloc(cache["dense_layers"], 1)
+    elif fam == "hybrid":
+        out["groups_attn"] = reloc(cache["groups_attn"], 1)
+    elif fam == "vlm":
+        out["groups_self"] = reloc(cache["groups_self"], 2)
+    elif fam == "encdec":
+        out["decoder"] = reloc(cache["decoder"], 1)
     return out
 
 

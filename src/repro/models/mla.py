@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import MLAConfig
 
+from .attention import _tree_valid, tree_layout
 from .common import apply_rope, dense_init, dq, linear, split_keys
 
 
@@ -162,23 +163,32 @@ def mla_decode_paged(p, x, cache, block_tables, pos, *, n_heads: int,
 
 
 def mla_verify(p, x, cache, pos, *, n_heads: int, m: MLAConfig,
-               rope_theta: float, block_tables=None, page_size: int = 0):
+               rope_theta: float, block_tables=None, page_size: int = 0,
+               tree=None):
     """T-token absorbed decode for speculative verification (per-row ``pos``
     (B,), dense latent cache or paged pool — see ``attention.attn_verify``
     for the window/rollback discipline).  Per query the math is exactly
     ``mla_decode``'s absorbed form, so greedy verification reproduces the
-    per-token argmax."""
+    per-token argmax.  ``tree=(fan, depth)`` verifies a fan-of-chains
+    candidate tree in node order: write columns stay ``pos + node``, rope
+    positions become ``pos + dep[node]`` and the causal mask becomes the
+    shared-prefix ancestor mask (``attention.tree_layout``)."""
     b, t, _ = x.shape
     qh = m.qk_nope_dim + m.qk_rope_dim
     q = linear(x, p["wq"]).reshape(b, t, n_heads, qh)
     q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
     posm = pos[:, None] + jnp.arange(t, dtype=pos.dtype)[None, :]  # (B, T)
-    q_rope = apply_rope(q_rope, posm, rope_theta)
+    if tree is None:
+        posr = posm  # linear window: logical position == write column
+    else:
+        dep, _ = tree_layout(*tree)
+        posr = pos[:, None] + jnp.asarray(dep, pos.dtype)[None, :]
+    q_rope = apply_rope(q_rope, posr, rope_theta)
     q_lat = jnp.einsum("bqhd,hcd->bqhc", q_nope, dq(p["w_uk"], q_nope.dtype))
 
     ckv = linear(x, p["w_dkv"])
     c_new, kr_new = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
-    kr_new = apply_rope(kr_new[:, :, None, :], posm, rope_theta)[:, :, 0, :]
+    kr_new = apply_rope(kr_new[:, :, None, :], posr, rope_theta)[:, :, 0, :]
     if block_tables is None:
         seq = cache["c"].shape[1]
         rows = jnp.arange(b)[:, None]
@@ -208,8 +218,12 @@ def mla_verify(p, x, cache, pos, *, n_heads: int, m: MLAConfig,
     s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
                         ckr.astype(jnp.float32))
     scores = (s_lat + s_rope) * scale
-    valid = (jnp.arange(cc.shape[1])[None, None, None, :]
-             <= posm[:, None, :, None])  # (B, 1, T, S) — per-query frontier
+    if tree is None:
+        valid = (jnp.arange(cc.shape[1])[None, None, None, :]
+                 <= posm[:, None, :, None])  # (B, 1, T, S) — per-query frontier
+    else:
+        _, vis = tree_layout(*tree)
+        valid = _tree_valid(vis, pos, t, cc.shape[1])[:, None, :, :]
     scores = jnp.where(valid, scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     o_lat = jnp.einsum("bhqk,bkc->bqhc", w, cc.astype(jnp.float32))

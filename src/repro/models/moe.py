@@ -48,18 +48,28 @@ GROUP_TOKENS = 4096  # default dispatch-group size (cfg.group_tokens overrides)
 def moe_apply(p: dict, x: jnp.ndarray, cfg: MoEConfig) -> tuple[jnp.ndarray, dict]:
     """x: (B, S, D) -> (out, aux) with load-balance + z losses.
 
-    Tokens are re-grouped into dispatch groups of <= GROUP_TOKENS so the
+    Long rows are split into dispatch groups of <= GROUP_TOKENS so the
     capacity C (and the expert-slot waste E*C / (gs*k)) stays constant in
     sequence length — without this, prefill_32k's one-hot is petabyte-scale
     and a 128-token decode batch computes 64 experts at capacity >= top_k
     each (384x waste; see EXPERIMENTS.md §Perf, deepseek decode iteration).
+    Groups never span rows: routing (and hence capacity drops) is a
+    per-row function, which batched-vs-rowwise parity depends on.
     """
     b0, s0, d = x.shape
-    t = b0 * s0
     gt = cfg.group_tokens or GROUP_TOKENS
-    n_groups = max(1, -(-t // gt))  # ceil
-    if t % n_groups == 0:
-        x = x.reshape(n_groups, t // n_groups, d)
+    # One dispatch group per ROW (split only rows longer than the group
+    # budget): a token's expert-buffer position and drop decisions then
+    # depend on its own row alone, so batched prefill over B rows and B
+    # batch-1 admits produce IDENTICAL routing — the other half (with the
+    # exact combine below) of dense-vs-paged moe bit-equality.  The old
+    # flatten-all-then-split regrouped tokens ACROSS rows, so row 1's
+    # tokens landed in buffers already holding row 0's and its capacity
+    # drops changed with batch composition (~1e-2 logit swings).
+    if s0 > gt:
+        n = -(-s0 // gt)  # ceil
+        if s0 % n == 0:
+            x = x.reshape(b0 * n, s0 // n, d)
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
     cap = _capacity(s, cfg)
@@ -76,17 +86,26 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg: MoEConfig) -> tuple[jnp.ndarray, dic
     pos = jnp.einsum("bte,bte->bt", pos_in_e, sel_flat).reshape(b, s, k)
     keep = (pos < cap).astype(jnp.float32)
 
-    # dispatch (B,S,E,C) / combine (B,S,E,C)
+    # dispatch (B,S,E,C)
     pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
     disp = jnp.einsum("bske,bskc->bsec", sel, pos_oh)
-    comb = jnp.einsum("bsk,bske,bskc->bsec", top_p, sel, pos_oh)
 
     xe = jnp.einsum("bsd,bsec->ebcd", x.astype(jnp.float32), disp)  # (E,B,C,D)
     xe = xe.astype(x.dtype)
     h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, dq(p["gate"], xe.dtype)))
     h = h * jnp.einsum("ebcd,edf->ebcf", xe, dq(p["up"], xe.dtype))
     ye = jnp.einsum("ebcf,efd->ebcd", h, dq(p["down"], h.dtype))  # (E,B,C,D)
-    y = jnp.einsum("ebcd,bsec->bsd", ye.astype(jnp.float32), comb).astype(x.dtype)
+    # Exact top-k combine: gather each (token, slot)'s expert output — the
+    # (E, C) contraction has <= 1 nonzero per slot, so it is exact in any
+    # summation order — then reduce over the fixed top-k axis.  The k-term
+    # sum's reduction tree no longer depends on the capacity C, so batched
+    # prefill (large dispatch group) and batch-1 admit (small group) produce
+    # bit-identical outputs; the old joint (E*C) reduction put the k nonzero
+    # products at group-size-dependent offsets, and the resulting ulp drift
+    # amplified to ~1e-3 logits across layers (dense-vs-paged moe parity).
+    ye_g = jnp.einsum("ebcd,bske,bskc->bskd", ye.astype(jnp.float32), sel,
+                      pos_oh)  # (B,S,k,D)
+    y = jnp.einsum("bsk,bskd->bsd", top_p, ye_g).astype(x.dtype)
 
     if "shared" in p:
         sh = p["shared"]

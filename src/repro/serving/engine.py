@@ -124,6 +124,7 @@ _DENSE_KEYS = {"ln", "ln1", "ln2", "ln3", "ln_f", "conv_w", "conv_b", "A_log",
 _MARKER_KEYS = ("nibbles", "nibbles_odd", "tp")
 
 
+
 def _should_quantize(path, leaf) -> bool:
     names = [str(getattr(p, "key", "")) for p in path]
     if names and names[-1] in _DENSE_KEYS:
@@ -396,12 +397,29 @@ class ServingEngine:
                     "draft-model speculation is single-device (the draft "
                     "tree is not mesh-distributed); use mode='ngram' on a "
                     "mesh")
-        if self.mesh is not None:
+        if spec.tree_fan:
+            if self.mesh is not None:
+                toks, steps, live_steps = spec_mod._spec_tree_generate_sharded(
+                    self.params, self.cfg, prompt_tokens, extras, key,
+                    jnp.float32(temperature), mesh=self.mesh, n_new=n_new,
+                    max_seq=self.max_seq, fan=spec.tree_fan, depth=spec.k,
+                    ngram_n=spec.ngram_n, greedy=greedy, top_k=top_k)
+            else:
+                toks, steps, live_steps = spec_mod._spec_tree_generate(
+                    self.params, self.cfg, prompt_tokens, extras, key,
+                    jnp.float32(temperature), n_new=n_new,
+                    max_seq=self.max_seq, fan=spec.tree_fan, depth=spec.k,
+                    ngram_n=spec.ngram_n, greedy=greedy, top_k=top_k)
+        elif self.mesh is not None:
             toks, steps, live_steps = spec_mod._spec_generate_sharded(
                 self.params, self.cfg, prompt_tokens, extras, key,
                 jnp.float32(temperature), mesh=self.mesh, n_new=n_new,
                 max_seq=self.max_seq, k=spec.k, ngram_n=spec.ngram_n,
-                greedy=greedy, top_k=top_k)
+                greedy=greedy, top_k=top_k, adaptive=spec.adaptive,
+                ctrl_alpha=spec.ctrl_alpha, ctrl_init=spec.ctrl_init,
+                ctrl_cost=spec.ctrl_cost, accept=spec.accept,
+                typical_eps=spec.typical_eps,
+                typical_delta=spec.typical_delta)
         else:
             toks, steps, live_steps = spec_mod._spec_generate(
                 self.params, self.cfg, prompt_tokens, extras,
@@ -409,7 +427,11 @@ class ServingEngine:
                 key, jnp.float32(temperature),
                 draft_cfg=self.draft_cfg if spec.mode == "draft" else None,
                 n_new=n_new, max_seq=self.max_seq, k=spec.k, mode=spec.mode,
-                ngram_n=spec.ngram_n, greedy=greedy, top_k=top_k)
+                ngram_n=spec.ngram_n, greedy=greedy, top_k=top_k,
+                adaptive=spec.adaptive, ctrl_alpha=spec.ctrl_alpha,
+                ctrl_init=spec.ctrl_init, ctrl_cost=spec.ctrl_cost,
+                accept=spec.accept, typical_eps=spec.typical_eps,
+                typical_delta=spec.typical_delta)
         steps, live_steps = int(steps), int(live_steps)
         # One verify step streams the weight tree once for the WHOLE batch,
         # so the weight-stream amortisation is per-row tokens over verify
@@ -420,6 +442,8 @@ class ServingEngine:
         # acceptance, the proposer-quality number.
         self.spec_stats = {
             "k": spec.k, "mode": spec.mode, "greedy": greedy,
+            "adaptive": spec.adaptive, "tree_fan": spec.tree_fan,
+            "accept": spec.accept,
             "verify_steps": steps,
             "live_row_steps": live_steps,
             "emitted_per_step": ((n_new - 1) / steps if steps else 0.0),
@@ -701,10 +725,20 @@ class ContinuousBatchingEngine:
         # k extra provisioned positions past the request frontier — even a
         # request using the full max_seq budget must never route a draft
         # read through the shared trash page, or cross-engine
-        # key-determinism breaks at the boundary.
+        # key-determinism breaks at the boundary.  Tree mode needs a
+        # bigger reserve, fan*k: ``models.tree_relocate`` GATHERS the
+        # accepted chain's rows from their tree columns (up to
+        # pos + fan*k) before scattering them into the linear layout, and
+        # a gather through the trash page would corrupt committed
+        # positions, not merely waste a proposal.
+        if self._draft_mode:
+            reserve = self.spec.k
+        elif self.spec is not None and self.spec.tree_fan:
+            reserve = self.spec.tree_fan * self.spec.k
+        else:
+            reserve = 0
         self._store_seq = self.max_seq + (
-            -(-self.spec.k // self.page_size) * self.page_size
-            if self._draft_mode else 0)
+            -(-reserve // self.page_size) * self.page_size)
         self.width = self._store_seq // self.page_size
         if num_pages is None:
             num_pages = self.slots * self.width + 1  # worst case + trash page
@@ -724,6 +758,11 @@ class ContinuousBatchingEngine:
         # the plain and speculative engines; spec_emitted/spec_live_steps
         # is the per-slot window acceptance (proposer quality).
         self.decode_chunk_iters = 0
+        # Debug invariant (enabled by tests): after every speculative
+        # chunk, each live slot's n-gram history row must equal its
+        # admitted prompt followed by every emitted token — across ladder
+        # no_spec rounds, recompute preemption, and crash-replay resume.
+        self.debug_check_hist = False
 
     # ------------------------------------------------------------- helpers --
     def _spad(self, length: int) -> int:
@@ -822,6 +861,15 @@ class ContinuousBatchingEngine:
         # per-slot token history (prompt + emissions) for the n-gram
         # proposer; rewritten whole at admit, so stale rows never leak
         self._hist = np.zeros((b, self.max_seq), np.int32)
+        # per-slot acceptance EMA for the adaptive controller: updated by
+        # the spec chunk, read by ``adaptive_k_host`` each round, carried
+        # through snapshots so crash replay resumes the learned rate
+        self._acc_ema = np.zeros(b, np.float32)
+        # controller probation: a freshly admitted slot gets one SHORT
+        # round before the controller commits to a full-length one, so
+        # the first wide window is picked from a measured EMA rather
+        # than ``ctrl_init``
+        self._ctrl_fresh = np.zeros(b, bool)
 
     def _admit(self, requests, slot: int, ridx: int, greedy, temperature,
                top_k, resume: Optional[InflightState] = None) -> None:
@@ -885,6 +933,10 @@ class ContinuousBatchingEngine:
         self._tok[slot, 0] = emitted[-1]
         self._rids[slot] = ridx
         self._wctr[slot] = int(resume.wctr) if resume is not None else 0
+        self._acc_ema[slot] = (float(resume.acc_ema) if resume is not None
+                               else (self.spec.ctrl_init
+                                     if self.spec is not None else 0.0))
+        self._ctrl_fresh[slot] = True
         self._done[slot] = (len(emitted) >= req.max_new
                             or emitted[-1] in st)
         self._slot_req[slot] = ridx
@@ -904,6 +956,8 @@ class ContinuousBatchingEngine:
         self._stops[slot, :] = -1
         self._rids[slot] = 0
         self._wctr[slot] = 0
+        self._acc_ema[slot] = 0.0
+        self._ctrl_fresh[slot] = False
         self._done[slot] = True
 
     def _preempt_youngest(self, protect: int) -> bool:
@@ -953,10 +1007,19 @@ class ContinuousBatchingEngine:
         chunk = self.chunk if eff_chunk is None else eff_chunk
         k = (self.spec.k if self.spec is not None else None) \
             if eff_chunk is None else eff_k  # default call = engine config
+        fan = self.spec.tree_fan if self.spec is not None else 0
         adv = chunk * (k + 1 if k is not None else 1)
         cap = length + req.max_new - 2
         if self._draft_mode and k is not None:
             cap = min(cap + k, self._store_seq - 1)
+        if fan and k is not None:
+            # Tree relocation GATHERS from the tree columns (up to
+            # pos + fan*k past the frontier) before scattering into the
+            # linear layout — those sources must be provisioned pages, or
+            # the gather reads the shared trash page and corrupts
+            # committed positions.  Each iteration advances at most k+1.
+            adv = chunk * (k + 1) + fan * k
+            cap = min(cap + fan * k, self._store_seq - 1)
         last = min(int(self._pos[slot]) + adv - 1, cap)
         need = max(last, spad - 1) // ps + 1
         have = len(self._slot_pages[slot])
@@ -1030,7 +1093,8 @@ class ContinuousBatchingEngine:
                 emitted=[int(t) for t in self._outputs[ridx]],
                 wctr=int(self._wctr[s]),
                 t_admit=records[ridx].t_admit,
-                t_first=records[ridx].t_first)
+                t_first=records[ridx].t_first,
+                acc_ema=float(self._acc_ema[s]))
         snap = ServeSnapshot(
             finished={i: [int(t) for t in self._outputs[i]]
                       for i, r in enumerate(records) if r.status == "done"},
@@ -1254,6 +1318,72 @@ class ContinuousBatchingEngine:
             # ---- effective scheduling parameters for this round (ladder)
             eff_chunk, eff_k = ladder.params(
                 self.chunk, self.spec.k if self.spec is not None else None)
+            if (self.spec is not None and self.spec.adaptive
+                    and eff_k is not None):
+                # Adaptive controller: the verify-window width is SHARED
+                # across the batch (one compiled program per round), so
+                # the round's k comes from the batch-aggregate expected
+                # gain over the per-slot acceptance EMAs — composed with
+                # the ladder as min(rung, controller).  A k == 0 pick
+                # dispatches the genuine plain decode chunk below (the
+                # fixed engine instead runs width-0 windows with the
+                # in-loop ``_ctrl_probe``).
+                alive = np.asarray(
+                    [self._slot_req[s] >= 0 and not self._done[s]
+                     for s in range(self.slots)])
+                eff_k = min(eff_k,
+                            spec_mod.adaptive_k_host(self._acc_ema, alive,
+                                                     self.spec))
+                # Shrink the chunk to the longest live remaining budget:
+                # iterations past every slot's max_new stream weights for
+                # nothing, and chunk boundaries never change a request's
+                # token stream (draws are (rid, counter)-keyed).
+                rem = int(max(
+                    (self._max_new[s] - self._n_out[s]
+                     for s in range(self.slots) if alive[s]), default=1))
+                # Admission happens only at round boundaries, so when
+                # requests are WAITING a slot that finishes mid-round
+                # idles until the round ends.  End the round where the
+                # first live slot can free (its remaining budget), and
+                # the top-up refills it immediately — the fixed-chunk
+                # plain baseline eats that idle tail.
+                if self._queue:
+                    rem = min(rem, int(min(
+                        (self._max_new[s] - self._n_out[s]
+                         for s in range(self.slots) if alive[s]),
+                        default=rem)))
+                if eff_k > 0:
+                    # Wide window: cap the round at ceil(rem/(k+1))
+                    # iterations — enough to cover the longest remaining
+                    # budget — so the controller re-picks k from fresh
+                    # EMAs instead of riding one stale pick for a whole
+                    # ``chunk``.  A round containing a freshly admitted
+                    # slot is cut to a 2-iteration probation round so its
+                    # first full-width window is priced from a MEASURED
+                    # acceptance rate, not ``ctrl_init``.
+                    eff_chunk = min(eff_chunk, -(-rem // (eff_k + 1)))
+                    if alive.any() and self._ctrl_fresh[alive].any():
+                        eff_chunk = min(eff_chunk, 2)
+                else:
+                    # Speculation is losing (or unmeasured): genuinely
+                    # fall back to the PLAIN decode chunk.  The
+                    # ladder-degrade path keeps the n-gram history warm,
+                    # and the host-side probe in the plain emit loop
+                    # (``propose_first_host``) keeps the EMA learning at
+                    # zero device cost, so a regime change is picked up
+                    # at the next round boundary — no probe rounds, no
+                    # short rounds, no spec-chunk overhead on text where
+                    # speculation cannot pay.
+                    eff_k = None
+                    eff_chunk = min(eff_chunk, rem)
+                if alive.any():
+                    self._ctrl_fresh[alive] = False
+                # Quantize the cap to a power of two (or the full chunk)
+                # so the jitted chunk compiles O(log chunk) shapes, not
+                # one per distinct remaining-budget value.
+                eff_chunk = max(1, eff_chunk)
+                if eff_chunk < self.chunk:
+                    eff_chunk = 1 << (eff_chunk.bit_length() - 1)
             spec_on = self.spec is not None and eff_k is not None
             # ---- page top-up, under injected pool pressure
             withheld: list[int] = []
@@ -1325,17 +1455,36 @@ class ContinuousBatchingEngine:
             self._cache["block_tables"] = jnp.asarray(self._bt)
             self.decode_chunk_iters += eff_chunk
             try:
-                if spec_on:
+                if spec_on and self.spec.tree_fan:
+                    step = (spec_mod._spec_tree_chunk if self.mesh is None
+                            else functools.partial(
+                                spec_mod._spec_tree_chunk_sharded,
+                                mesh=self.mesh))
+                    (self._cache, tok, pos, n_out, done, hist, wctr,
+                     emits, ms) = step(
+                        self.params, self.cfg, self._cache,
+                        jnp.asarray(self._tok), jnp.asarray(self._pos),
+                        jnp.asarray(self._n_out), jnp.asarray(self._done),
+                        jnp.asarray(self._hist), jnp.asarray(self._wctr),
+                        jnp.asarray(self._rids), jnp.asarray(self._max_new),
+                        jnp.asarray(self._stops), self._key,
+                        jnp.float32(temperature), self._extras_slots,
+                        chunk=eff_chunk, page_size=self.page_size,
+                        fan=self.spec.tree_fan, depth=eff_k,
+                        ngram_n=self.spec.ngram_n, pad_id=self.pad_id,
+                        greedy=bool(greedy), top_k=int(top_k))
+                elif spec_on:
                     if self._draft_mode:
                         self._dcache["block_tables"] = jnp.asarray(self._bt)
                     if self.mesh is None:
                         (self._cache, self._dcache, tok, pos, n_out, done,
-                         hist, wctr, emits, ms) = spec_mod._spec_chunk(
+                         hist, wctr, ema, emits, ms) = spec_mod._spec_chunk(
                             self.params, self.cfg, self._cache,
                             self.draft_params, self._dcache,
                             jnp.asarray(self._tok), jnp.asarray(self._pos),
                             jnp.asarray(self._n_out), jnp.asarray(self._done),
                             jnp.asarray(self._hist), jnp.asarray(self._wctr),
+                            jnp.asarray(self._acc_ema),
                             jnp.asarray(self._rids), jnp.asarray(self._max_new),
                             jnp.asarray(self._stops), self._key,
                             jnp.float32(temperature), self._extras_slots,
@@ -1343,21 +1492,32 @@ class ContinuousBatchingEngine:
                             page_size=self.page_size, k=eff_k,
                             mode=self.spec.mode, ngram_n=self.spec.ngram_n,
                             pad_id=self.pad_id, greedy=bool(greedy),
-                            top_k=int(top_k))
+                            top_k=int(top_k), adaptive=self.spec.adaptive,
+                            ctrl_alpha=self.spec.ctrl_alpha,
+                            accept=self.spec.accept,
+                            typical_eps=self.spec.typical_eps,
+                            typical_delta=self.spec.typical_delta)
                     else:
                         (self._cache, tok, pos, n_out, done, hist, wctr,
-                         emits, ms) = spec_mod._spec_chunk_sharded(
+                         ema, emits, ms) = spec_mod._spec_chunk_sharded(
                             self.params, self.cfg, self._cache,
                             jnp.asarray(self._tok), jnp.asarray(self._pos),
                             jnp.asarray(self._n_out), jnp.asarray(self._done),
                             jnp.asarray(self._hist), jnp.asarray(self._wctr),
+                            jnp.asarray(self._acc_ema),
                             jnp.asarray(self._rids), jnp.asarray(self._max_new),
                             jnp.asarray(self._stops), self._key,
                             jnp.float32(temperature), self._extras_slots,
                             mesh=self.mesh, chunk=eff_chunk,
                             page_size=self.page_size, k=eff_k,
                             ngram_n=self.spec.ngram_n, pad_id=self.pad_id,
-                            greedy=bool(greedy), top_k=int(top_k))
+                            greedy=bool(greedy), top_k=int(top_k),
+                            adaptive=self.spec.adaptive,
+                            ctrl_alpha=self.spec.ctrl_alpha,
+                            accept=self.spec.accept,
+                            typical_eps=self.spec.typical_eps,
+                            typical_delta=self.spec.typical_delta)
+                    self._acc_ema = np.array(ema)
                 else:
                     step = (_decode_chunk if self.mesh is None
                             else functools.partial(_decode_chunk_sharded,
@@ -1395,6 +1555,20 @@ class ContinuousBatchingEngine:
                                 int(x) for x in emits[t, slot, :mm])
                             self.spec_emitted += mm
                             self.spec_live_steps += 1
+                if self.debug_check_hist:
+                    for slot in range(self.slots):
+                        ridx = self._slot_req[slot]
+                        if ridx < 0:
+                            continue
+                        out = self._outputs[ridx]
+                        pl = int(self._plen[slot])
+                        got = self._hist[slot, pl : pl + len(out)]
+                        if not np.array_equal(
+                                got, np.asarray(out, np.int32)):
+                            raise AssertionError(
+                                f"n-gram history desync on slot {slot} "
+                                f"(request {ridx}): hist emissions "
+                                f"{got.tolist()} != outputs {out}")
             else:
                 emits, lives = np.asarray(emits), np.asarray(lives)
                 cnt = n0.copy()
@@ -1408,8 +1582,22 @@ class ContinuousBatchingEngine:
                                 # plain decode this round: keep the n-gram
                                 # history warm so re-enabling speculation
                                 # proposes from the full stream.
-                                self._hist[slot,
-                                           self._plen[slot] + cnt[slot]] = tv
+                                hl = int(self._plen[slot]) + cnt[slot]
+                                if self.spec.adaptive:
+                                    # Free host-side probe: the chance
+                                    # the emitted token equals the
+                                    # proposer's next guess IS the
+                                    # acceptance ``_ctrl_probe`` would
+                                    # measure, so plain fallback rounds
+                                    # keep the controller learning.
+                                    pred = spec_mod.propose_first_host(
+                                        self._hist[slot], hl,
+                                        self.spec.ngram_n)
+                                    al = self.spec.ctrl_alpha
+                                    self._acc_ema[slot] = (
+                                        (1.0 - al) * self._acc_ema[slot]
+                                        + al * float(pred == tv))
+                                self._hist[slot, hl] = tv
                                 cnt[slot] += 1
             self._tok = np.array(tok)  # np.array: writable host copies
             self._pos = np.array(pos)

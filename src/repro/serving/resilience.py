@@ -190,12 +190,17 @@ class InflightState:
     re-admit it token-identically — its emissions so far (the prompt lives
     in the request list) and its verify-window draw counter.  The token
     draw counter IS ``len(emitted)`` (draw n samples the n-th emission;
-    see serving.sampling)."""
+    see serving.sampling).  ``acc_ema`` is the adaptive controller's
+    learned per-request acceptance estimate (speculative.SpecConfig
+    ``adaptive``) so a crash replay resumes the controller where it left
+    off instead of re-paying the warm-up; the default keeps snapshots
+    taken before this field existed loadable."""
 
     emitted: list
     wctr: int = 0
     t_admit: Optional[float] = None
     t_first: Optional[float] = None
+    acc_ema: float = 0.5
 
 
 @dataclasses.dataclass

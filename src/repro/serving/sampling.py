@@ -130,7 +130,8 @@ def residual_dist(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
 
 
 def rejection_sample(keys, drafts: jnp.ndarray, q: jnp.ndarray,
-                     p: jnp.ndarray):
+                     p: jnp.ndarray, *, kcap: jnp.ndarray | None = None,
+                     n_draws: int | None = None):
     """Per-row rejection-sampling verification of a proposal window.
 
     ``keys`` (B,) per-row window keys (``draw_keys(..., TAG_WINDOW)``);
@@ -139,32 +140,168 @@ def rejection_sample(keys, drafts: jnp.ndarray, q: jnp.ndarray,
     proposers); ``p`` (B, k+1, V) the target's warped verify
     distributions.
 
+    ``kcap`` (B,) optionally caps the number of proposals each row may
+    accept (the adaptive controller's per-request k): positions at or
+    past a row's cap are force-rejected without consuming target mass —
+    the row behaves exactly as if only its first ``kcap`` proposals had
+    been made, so the emitted prefix stays exactly ``p``-distributed for
+    any cap.  ``kcap == 0`` degenerates to a plain sample from ``p[0]``.
+    ``n_draws`` (static, >= k) fixes the uniform-draw shape so a row's
+    random stream does not depend on the round's window size: adaptive
+    rounds pass the configured maximum k while running smaller windows,
+    and the ``u[:k]`` prefix of one (n_draws,) draw is the same whatever
+    k the round happens to use.
+
     Returns ``(tokens (B, k+1), a (B,))`` laid out like
     ``speculative.greedy_accept``: ``a`` is the number of accepted
     proposals and the row emits ``tokens[:, :a+1]`` — the accepted
-    proposals followed by the residual resample (``a < k``) or the bonus
-    draw from ``p[:, k]`` (``a == k``).  Positions past ``a`` repeat the
-    final draw; they are dead filler matching greedy_accept's convention
-    that only ``:a+1`` is ever read.
+    proposals followed by the residual resample (``a < kcap``) or the
+    bonus draw from ``p[:, kcap]`` (``a == kcap``).  Positions past ``a``
+    repeat the final draw; they are dead filler matching greedy_accept's
+    convention that only ``:a+1`` is ever read.
 
     Acceptance uses the division-free rule ``u * q(d) < p(d)`` (``u ~
     U[0,1)``), equivalent to ``u < min(1, p(d)/q(d))`` and exact even
     when ``q(d)`` underflows; ``q == p`` therefore accepts everything
     (``u < 1``)."""
     b, k = drafts.shape
+    nd = k if n_draws is None else int(n_draws)
+    if kcap is None:
+        kcap = jnp.full((b,), k, jnp.int32)
 
-    def row(key, d, qr, pr):
+    def row(key, d, qr, pr, kc):
         ku, kf = jax.random.split(key)
-        u = jax.random.uniform(ku, (k,))
+        u = jax.random.uniform(ku, (nd,))[:k]
         qd = jnp.take_along_axis(qr, d[:, None], axis=1)[:, 0]
         pd = jnp.take_along_axis(pr[:k], d[:, None], axis=1)[:, 0]
-        acc = (u * qd < pd).astype(jnp.int32)
+        acc = ((u * qd < pd) & (jnp.arange(k) < kc)).astype(jnp.int32)
         a = jnp.sum(jnp.cumprod(acc))
-        j = jnp.minimum(a, k - 1)  # residual position (clip: a==k uses p[k])
-        dist = jnp.where(a == k, pr[k], residual_dist(pr[j], qr[j]))
+        j = jnp.clip(jnp.minimum(a, kc - 1), 0, k - 1)  # residual position
+        dist = jnp.where(a == kc, pr[jnp.minimum(kc, k)],
+                         residual_dist(pr[j], qr[j]))
         final = jax.random.categorical(kf, jnp.log(dist)).astype(jnp.int32)
         padded = jnp.concatenate([d, d[-1:]])
         return jnp.where(jnp.arange(k + 1) < a, padded, final), a
 
     return jax.vmap(row)(keys, drafts, q.astype(jnp.float32),
-                         p.astype(jnp.float32))
+                         p.astype(jnp.float32), kcap.astype(jnp.int32))
+
+
+def typical_accept_sample(keys, drafts: jnp.ndarray, p: jnp.ndarray, *,
+                          kcap: jnp.ndarray | None = None,
+                          eps: float = 0.3, delta: float = 0.09):
+    """Typical acceptance (entropy-band accept) — the explicitly LOSSY
+    fast mode.  A proposal ``d_i`` is accepted iff ``p_i(d_i) >
+    min(eps, delta * exp(-H(p_i)))``: under a peaked target (low entropy)
+    the draft must carry real target mass, under a flat target almost any
+    plausible draft passes.  No rejection residual is drawn — the token
+    after the accepted prefix is sampled straight from ``p[a]`` — so the
+    emitted prefix is NOT ``p``-distributed (it is biased toward the
+    proposer); callers opt in via ``SpecConfig(accept="typical")``.
+    Signature and return layout mirror ``rejection_sample`` (same
+    ``kcap`` semantics; acceptance itself is deterministic, one
+    categorical draw per row keeps the stream discipline)."""
+    b, k = drafts.shape
+    if kcap is None:
+        kcap = jnp.full((b,), k, jnp.int32)
+
+    def row(key, d, pr, kc):
+        _, kf = jax.random.split(key)
+        pd = jnp.take_along_axis(pr[:k], d[:, None], axis=1)[:, 0]
+        ent = -jnp.sum(jax.scipy.special.xlogy(pr[:k], pr[:k]), axis=-1)
+        thr = jnp.minimum(eps, delta * jnp.exp(-ent))
+        acc = ((pd > thr) & (jnp.arange(k) < kc)).astype(jnp.int32)
+        a = jnp.sum(jnp.cumprod(acc))
+        final = jax.random.categorical(kf, jnp.log(pr[a])).astype(jnp.int32)
+        padded = jnp.concatenate([d, d[-1:]])
+        return jnp.where(jnp.arange(k + 1) < a, padded, final), a
+
+    return jax.vmap(row)(keys, drafts, p.astype(jnp.float32),
+                         kcap.astype(jnp.int32))
+
+
+def tree_reject_sample(keys, chains: jnp.ndarray, p_nodes: jnp.ndarray, *,
+                       kcap: jnp.ndarray | None = None):
+    """Exact rejection-sampling verification of a fan-of-chains candidate
+    tree against point-mass proposals (the multi-candidate n-gram
+    drafter).
+
+    ``chains`` (B, F, D): F candidate continuations of depth D; chain f's
+    node i sits at node index ``1 + f*D + i`` of the verify window (node
+    0 is the shared root = the current token).  ``p_nodes`` (B, 1+F*D, V)
+    are the target's warped distributions in node order: ``p_nodes[0]``
+    is the next-token distribution at the root, ``p_nodes[1+f*D+i]`` the
+    distribution after chain f's prefix through depth i+1.
+
+    Verification is SpecInfer-style sequential elimination at the root:
+    chains are tried in order f = 0..F-1; head ``chains[f, 0]`` is
+    accepted with probability ``p_cur(head)`` (point-mass proposal), on
+    rejection the head's mass is zeroed out of ``p_cur`` and the
+    distribution renormalised (duplicate heads auto-reject — their mass
+    is already gone).  The first accepted head selects its chain, which
+    is then verified by standard single-candidate rejection; a rejection
+    resamples from that node's residual, full acceptance draws the bonus
+    from the last node's distribution, and F straight head rejections
+    sample from the final root residual.  Each outcome is distributed
+    EXACTLY as ancestral sampling from ``p`` (multi-draft speculative
+    sampling).  ``kcap`` caps accepted depth per row exactly as in
+    ``rejection_sample`` (0 = plain sample from the root distribution);
+    draw shapes are fixed at (F + D - 1,) uniforms + one categorical, so
+    the stream is cap-independent.
+
+    Returns ``(tokens (B, D+1), a (B,), cf (B,))``: the row emits
+    ``tokens[:, :a+1]`` and ``cf`` names the accepted chain (0 when
+    ``a == 0``) for cache relocation / SSM state commit."""
+    b, nf, nd = chains.shape
+    if kcap is None:
+        kcap = jnp.full((b,), nd, jnp.int32)
+
+    def row(key, ch, pr, kc):
+        ku, kf = jax.random.split(key)
+        u = jax.random.uniform(ku, (nf + nd - 1,))
+        uh, uc = u[:nf], u[nf:]
+
+        def head_step(carry, f):
+            p_cur, done, cf = carry
+            h = ch[f, 0]
+            tried = jnp.logical_and(jnp.logical_not(done), kc >= 1)
+            acc = jnp.logical_and(tried, uh[f] < p_cur[h])
+            pz = p_cur.at[h].set(0.0)
+            s = jnp.sum(pz)
+            p_rej = jnp.where(s > 0.0, pz / jnp.maximum(s, 1e-38), p_cur)
+            p_cur = jnp.where(jnp.logical_and(tried, jnp.logical_not(acc)),
+                              p_rej, p_cur)
+            cf = jnp.where(acc, f, cf)
+            done = jnp.logical_or(done, acc)
+            return (p_cur, done, cf), acc
+
+        (p_res, got_head, cf), _ = jax.lax.scan(
+            head_step, (pr[0], jnp.bool_(False), jnp.int32(0)),
+            jnp.arange(nf))
+
+        # Chain descent: draft #j (j = 2..D) is ch[cf, j-1], verified
+        # against p_nodes[1 + cf*D + j - 2].
+        base = 1 + cf * nd
+        pdj = jax.vmap(lambda j: pr[base + j - 2][ch[cf, j - 1]])(
+            jnp.arange(2, nd + 1)) if nd > 1 else jnp.zeros((0,))
+        accj = ((uc < pdj) & (jnp.arange(2, nd + 1) <= kc)).astype(jnp.int32)
+        a = jnp.where(got_head, 1 + jnp.sum(jnp.cumprod(accj)), 0)
+
+        cap = jnp.minimum(kc, nd)
+        # a == 0: the final root state — pr[0] untouched when kc == 0
+        # (heads never tried), the eliminated-heads residual otherwise.
+        # a == cap: bonus from the last accepted node's distribution.
+        # 0 < a < cap: residual of node a's distribution with the
+        # rejected draft ch[cf, a] zeroed (point-mass proposal).
+        last = jnp.clip(base + a - 1, 0, pr.shape[0] - 1)
+        rej_tok = ch[cf, jnp.clip(a, 0, nd - 1)]
+        onehot = jax.nn.one_hot(rej_tok, pr.shape[1], dtype=jnp.float32)
+        dist = jnp.where(a == 0, p_res,
+                         jnp.where(a == cap, pr[last],
+                                   residual_dist(pr[last], onehot)))
+        final = jax.random.categorical(kf, jnp.log(dist)).astype(jnp.int32)
+        padded = jnp.concatenate([ch[cf], ch[cf, -1:]])
+        return (jnp.where(jnp.arange(nd + 1) < a, padded, final), a, cf)
+
+    return jax.vmap(row)(keys, chains, p_nodes.astype(jnp.float32),
+                         kcap.astype(jnp.int32))

@@ -51,16 +51,17 @@ ENGINE_KINDS = ("fixed", "continuous")
 # Dense-cache and paged-cache logits are BIT-IDENTICAL for these archs
 # (measured: ``verify_step`` and ``decode_step`` agree to the last bit
 # across the two cache layouts), so cross-engine SAMPLED decode is
-# key-exact for them.  The two moe archs are excluded: their expert top-k
-# gates amplify sub-ulp contraction-order differences between the layouts
-# into ~1e-3 logit shifts (pre-existing since the PR 2 paged cache —
-# greedy parity passes on argmax margins), which can flip a sampled draw
-# sitting within 1e-3 of its accept boundary.  Their cross-engine
-# guarantee is therefore distributional (the chi-square leg covers all
-# seven archs); their per-engine sampled decode is still key-exact.
-PAGED_BITEXACT_ARCHS = [a for a in FAMILY_ARCHS
-                        if a not in ("deepseek-v2-lite-16b",
-                                     "moonshot-v1-16b-a3b")]
+# key-exact for them.  This now includes the two moe archs, which took a
+# two-part fix in models.moe.moe_apply: (1) dispatch groups never span
+# rows, so a token's capacity drops depend on its own row alone and
+# batched prefill vs batch-1 admit route identically (the old
+# flatten-all-rows grouping let row 0 pre-fill row 1's expert buffers,
+# ~1e-2 logit swings); (2) the expert combine reduces over the fixed
+# top-k axis, so its reduction tree no longer depends on the dispatch
+# capacity (the old joint (E*C) combine amplified contraction-order ulps
+# into ~1e-3 logit shifts that could flip sampled draws near accept
+# boundaries).
+PAGED_BITEXACT_ARCHS = list(FAMILY_ARCHS)
 
 
 def setup_family(arch, b=2, s=8, key=0, kv_bits=0):

@@ -1,0 +1,481 @@
+"""Adaptive speculation: the per-request acceptance-EMA controller that
+makes speculation pay (or get out of the way) under load.
+
+Contracts under test (see serving.speculative's module docstring):
+
+* **Greedy token identity at ANY window schedule** — adaptive speculation,
+  alone or composed with the degradation ladder and chaos, emits exactly
+  the plain greedy engine's tokens: an accepted token is always the
+  argmax the baseline would have produced, and narrowing/widening the
+  window only changes how many verify steps are paid.
+* **Sampled**: run-to-run determinism for a fixed key, and distributional
+  equivalence with plain sampled decode (the controller's k is a
+  deterministic function of already-emitted data, so rejection sampling
+  stays exact by induction over windows).  Cross-engine token identity is
+  NOT claimed for sampled adaptive — the fixed engine picks k in-loop
+  per iteration while the continuous engine picks per scheduling round,
+  so the two consume different draw layouts (the repo's ladder precedent:
+  degraded-schedule parity is greedy-only).
+* **Controller economics** — the batch-aggregate bucket argmax collapses
+  to plain decode (k=0) on hostile/random text, re-grows on repetitive
+  text via the k=0 free probe, and resolves ties toward the smaller
+  window.
+* **n-gram history warm-rebuild** — the proposer's history row equals
+  prompt + every emission after every speculative chunk, across ladder
+  no_spec rounds, recompute preemption, and crash-replay resume
+  (``engine.debug_check_hist`` turns the invariant into a hard assert).
+* **Typical acceptance** — the explicitly lossy entropy-band mode:
+  deterministic for a fixed key, and degenerating to plain sampled decode
+  when the acceptance band is empty (eps=0 rejects every proposal, so
+  every token comes from the target's own distribution).
+
+Also home to the moe bit-exactness regression that underpins the parity
+matrices above: batched-vs-rowwise moe routing must be BIT-identical even
+at stock (dropping) capacity — the two-part fix (per-row dispatch groups +
+exact top-k combine) is what promoted the moe archs into
+helpers.PAGED_BITEXACT_ARCHS.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import (
+    PAGED_BITEXACT_ARCHS,
+    assert_distributions_match,
+    assert_tokens_identical,
+    batch_requests,
+    histogram_decode,
+    setup_family,
+)
+
+from repro.serving import (
+    ChaosConfig,
+    ContinuousBatchingEngine,
+    FaultInjector,
+    LadderConfig,
+    Request,
+    ResiliencePolicy,
+    ServingEngine,
+    ServingSupervisor,
+    SpecConfig,
+)
+from repro.serving.resilience import InflightState, ServeSnapshot
+from repro.serving.speculative import adaptive_k_host, ctrl_buckets
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ADAPTIVE = SpecConfig(k=4, adaptive=True)
+
+
+# ------------------------------------------------------------- controller --
+def test_ctrl_buckets_are_powers_of_two_up_to_k():
+    assert ctrl_buckets(1) == (0, 1)
+    assert ctrl_buckets(4) == (0, 1, 2, 4)
+    assert ctrl_buckets(6) == (0, 1, 2, 4, 6)
+    assert ctrl_buckets(8) == (0, 1, 2, 4, 8)
+
+
+def test_adaptive_k_host_grows_with_acceptance():
+    spec = SpecConfig(k=8, adaptive=True)
+    live = np.ones(4, bool)
+    assert adaptive_k_host(np.full(4, 0.99, np.float32), live, spec) == 8
+    assert adaptive_k_host(np.full(4, 0.0, np.float32), live, spec) == 0
+    lo = adaptive_k_host(np.full(4, 0.3, np.float32), live, spec)
+    hi = adaptive_k_host(np.full(4, 0.9, np.float32), live, spec)
+    assert 0 < lo < hi <= 8
+
+
+def test_adaptive_k_host_ignores_dead_slots_and_empty_batch():
+    spec = SpecConfig(k=4, adaptive=True)
+    ema = np.asarray([0.99, 0.0], np.float32)
+    assert adaptive_k_host(ema, np.asarray([True, False]), spec) == 4
+    assert adaptive_k_host(ema, np.asarray([False, True]), spec) == 0
+    assert adaptive_k_host(ema, np.zeros(2, bool), spec) == 0
+
+
+def test_adaptive_k_host_tie_prefers_smaller_window():
+    # e=0 makes every bucket's expected emissions 1.0; only the cost
+    # denominator differs, so the argmax must land on the narrowest
+    # window even under float tie noise.
+    spec = SpecConfig(k=4, adaptive=True)
+    assert adaptive_k_host(np.zeros(3, np.float32), np.ones(3, bool),
+                           spec) == 0
+
+
+def test_spec_config_validation_new_modes():
+    with pytest.raises(ValueError, match="tree"):
+        SpecConfig(k=2, tree_fan=2, mode="draft")
+    with pytest.raises(ValueError, match="exclusive"):
+        SpecConfig(k=2, tree_fan=2, adaptive=True)
+    with pytest.raises(ValueError, match="linear-only"):
+        SpecConfig(k=2, tree_fan=2, accept="typical")
+    with pytest.raises(ValueError, match="accept"):
+        SpecConfig(k=2, accept="nearly")
+    with pytest.raises(ValueError, match="ctrl_alpha"):
+        SpecConfig(k=2, adaptive=True, ctrl_alpha=0.0)
+    with pytest.raises(ValueError, match="ctrl_cost"):
+        SpecConfig(k=2, adaptive=True, ctrl_cost=-1.0)
+    with pytest.raises(ValueError, match="tree_fan"):
+        SpecConfig(k=2, tree_fan=-1)
+
+
+# ------------------------------------------------- greedy parity matrices --
+# The matrices run at the same horizon as test_speculative's (n_new=5,
+# max_seq=16).  Speculative greedy parity for the MOE archs is
+# horizon-limited for ANY window mode, fixed or adaptive: a token that
+# shares a verify window with row-mates can be capacity-dropped where the
+# same token decoded alone never is, so once a drop fires inside a window
+# the spec trace forks from plain decode (measured: moonshot forks at
+# token 8 under k=4, fixed and adaptive alike).  Dense-vs-paged and
+# cross-engine parity — the contracts PAGED_BITEXACT_ARCHS names — are
+# unaffected: both sides run the same windows.
+@pytest.mark.parametrize("arch", PAGED_BITEXACT_ARCHS)
+def test_adaptive_fixed_engine_greedy_parity(arch):
+    """Fixed engine, every family: adaptive greedy == plain greedy,
+    token-for-token (the in-loop controller only caps acceptance)."""
+    cfg, params, prompt, extras = setup_family(arch)
+    eng = ServingEngine(cfg, params, max_seq=16)
+    want = np.asarray(eng.generate(prompt, n_new=5, extras=extras))
+    got = np.asarray(eng.generate(prompt, n_new=5, extras=extras,
+                                  speculate=ADAPTIVE))
+    assert_tokens_identical(want, got, msg=arch)
+    assert eng.spec_stats["adaptive"] is True
+
+
+@pytest.mark.parametrize("arch", PAGED_BITEXACT_ARCHS)
+def test_adaptive_continuous_engine_greedy_parity(arch):
+    """Continuous engine, every family: the host controller re-picks the
+    round's window width from the returned EMAs (down to plain decode)
+    and tokens still match the non-speculative scheduler exactly."""
+    cfg, params, prompt, extras = setup_family(arch)
+    kw = dict(slots=2, max_seq=16, page_size=4, chunk=3)
+    reqs = batch_requests(prompt, 5, extras)
+    want = ContinuousBatchingEngine(cfg, params, **kw).serve(reqs)
+    eng = ContinuousBatchingEngine(cfg, params, speculate=ADAPTIVE, **kw)
+    eng.debug_check_hist = True
+    got = eng.serve(reqs)
+    for i, (w, g) in enumerate(zip(want, got)):
+        assert_tokens_identical(w, g, msg=f"{arch} req {i}")
+
+
+def test_adaptive_long_horizon_greedy_parity_dense():
+    """Longer horizon (24 tokens) on the dense family, where no moe
+    window-drop caveat applies: adaptive == plain, both engines."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=40)
+    want = np.asarray(eng.generate(prompt, n_new=24, extras=extras))
+    got = np.asarray(eng.generate(prompt, n_new=24, extras=extras,
+                                  speculate=ADAPTIVE))
+    assert_tokens_identical(want, got, msg="fixed long horizon")
+    kw = dict(slots=2, max_seq=40, page_size=4, chunk=3)
+    reqs = batch_requests(prompt, 24, extras)
+    cw = ContinuousBatchingEngine(cfg, params, **kw).serve(reqs)
+    ce = ContinuousBatchingEngine(cfg, params, speculate=ADAPTIVE, **kw)
+    ce.debug_check_hist = True
+    cg = ce.serve(reqs)
+    for i, (w, g) in enumerate(zip(cw, cg)):
+        assert_tokens_identical(w, g, msg=f"continuous long req {i}")
+
+
+def test_adaptive_collapses_to_plain_decode_on_hostile_text():
+    """When the proposer can't win — temperature-1.0 sampling over the
+    full vocab churns the continuation too fast for n-gram lookup — the
+    controller must spend the trace at k=0, which is visible as exactly
+    one emission per live verify window (k=0 windows ARE plain decode
+    steps, priced as such by serving_bench).  Greedy is deliberately NOT
+    used here: the tiny model's greedy continuation degenerates into
+    repetition, which the proposer legitimately wins."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    spec = SpecConfig(k=4, adaptive=True, ctrl_init=0.0)
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=40,
+                                   page_size=4, chunk=4, speculate=spec)
+    eng.serve(batch_requests(prompt, 24, extras), greedy=False,
+              temperature=1.0, top_k=0, key=jax.random.PRNGKey(5))
+    assert eng.spec_emitted == eng.spec_live_steps
+
+
+def test_adaptive_regrows_on_repetitive_text():
+    """A strongly periodic prompt makes the n-gram proposer near-perfect:
+    the k=0 probe must pull the EMA up and the controller back to wide
+    windows — measurable as >1 emitted token per live window."""
+    cfg, params, _, _ = setup_family("qwen2-1.5b")
+    p = np.asarray([5, 9, 5, 9, 5, 9, 5, 9], np.int32)
+    spec = SpecConfig(k=4, adaptive=True, ctrl_init=0.0)
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=48,
+                                   page_size=4, chunk=4, speculate=spec)
+    eng.serve([Request(prompt=p, max_new=32), Request(prompt=p, max_new=32)])
+    assert eng.spec_emitted / eng.spec_live_steps > 1.2
+
+
+# ------------------------------------------------------- sampled contracts --
+def _sampled_serve(spec, key, *, greedy=False, arch="qwen2-1.5b", n_new=12):
+    cfg, params, prompt, extras = setup_family(arch)
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_seq=24,
+                                   page_size=4, chunk=3, speculate=spec)
+    outs = eng.serve(batch_requests(prompt, n_new, extras), greedy=greedy,
+                     temperature=0.8, top_k=8, key=key)
+    return [np.asarray(o) for o in outs]
+
+
+def test_adaptive_sampled_deterministic_and_key_sensitive():
+    k1, k2 = jax.random.PRNGKey(11), jax.random.PRNGKey(12)
+    a = _sampled_serve(ADAPTIVE, k1)
+    b = _sampled_serve(ADAPTIVE, k1)
+    c = _sampled_serve(ADAPTIVE, k2)
+    for i, (x, y) in enumerate(zip(a, b)):
+        assert_tokens_identical(x, y, msg=f"req {i} not deterministic")
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c)), \
+        "different keys produced identical traces"
+
+
+def test_adaptive_fixed_engine_sampled_deterministic():
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=24)
+    kw = dict(extras=extras, greedy=False, temperature=0.8, top_k=8,
+              speculate=ADAPTIVE, key=jax.random.PRNGKey(11))
+    a = np.asarray(eng.generate(prompt, n_new=12, **kw))
+    b = np.asarray(eng.generate(prompt, n_new=12, **kw))
+    assert_tokens_identical(a, b, msg="fixed adaptive sampled")
+
+
+def test_adaptive_sampled_distribution_matches_plain():
+    """Distributional equivalence: the controller's k schedule is a
+    deterministic function of already-emitted data, so adaptive sampled
+    speculation leaves plain sampled decode's output law unchanged —
+    chi-square over seeded decodes at the last emitted position."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b", b=1, s=6)
+    batch = 250
+    prompt = jnp.tile(prompt, (batch, 1))
+    eng = ServingEngine(cfg, params, max_seq=16)
+
+    def gen(spec):
+        def f(key):
+            return eng.generate(prompt, n_new=3, extras=extras, greedy=False,
+                                temperature=1.0, top_k=0, key=key,
+                                speculate=spec)
+        return f
+
+    plain = histogram_decode(gen(None), cfg.vocab, 750, base_seed=100)
+    adapt = histogram_decode(gen(ADAPTIVE), cfg.vocab, 750, base_seed=900)
+    assert_distributions_match(plain, adapt, msg="adaptive vs plain sampled")
+
+
+# ------------------------------------------------ typical acceptance mode --
+def test_typical_mode_deterministic_and_in_vocab():
+    spec = SpecConfig(k=4, accept="typical")
+    key = jax.random.PRNGKey(11)
+    a = _sampled_serve(spec, key)
+    b = _sampled_serve(spec, key)
+    cfg, _, _, _ = setup_family("qwen2-1.5b")
+    for i, (x, y) in enumerate(zip(a, b)):
+        assert_tokens_identical(x, y, msg=f"typical req {i}")
+        assert (x >= 0).all() and (x < cfg.vocab).all()
+
+
+def test_typical_accepts_more_than_exact_on_hostile_text():
+    """The lossy trade, measured: exact verification accepts a proposal
+    with probability p(d) — near 1/V on temperature-1.0 text — while the
+    typical band accepts DETERMINISTICALLY once p(d) clears
+    ``min(eps, delta*exp(-H))``, which a near-uniform target sets well
+    below 1/V.  So on hostile text typical must emit strictly more
+    tokens per verify window than exact; that surplus IS the bias the
+    mode trades for throughput (there is no parameter that recovers
+    exactness — eps=0 still accepts any nonzero-mass draft)."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+
+    def run(accept):
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=2, max_seq=40, page_size=4, chunk=4,
+            speculate=SpecConfig(k=4, accept=accept))
+        eng.serve(batch_requests(prompt, 24, extras), greedy=False,
+                  temperature=1.0, top_k=0, key=jax.random.PRNGKey(5))
+        return eng.spec_emitted / eng.spec_live_steps
+
+    assert run("typical") > run("exact")
+
+
+def test_typical_adaptive_compose():
+    """adaptive=True with accept='typical' is legal (the controller
+    schedules, typical accepts) and stays deterministic."""
+    spec = SpecConfig(k=4, adaptive=True, accept="typical")
+    key = jax.random.PRNGKey(13)
+    a = _sampled_serve(spec, key)
+    b = _sampled_serve(spec, key)
+    for x, y in zip(a, b):
+        assert_tokens_identical(x, y)
+
+
+# ------------------------------------- ladder / chaos / replay composition --
+def test_adaptive_with_ladder_and_chaos_greedy_parity():
+    """The full composition: adaptive controller x degradation ladder x
+    chaos (stragglers + page squeezes) — greedy tokens must match the
+    undisturbed non-speculative run for every request that finishes, and
+    the n-gram history invariant holds after every chunk."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    reqs = batch_requests(prompt, 16, extras)
+    kw = dict(slots=2, max_seq=32, page_size=4, chunk=2)
+    want = ContinuousBatchingEngine(cfg, params, **kw).serve(reqs)
+    eng = ContinuousBatchingEngine(cfg, params, speculate=ADAPTIVE, **kw)
+    eng.debug_check_hist = True
+    report = eng.serve_detailed(
+        reqs,
+        chaos=FaultInjector(ChaosConfig(straggle_rounds=(0, 1),
+                                        squeeze_rounds=(3,),
+                                        squeeze_frac=0.5)),
+        policy=ResiliencePolicy(ladder=LadderConfig(cooldown=2)))
+    assert report.max_ladder_level >= 1  # the ladder actually engaged
+    for i, rec in enumerate(report.records):
+        assert rec.status == "done"
+        assert_tokens_identical(want[i], rec.tokens, msg=f"req {i}")
+    eng.assert_quiescent()
+
+
+def test_adaptive_crash_replay_greedy_token_identical():
+    """Crash replay with the controller on: the snapshot carries each
+    in-flight request's acc_ema, the resumed engine keeps scheduling from
+    the learned rate, and greedy tokens replay exactly."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    reqs = batch_requests(prompt, 12, extras)
+    kw = dict(slots=2, max_seq=24, page_size=4, chunk=3, speculate=ADAPTIVE)
+    want = ContinuousBatchingEngine(cfg, params, **kw).serve(reqs)
+    eng = ContinuousBatchingEngine(cfg, params, **kw)
+    eng.debug_check_hist = True
+    sup = ServingSupervisor(
+        eng, policy=ResiliencePolicy(),
+        chaos=FaultInjector(ChaosConfig(crash_rounds=(1,))))
+    report = sup.run(reqs)
+    assert report.restarts == 1
+    for i, rec in enumerate(report.records):
+        assert rec.status == "done"
+        assert_tokens_identical(want[i], rec.tokens, msg=f"req {i}")
+
+
+def test_hist_warm_rebuild_under_preemption_and_ladder():
+    """The n-gram history audit: a page pool tight enough to force
+    recompute preemption, plus scripted bad rounds driving the ladder
+    through halve_k/no_spec and back — after every speculative chunk each
+    live slot's history row must equal prompt + emissions exactly
+    (debug_check_hist raises otherwise), and the output still matches the
+    undisturbed plain run."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    reqs = batch_requests(prompt, 16, extras)
+    base_kw = dict(slots=2, max_seq=32, page_size=4, chunk=2)
+    want = ContinuousBatchingEngine(cfg, params, **base_kw).serve(reqs)
+    # num_pages below the 2-slot worst case => top-ups preempt the
+    # youngest slot mid-stream; the preempted request re-admits fresh
+    # with its history rebuilt whole.
+    eng = ContinuousBatchingEngine(cfg, params, speculate=ADAPTIVE,
+                                   num_pages=13, **base_kw)
+    eng.debug_check_hist = True
+    report = eng.serve_detailed(
+        reqs,
+        chaos=FaultInjector(ChaosConfig(straggle_rounds=(0, 1, 2))),
+        policy=ResiliencePolicy(ladder=LadderConfig(cooldown=1)))
+    for i, rec in enumerate(report.records):
+        assert rec.status == "done"
+        assert_tokens_identical(want[i], rec.tokens, msg=f"req {i}")
+    eng.assert_quiescent()
+
+
+def test_inflight_snapshot_roundtrips_acc_ema(tmp_path):
+    """acc_ema rides the JSON snapshot, and snapshots written before the
+    field existed still load (default)."""
+    snap = ServeSnapshot(
+        finished={0: [1, 2]},
+        inflight={1: InflightState(emitted=[3], wctr=2, acc_ema=0.875)},
+        queued=[2], closed={}, round=5)
+    import json
+
+    j = snap.to_json()
+    back = ServeSnapshot.from_json(j)
+    assert back.inflight[1].acc_ema == 0.875
+    legacy = json.loads(j)
+    legacy["inflight"] = {"1": {"emitted": [3], "wctr": 2,
+                                "t_admit": None, "t_first": None}}
+    assert (ServeSnapshot.from_json(json.dumps(legacy))
+            .inflight[1].acc_ema == 0.5)
+
+
+# ------------------------------------------------- 8-device mesh identity --
+ADAPTIVE_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import numpy as np
+import jax
+sys.path.insert(0, os.path.join(r"{repo}", "tests"))
+from helpers import setup_family, build_engine, generate_tokens, batch_requests
+from repro.serving import SpecConfig, make_decode_mesh
+
+ARCHS = sys.argv[1].split(",")
+mesh = make_decode_mesh(8)
+spec = SpecConfig(k=4, adaptive=True)
+out = []
+for arch in ARCHS:
+    cfg, params, prompt, extras = setup_family(arch)
+    row = {{"arch": arch}}
+    plain = build_engine("fixed", cfg, params, max_seq=16, bits=8)
+    shard = build_engine("fixed", cfg, params, max_seq=16, bits=8, mesh=mesh)
+    want = generate_tokens(plain, prompt, 5, extras)
+    got = generate_tokens(shard, prompt, 5, extras, speculate=spec)
+    row["fixed_identical"] = bool(np.array_equal(want, got))
+    pl = build_engine("continuous", cfg, params, max_seq=16, bits=8,
+                      page_alloc_seed=7)
+    sh = build_engine("continuous", cfg, params, max_seq=16, bits=8,
+                      page_alloc_seed=7, mesh=mesh, speculate=spec)
+    a = pl.serve(batch_requests(prompt, 5, extras))
+    b = sh.serve(batch_requests(prompt, 5, extras))
+    row["paged_identical"] = bool(all(np.array_equal(x, y)
+                                      for x, y in zip(a, b)))
+    out.append(row)
+print("RESULT " + json.dumps(out))
+""".format(repo=REPO)
+
+
+def test_adaptive_sharded_greedy_identity_all_families():
+    """Acceptance: adaptive speculation on a forced 8-virtual-device mesh
+    == plain single-device greedy, both engines, all families (the
+    controller state is replicated, so every device schedules the same
+    window widths)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", ADAPTIVE_SNIPPET,
+         ",".join(PAGED_BITEXACT_ARCHS)],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    import json
+    for row in json.loads(line[len("RESULT "):]):
+        assert row["fixed_identical"], row
+        assert row["paged_identical"], row
+
+
+# --------------------------------------------------- moe gate bit-exactness --
+def test_moe_batched_vs_rowwise_bitexact_at_stock_capacity():
+    """The satellite fix behind the parity matrices: moe routing is a
+    per-row function (dispatch groups never span rows) and the top-k
+    combine reduces over the fixed k axis, so a batch of 4 rows and the
+    same rows run one-at-a-time produce BIT-identical outputs even at
+    stock (dropping) capacity.  Guards both halves of the fix that
+    promoted the moe archs into PAGED_BITEXACT_ARCHS."""
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as M
+
+    d = 32
+    cfg = MoEConfig(n_experts=8, n_shared=1, top_k=3, d_ff_expert=64,
+                    capacity_factor=1.25, group_tokens=4096)
+    kp, kx = jax.random.split(jax.random.PRNGKey(0))
+    p = M.moe_init(kp, d, cfg, jnp.float32)
+    x = jax.random.normal(kx, (4, 16, d), jnp.float32)
+    batched = M.moe_apply(p, x, cfg)[0]
+    rows = jnp.concatenate(
+        [M.moe_apply(p, x[i : i + 1], cfg)[0] for i in range(4)], 0)
+    assert bool(jnp.all(batched == rows)), (
+        f"max|diff|={float(jnp.max(jnp.abs(batched - rows))):.3e}")

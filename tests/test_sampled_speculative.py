@@ -251,9 +251,10 @@ def test_sampled_spec_deterministic_and_key_sensitive():
 @pytest.mark.parametrize("arch", PAGED_BITEXACT_ARCHS)
 def test_sampled_parity_plain_all_families(arch):
     """Plain temperature/top-k generate: same key => identical tokens on the
-    dense fixed engine and the paged continuous engine, for every arch
-    whose two cache layouts are bit-identical (the moe archs' cross-engine
-    guarantee is distributional — see helpers.PAGED_BITEXACT_ARCHS)."""
+    dense fixed engine and the paged continuous engine, for every arch —
+    all seven families are bit-identical across the two cache layouts now
+    that the moe expert combine reduces over the fixed top-k axis (see
+    helpers.PAGED_BITEXACT_ARCHS)."""
     cfg, params, prompt, extras = setup_family(arch)
     assert_sampled_parity(cfg, params, prompt, extras, msg=arch)
 
@@ -262,9 +263,8 @@ def test_sampled_parity_plain_all_families(arch):
 def test_sampled_spec_parity_all_families(arch):
     """Sampled SPECULATIVE decode (rejection-sampling verification): same
     key => identical tokens across dense/paged engines — the single-device
-    dense-vs-paged leg of the acceptance matrix (bit-exact archs; the moe
-    archs are covered by the chi-square leg plus the per-engine exactness
-    test below)."""
+    dense-vs-paged leg of the acceptance matrix, now covering all seven
+    families including the moe archs (exact top-k combine)."""
     cfg, params, prompt, extras = setup_family(arch)
     assert_sampled_parity(cfg, params, prompt, extras,
                           speculate=SpecConfig(k=4), msg=arch)
@@ -273,12 +273,11 @@ def test_sampled_spec_parity_all_families(arch):
 @pytest.mark.parametrize("arch", ["deepseek-v2-lite-16b",
                                   "moonshot-v1-16b-a3b"])
 def test_sampled_spec_moe_per_engine_exactness(arch):
-    """The moe archs' dense-vs-paged logits differ ~1e-3 (expert gates
-    amplify contraction-order ulps — pre-existing since PR 2), so their
-    cross-engine sampled comparison is distributional, not bitwise.  What
-    MUST still hold per engine: key-determinism, and schedule independence
-    on the paged engine (slot count / chunk size / page permutation never
-    change a request's sampled tokens)."""
+    """moe-specific determinism knobs beyond the cross-engine parity the
+    archs now meet (exact top-k combine promoted them into
+    PAGED_BITEXACT_ARCHS): key-determinism on the fixed engine, and
+    schedule independence on the paged engine (slot count / chunk size /
+    page permutation never change a request's sampled tokens)."""
     cfg, params, prompt, extras = setup_family(arch)
     key = jax.random.PRNGKey(11)
     kw = dict(greedy=False, temperature=0.8, top_k=8, key=key)
@@ -650,8 +649,8 @@ def test_sampled_spec_sharded_key_identity_all_families():
     sharding never changes a sampled draw.  The dense-vs-paged axis is
     asserted in-process at a single lowering
     (test_sampled_spec_parity_all_families): the two cache layouts' logits
-    are bit-equal per arch there, which a cross-topology comparison cannot
-    promise (the moe gates amplify contraction-order ulps)."""
+    are bit-equal per arch there — all seven families since the exact moe
+    top-k combine."""
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     env.pop("XLA_FLAGS", None)
     r = subprocess.run(

@@ -1,0 +1,327 @@
+"""Tree (multi-candidate) speculative decoding: fan-of-chains drafts
+verified in ONE target pass through shared-prefix attention.
+
+The proposer keeps the top ``tree_fan`` history matches instead of only
+the most recent (``propose_ngram_tree``; chain 0 IS the linear
+proposer's pick).  ``models.verify_step(tree=(fan, depth))`` scores the
+1 + fan*depth node window with tree-structured masking — every chain
+attends to the shared root and its own prefix only — and acceptance
+picks one chain: longest greedy prefix (``greedy_tree_accept``) or
+SpecInfer-style sequential head elimination (``tree_reject_sample``,
+exact multi-draft speculative sampling).  The winning chain's cache
+columns are relocated into canonical positions (``models.tree_relocate``)
+before commit, on dense AND paged layouts.
+
+Contracts under test:
+
+* **Greedy token identity** — tree speculation emits exactly plain
+  greedy's tokens on every family, both engines (same moe horizon caveat
+  as linear speculation; see test_adaptive_spec).
+* **Sampled cross-engine identity** — unlike adaptive, the tree schedule
+  is static (fixed window shape, fixed draw shapes F+D-1 uniforms + one
+  categorical per window), so the SAME key gives IDENTICAL sampled
+  tokens on the dense fixed engine and the paged continuous engine.
+* **Degeneration** — a fan-1 tree is linear speculation: greedy output
+  matches ``SpecConfig(k=depth)`` exactly.
+* **Distribution preservation** — exact tree verification leaves plain
+  sampled decode's output law unchanged (chi-square).
+* **Relocation** — long-horizon paged runs cross page boundaries with
+  relocated columns and still match plain decode bit-for-bit.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import (
+    PAGED_BITEXACT_ARCHS,
+    assert_distributions_match,
+    assert_sampled_parity,
+    assert_tokens_identical,
+    batch_requests,
+    histogram_decode,
+    setup_family,
+)
+
+from repro.serving import ContinuousBatchingEngine, ServingEngine, SpecConfig
+from repro.serving.sampling import tree_reject_sample, typical_accept_sample
+from repro.serving.speculative import (
+    greedy_tree_accept,
+    propose_ngram,
+    propose_ngram_tree,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TREE = SpecConfig(k=2, tree_fan=2)
+
+
+# ---------------------------------------------------------------- proposer --
+def test_tree_proposer_chain0_is_linear_proposer():
+    hist = jnp.asarray([[5, 9, 5, 9, 5, 0, 0, 0],
+                        [1, 2, 3, 1, 2, 3, 1, 0]], jnp.int32)
+    hlen = jnp.asarray([5, 7], jnp.int32)
+    lin = propose_ngram(hist, hlen, 3, 2)
+    tree = propose_ngram_tree(hist, hlen, fan=2, depth=3, n=2)
+    assert tree.shape == (2, 2, 3)
+    np.testing.assert_array_equal(np.asarray(tree[:, 0]), np.asarray(lin))
+
+
+def test_tree_proposer_distinct_matches_and_fallback():
+    # Row 0: [7,8,X,7,8,Y,7,8] — the trailing (7,8) matched at two earlier
+    # sites with DIFFERENT continuations; most recent first.
+    hist = jnp.asarray([[7, 8, 3, 7, 8, 4, 7, 8, 0, 0]], jnp.int32)
+    tree = propose_ngram_tree(hist, jnp.asarray([8]), fan=2, depth=1, n=2)
+    assert np.asarray(tree[0, :, 0]).tolist() == [4, 3]
+    # No match anywhere: every chain falls back to repeating last token.
+    hist2 = jnp.asarray([[1, 2, 3, 4, 5, 0, 0, 0]], jnp.int32)
+    tree2 = propose_ngram_tree(hist2, jnp.asarray([5]), fan=2, depth=2, n=2)
+    assert (np.asarray(tree2) == 5).all()
+
+
+# -------------------------------------------------------------- acceptance --
+def _onehot_logits(tokens, vocab=16, scale=10.0):
+    """Logits whose argmax (and ~all softmax mass) is ``tokens``."""
+    return scale * jax.nn.one_hot(jnp.asarray(tokens), vocab)
+
+
+def test_greedy_tree_accept_picks_longest_chain():
+    # fan=2, depth=2.  Node order: [root, c0s0, c0s1, c1s0, c1s1].
+    # Target's argmax: root->4, after c0's 5 -> 9, after c1's 4 -> 6,
+    # after c1's 6 -> 8.  Chain 0 = [5, 9] matches 0 steps (5 != 4);
+    # chain 1 = [4, 6] matches both and earns the bonus 8.
+    chains = jnp.asarray([[[5, 9], [4, 6]]], jnp.int32)
+    logits = _onehot_logits([[4, 9, 7, 6, 8]])
+    toks, a, cf = greedy_tree_accept(chains, logits)
+    assert (int(a[0]), int(cf[0])) == (2, 1)
+    assert np.asarray(toks[0]).tolist() == [4, 6, 8]
+
+
+def test_greedy_tree_accept_tie_prefers_chain0_and_kcap_caps():
+    # Both chains match 1 step: lowest index (the linear chain) wins.
+    chains = jnp.asarray([[[4, 9], [4, 6]]], jnp.int32)
+    logits = _onehot_logits([[4, 1, 2, 3, 5]])
+    toks, a, cf = greedy_tree_accept(chains, logits)
+    assert (int(a[0]), int(cf[0])) == (1, 0)
+    assert np.asarray(toks[0])[:2].tolist() == [4, 1]
+    _, a0, _ = greedy_tree_accept(chains, logits,
+                                  kcap=jnp.asarray([0], jnp.int32))
+    assert int(a0[0]) == 0
+
+
+def test_tree_reject_sample_accepts_dominant_chain():
+    """Target mass concentrated on chain 1's path => chain 1 fully
+    accepted with probability ~1, bonus from the last node."""
+    chains = jnp.asarray([[[5, 9], [4, 6]]], jnp.int32)
+    p = jax.nn.softmax(_onehot_logits([[4, 9, 7, 6, 8]], scale=30.0))
+    keys = jax.random.split(jax.random.PRNGKey(0), 1)
+    toks, a, cf = tree_reject_sample(keys, chains, p)
+    assert (int(a[0]), int(cf[0])) == (2, 1)
+    assert np.asarray(toks[0]).tolist() == [4, 6, 8]
+
+
+def test_tree_reject_sample_rejects_zero_mass_heads():
+    """Target puts zero mass on BOTH heads: every head rejects and the
+    emitted token comes from the double-residual — never a head, and the
+    kcap=0 row plain-samples the root distribution."""
+    chains = jnp.asarray([[[5, 9], [4, 6]]], jnp.int32)
+    p = jax.nn.softmax(_onehot_logits([[7, 1, 1, 1, 1]], scale=30.0))
+    for seed in range(6):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 1)
+        toks, a, cf = tree_reject_sample(keys, chains, p)
+        assert int(a[0]) == 0
+        assert int(toks[0, 0]) not in (5, 4)
+        toks0, a0, _ = tree_reject_sample(keys, chains, p,
+                                          kcap=jnp.asarray([0], jnp.int32))
+        assert int(a0[0]) == 0 and int(toks0[0, 0]) == 7
+
+
+def test_typical_accept_band():
+    """The entropy band: an on-mass draft under a peaked target clears
+    ``min(eps, delta*exp(-H))`` and is accepted DETERMINISTICALLY (no
+    coin flip — this is where typical beats exact on acceptance); an
+    off-mass draft falls below the band, the prefix stops, and the next
+    token is sampled from the target's own distribution at the cut."""
+    keys = jax.random.split(jax.random.PRNGKey(0), 1)
+    p = jax.nn.softmax(_onehot_logits([[4, 9, 3]], scale=30.0))
+    toks, a = typical_accept_sample(keys, jnp.asarray([[4, 9]], jnp.int32), p)
+    assert int(a[0]) == 2 and np.asarray(toks[0])[:2].tolist() == [4, 9]
+    toks0, a0 = typical_accept_sample(keys, jnp.asarray([[7, 7]], jnp.int32),
+                                      p)
+    assert int(a0[0]) == 0 and int(toks0[0, 0]) == 4  # p0's argmax mass
+    # kcap=0 still plain-samples from p0 regardless of the band.
+    tc, ac = typical_accept_sample(keys, jnp.asarray([[4, 9]], jnp.int32), p,
+                                   kcap=jnp.asarray([0], jnp.int32))
+    assert int(ac[0]) == 0 and int(tc[0, 0]) == 4
+
+
+# ------------------------------------------------------------------ parity --
+@pytest.mark.parametrize("arch", PAGED_BITEXACT_ARCHS)
+def test_tree_fixed_engine_greedy_parity(arch):
+    """Fixed engine, every family: fan-2 depth-2 tree greedy == plain
+    greedy (tree masking + relocation leave the emitted argmaxes
+    untouched)."""
+    cfg, params, prompt, extras = setup_family(arch)
+    eng = ServingEngine(cfg, params, max_seq=16)
+    want = np.asarray(eng.generate(prompt, n_new=5, extras=extras))
+    got = np.asarray(eng.generate(prompt, n_new=5, extras=extras,
+                                  speculate=TREE))
+    assert_tokens_identical(want, got, msg=arch)
+    assert eng.spec_stats["tree_fan"] == 2
+
+
+@pytest.mark.parametrize("arch", PAGED_BITEXACT_ARCHS)
+def test_tree_continuous_engine_greedy_parity(arch):
+    """Continuous engine, every family: paged tree verify + column
+    relocation == the plain paged scheduler, token-for-token."""
+    cfg, params, prompt, extras = setup_family(arch)
+    kw = dict(slots=2, max_seq=16, page_size=4, chunk=3)
+    reqs = batch_requests(prompt, 5, extras)
+    want = ContinuousBatchingEngine(cfg, params, **kw).serve(reqs)
+    eng = ContinuousBatchingEngine(cfg, params, speculate=TREE, **kw)
+    eng.debug_check_hist = True
+    got = eng.serve(reqs)
+    for i, (w, g) in enumerate(zip(want, got)):
+        assert_tokens_identical(w, g, msg=f"{arch} req {i}")
+
+
+def test_tree_fan1_degenerates_to_linear_greedy():
+    """fan=1 tree == linear k=depth speculation under greedy, both
+    engines (chain 0 is the linear proposer and greedy acceptance takes
+    the same longest prefix)."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    fan1 = SpecConfig(k=3, tree_fan=1)
+    lin = SpecConfig(k=3)
+    eng = ServingEngine(cfg, params, max_seq=32)
+    a = np.asarray(eng.generate(prompt, n_new=16, extras=extras,
+                                speculate=lin))
+    b = np.asarray(eng.generate(prompt, n_new=16, extras=extras,
+                                speculate=fan1))
+    assert_tokens_identical(a, b, msg="fixed fan1 vs linear")
+    kw = dict(slots=2, max_seq=32, page_size=4, chunk=3)
+    reqs = batch_requests(prompt, 16, extras)
+    ca = ContinuousBatchingEngine(cfg, params, speculate=lin, **kw).serve(reqs)
+    cb = ContinuousBatchingEngine(cfg, params, speculate=fan1, **kw).serve(reqs)
+    for i, (x, y) in enumerate(zip(ca, cb)):
+        assert_tokens_identical(x, y, msg=f"continuous fan1 req {i}")
+
+
+def test_tree_long_horizon_paged_relocation_parity():
+    """24 tokens on the paged engine with page_size=4: accepted chains
+    repeatedly cross page boundaries, so every relocation path (gather
+    from tree columns, scatter into canonical pages, trash-page no-op at
+    a=0) runs many times — output must still equal plain decode."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    kw = dict(slots=2, max_seq=40, page_size=4, chunk=3)
+    reqs = batch_requests(prompt, 24, extras)
+    want = ContinuousBatchingEngine(cfg, params, **kw).serve(reqs)
+    eng = ContinuousBatchingEngine(cfg, params, speculate=TREE, **kw)
+    eng.debug_check_hist = True
+    got = eng.serve(reqs)
+    for i, (w, g) in enumerate(zip(want, got)):
+        assert_tokens_identical(w, g, msg=f"req {i}")
+
+
+# ------------------------------------------------------------------ sampled --
+def test_tree_sampled_cross_engine_identity():
+    """The tree schedule is static (window shape and draw shapes are
+    compile-time constants), so sampled tree decoding is key-exact ACROSS
+    engines — the stronger contract adaptive explicitly does not claim."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    assert_sampled_parity(cfg, params, prompt, extras, speculate=TREE,
+                          msg="tree")
+
+
+def test_tree_sampled_deterministic_and_key_sensitive():
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, max_seq=24)
+    kw = dict(extras=extras, greedy=False, temperature=0.8, top_k=8,
+              speculate=TREE)
+    a = np.asarray(eng.generate(prompt, n_new=12, key=jax.random.PRNGKey(1),
+                                **kw))
+    b = np.asarray(eng.generate(prompt, n_new=12, key=jax.random.PRNGKey(1),
+                                **kw))
+    c = np.asarray(eng.generate(prompt, n_new=12, key=jax.random.PRNGKey(2),
+                                **kw))
+    assert_tokens_identical(a, b, msg="tree sampled determinism")
+    assert not np.array_equal(a, c), "different keys, identical trace"
+
+
+def test_tree_sampled_distribution_matches_plain():
+    """Exactness of multi-draft rejection sampling end-to-end: tree
+    sampled decode's output law == plain sampled decode's, chi-square
+    over seeded decodes at the last emitted position."""
+    cfg, params, prompt, extras = setup_family("qwen2-1.5b", b=1, s=6)
+    batch = 250
+    prompt = jnp.tile(prompt, (batch, 1))
+    eng = ServingEngine(cfg, params, max_seq=16)
+
+    def gen(spec):
+        def f(key):
+            return eng.generate(prompt, n_new=3, extras=extras, greedy=False,
+                                temperature=1.0, top_k=0, key=key,
+                                speculate=spec)
+        return f
+
+    plain = histogram_decode(gen(None), cfg.vocab, 750, base_seed=100)
+    tree = histogram_decode(gen(TREE), cfg.vocab, 750, base_seed=900)
+    assert_distributions_match(plain, tree, msg="tree vs plain sampled")
+
+
+# ------------------------------------------------- 8-device mesh identity --
+TREE_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import numpy as np
+import jax
+sys.path.insert(0, os.path.join(r"{repo}", "tests"))
+from helpers import setup_family, build_engine, generate_tokens, batch_requests
+from repro.serving import SpecConfig, make_decode_mesh
+
+ARCHS = sys.argv[1].split(",")
+mesh = make_decode_mesh(8)
+spec = SpecConfig(k=2, tree_fan=2)
+out = []
+for arch in ARCHS:
+    cfg, params, prompt, extras = setup_family(arch)
+    row = {{"arch": arch}}
+    plain = build_engine("fixed", cfg, params, max_seq=16, bits=8)
+    shard = build_engine("fixed", cfg, params, max_seq=16, bits=8, mesh=mesh)
+    want = generate_tokens(plain, prompt, 5, extras)
+    got = generate_tokens(shard, prompt, 5, extras, speculate=spec)
+    row["fixed_identical"] = bool(np.array_equal(want, got))
+    pl = build_engine("continuous", cfg, params, max_seq=16, bits=8,
+                      page_alloc_seed=7)
+    sh = build_engine("continuous", cfg, params, max_seq=16, bits=8,
+                      page_alloc_seed=7, mesh=mesh, speculate=spec)
+    a = pl.serve(batch_requests(prompt, 5, extras))
+    b = sh.serve(batch_requests(prompt, 5, extras))
+    row["paged_identical"] = bool(all(np.array_equal(x, y)
+                                      for x, y in zip(a, b)))
+    out.append(row)
+print("RESULT " + json.dumps(out))
+""".format(repo=REPO)
+
+
+def test_tree_sharded_greedy_identity_all_families():
+    """Acceptance: fan-2 tree speculation on a forced 8-virtual-device
+    mesh == plain single-device greedy, both engines, all families (the
+    tree window batches through the same sharded verify path)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", TREE_SNIPPET,
+         ",".join(PAGED_BITEXACT_ARCHS)],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    import json
+    for row in json.loads(line[len("RESULT "):]):
+        assert row["fixed_identical"], row
+        assert row["paged_identical"], row
