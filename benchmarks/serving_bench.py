@@ -34,7 +34,13 @@ completion latency (virtual clock), shed/retried counts, and a
 ``non_shed_token_identical`` flag against the fault-free run —
 ``--deadline D`` additionally stamps every request with a D-virtual-
 second deadline so load shedding and goodput-vs-throughput divergence
-show up.  Run ``python benchmarks/serving_bench.py`` (``--smoke`` for CI).
+show up.  The ``prefix_router`` axis always runs: a repeated-system-prompt
+Poisson trace through an uncached engine, a ``prefix_cache=True`` engine,
+and a ``ReplicaRouter`` over ``--prefix-replicas`` cached replicas,
+recording prefix hit rate, prefill-token savings, admission-to-first-token
+(virtual seconds), and greedy+sampled token-identity to the uncached solo
+baseline — plus a validated chrome-trace JSON of the router leg next to
+``--out``.  Run ``python benchmarks/serving_bench.py`` (``--smoke`` for CI).
 """
 from __future__ import annotations
 
@@ -519,6 +525,168 @@ def bench_sharded(arch: str, requests, slots: int, page_size: int, chunk: int,
     return {"devices": devices, "grid": rows}
 
 
+def make_system_prompt_trace(n_requests: int, n_system: int, sys_len: int,
+                             max_tail: int, mean_new: int, max_new_cap: int,
+                             vocab: int, seed: int, arrival_rate: float,
+                             deadline_slack: float = 30.0):
+    """The prefix-cache workload: a Poisson arrival process where every
+    prompt is one of ``n_system`` repeated system prompts (page-aligned,
+    ``sys_len`` tokens) plus a short random user tail — the
+    few-templates/many-users mix where shared-prefix deduplication pays.
+    Mixed SLOs: roughly half the requests carry a ``deadline_slack``
+    deadline and a random priority class, so load shedding and SLO
+    attainment stay live quantities on this axis too."""
+    from repro.serving import Request
+
+    rng = np.random.default_rng(seed)
+    sys_prompts = [rng.integers(0, vocab, size=sys_len).astype(np.int32)
+                   for _ in range(n_system)]
+    t, reqs = 0.0, []
+    for _ in range(n_requests):
+        t += float(rng.exponential(1.0 / arrival_rate))
+        sp = sys_prompts[int(rng.integers(n_system))]
+        tail = rng.integers(0, vocab,
+                            size=int(rng.integers(0, max_tail + 1))
+                            ).astype(np.int32)
+        max_new = int(np.clip(rng.poisson(mean_new), 2, max_new_cap))
+        deadline = (t + deadline_slack
+                    if deadline_slack and rng.random() < 0.5 else None)
+        reqs.append(Request(prompt=np.concatenate([sp, tail]),
+                            max_new=max_new, arrival=t, deadline=deadline,
+                            slo=int(rng.integers(1, 4))))
+    return reqs
+
+
+def bench_prefix_router(arch: str, slots: int, page_size: int, chunk: int,
+                        seed: int, n_requests: int, n_system: int,
+                        replicas: int, temperature: float,
+                        out_path: str) -> dict:
+    """The prefix-cache + fleet axis: the SAME repeated-system-prompt
+    Poisson trace through (a) an uncached solo engine, (b) a
+    ``prefix_cache=True`` solo engine, and (c) a ``ReplicaRouter`` over
+    ``replicas`` cached engines — greedy AND sampled legs, all on a
+    virtual clock with ``round_time=1.0`` and a pool sized to HALF the
+    dense worst case so page pressure binds (uncached admission blocks on
+    pages; cached admission aliases the shared prefix and fits).
+    Records the prefix hit rate, prefill-token savings (the >=30%
+    acceptance bar), mean admission-to-first-token (``t_first`` minus
+    arrival, virtual seconds — deterministic), CoW/eviction counts, and
+    token-identity flags of every leg against the uncached solo baseline
+    (done-in-both requests).  Uses the RAW reduced config: every metric
+    on this axis is a token count or virtual-time scheduling quantity,
+    not wall throughput.  The router (greedy) leg's telemetry is exported
+    as chrome-trace JSON next to ``out_path`` and validated before the
+    bench reports it (tools/trace_export.py)."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serving import (ContinuousBatchingEngine, ReplicaRouter,
+                               ResiliencePolicy, VirtualClock)
+
+    sys.path.insert(0, str(_ROOT / "tools"))
+    import trace_export
+
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sys_len, max_tail = 4 * page_size, 2 * page_size
+    mean_new, max_new_cap = 6, 12
+    requests = make_system_prompt_trace(
+        n_requests, n_system, sys_len, max_tail, mean_new, max_new_cap,
+        cfg.vocab, seed, arrival_rate=2.0)
+    max_seq, num_pages = pool_geometry(slots, page_size, sys_len + max_tail,
+                                       max_new_cap, 0.5)
+    policy = ResiliencePolicy(round_time=1.0)
+    key = jax.random.PRNGKey(2)
+
+    def mk(prefix: bool):
+        return ContinuousBatchingEngine(
+            cfg, params, slots=slots, max_seq=max_seq, page_size=page_size,
+            num_pages=num_pages, chunk=chunk, prefix_cache=prefix,
+            clock=VirtualClock())
+
+    def ident(base, test) -> bool:
+        return all(np.array_equal(b.tokens, t.tokens)
+                   for b, t in zip(base.records, test.records)
+                   if b.status == "done" and t.status == "done")
+
+    def admit_to_first(report):
+        vals = [rec.t_first - req.arrival
+                for rec, req in zip(report.records, requests)
+                if rec.status == "done" and rec.t_first is not None]
+        return float(np.mean(vals)) if vals else None
+
+    legs = {}
+    for tag, greedy in (("greedy", True), ("sampled", False)):
+        kwd = dict(greedy=greedy, temperature=temperature or 0.8, top_k=20,
+                   key=key, policy=policy)
+        t0 = time.perf_counter()
+        un = mk(False).serve_detailed(requests, **kwd)
+        t_un = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ca = mk(True).serve_detailed(requests, **kwd)
+        t_ca = time.perf_counter() - t0
+        router = ReplicaRouter([mk(True) for _ in range(replicas)])
+        rr = router.serve_detailed(requests, **kwd)
+        legs[tag] = dict(un=un, ca=ca, rr=rr, t_un=t_un, t_ca=t_ca,
+                         ident_cached=ident(un, ca),
+                         ident_router=ident(un, rr))
+        print(f"prefix {tag}: hits {ca.prefix_hits}/{n_requests}, prefill "
+              f"{ca.prefill_tokens} vs {un.prefill_tokens} uncached tokens, "
+              f"cow {ca.cow_forks}, evict {ca.evictions}, "
+              f"identical cached={legs[tag]['ident_cached']} "
+              f"router={legs[tag]['ident_router']}")
+
+    g = legs["greedy"]
+    un, ca, rr = g["un"], g["ca"], g["rr"]
+    savings = 1.0 - ca.prefill_tokens / max(un.prefill_tokens, 1)
+    a2f_un, a2f_ca = admit_to_first(un), admit_to_first(ca)
+    trace_path = str(Path(out_path).with_suffix("")) + ".trace.json"
+    n_events = trace_export.write_trace(
+        trace_export.router_report_to_trace(rr), trace_path)
+    print(f"prefix hit rate {ca.prefix_hits / n_requests:.2f}, prefill "
+          f"savings {100 * savings:.0f}%, admit-to-first "
+          f"{a2f_un:.2f} -> {a2f_ca:.2f} vsec, trace {trace_path} "
+          f"({n_events} events)")
+    return {
+        "requests": n_requests,
+        "system_prompts": n_system,
+        "page_size": page_size,
+        "num_pages": num_pages,
+        "replica_count": replicas,
+        "round_time_vsec": 1.0,
+        "prefix_hit_rate": ca.prefix_hits / n_requests,
+        "prefix_hit_tokens": ca.prefix_hit_tokens,
+        "prefill_tokens_uncached": un.prefill_tokens,
+        "prefill_tokens_cached": ca.prefill_tokens,
+        "prefill_savings_frac": savings,
+        "admit_to_first_uncached_s": a2f_un,
+        "admit_to_first_cached_s": a2f_ca,
+        "wall_sec_uncached": g["t_un"],
+        "wall_sec_cached": g["t_ca"],
+        "done_uncached": len(un.done()),
+        "done_cached": len(ca.done()),
+        "shed_uncached": un.sheds,
+        "shed_cached": ca.sheds,
+        "cow_forks": ca.cow_forks,
+        "evictions": ca.evictions,
+        "token_identical_greedy": bool(g["ident_cached"]
+                                       and g["ident_router"]),
+        "token_identical_sampled": bool(legs["sampled"]["ident_cached"]
+                                        and legs["sampled"]["ident_router"]),
+        "router": {
+            "replicas": replicas,
+            "assignments": list(map(int, rr.assignments)),
+            "affinity_hits": int(rr.affinity_hits),
+            "prefix_hits": rr.prefix_hits,
+            "prefill_tokens": rr.prefill_tokens,
+            "token_identical": bool(g["ident_router"]
+                                    and legs["sampled"]["ident_router"]),
+        },
+        "trace_file": Path(trace_path).name,
+        "trace_events": n_events,
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -564,6 +732,8 @@ def main(argv=None) -> None:
                     help="stamp every request with this deadline in virtual "
                     "seconds (~scheduling rounds) on the chaos axis, so "
                     "shedding and SLO attainment bite (0 disables)")
+    ap.add_argument("--prefix-replicas", type=int, default=2,
+                    help="replica count for the prefix_router axis")
     ap.add_argument("--out", default=str(_ROOT / "BENCH_serving.json"))
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: tiny trace, tiny shapes")
@@ -633,6 +803,12 @@ def main(argv=None) -> None:
             args.arch, trace_for(kw, args.arch), kw["slots"],
             kw["page_size"], kw["chunk"], ch_max_seq, ch_num_pages, rates,
             args.deadline, kw["seed"], kw["scale"])
+    result["prefix_router"] = bench_prefix_router(
+        args.arch, kw["slots"], kw["page_size"], kw["chunk"], kw["seed"],
+        n_requests=12 if args.smoke else 200,
+        n_system=2 if args.smoke else 6,
+        replicas=args.prefix_replicas, temperature=args.temperature,
+        out_path=args.out)
     result.update({
         "note": ("reduced config on CPU: tokens/sec measures scheduling "
                  "efficiency (useful tokens vs ride-along waste); "

@@ -36,7 +36,21 @@ after a crash the ``ServingSupervisor`` (built on
 ``runtime.fault.HeartbeatMonitor``) restores the last ``ServeSnapshot``
 and REPLAYS in-flight requests token-identically — the fold_in
 (request, counter) draw keys continue the exact random stream.  See the
-``serving.resilience`` module docstring for the full contract."""
+``serving.resilience`` module docstring for the full contract.
+
+Shared-prefix KV cache + fleet routing (``serving.prefix`` +
+``serving.router``): constructing the continuous engine with
+``prefix_cache=True`` deduplicates page-aligned prompt prefixes across
+requests — a refcounted ``PagePool`` plus a host-side ``PrefixTrie`` alias
+matching read-only pages through the block tables, prefill only the
+unmatched tail (one ``models.verify_step`` window), fork copy-on-write
+when a write frontier lands inside a shared page, and retain/evict
+refcount-0 cached pages LRU under pool pressure.  Cache hits are
+token-identical to uncached serving (greedy and sampled).
+``ReplicaRouter`` spreads a request stream over N engines (least-loaded
+with prefix-affinity), token-identical per request to a solo engine.
+Per-request span events land on ``RequestRecord.events`` and export as
+deterministic chrome-tracing JSON via ``tools/trace_export.py``."""
 from .chaos import (
     ChaosConfig,
     ChunkFault,
@@ -52,6 +66,7 @@ from .engine import (
     pim_bytes,
     quantize_tree,
 )
+from .prefix import PagePool, PrefixTrie, chunk_keys, extras_fingerprint
 from .resilience import (
     LadderConfig,
     ResiliencePolicy,
@@ -69,6 +84,7 @@ from .sampling import (
     sample_rows,
     warp_logits,
 )
+from .router import ReplicaRouter, RouterReport
 from .sharded import make_decode_mesh, shard_quantized_tree, tree_pspecs
 from .speculative import SpecConfig, propose_ngram
 
@@ -81,4 +97,6 @@ __all__ = [
     "ChaosConfig", "FaultInjector", "ChunkFault", "EngineCrash",
     "VirtualClock", "ResiliencePolicy", "LadderConfig", "ServeReport",
     "ServeSnapshot", "ServingSupervisor", "save_snapshot", "load_snapshot",
+    "PagePool", "PrefixTrie", "chunk_keys", "extras_fingerprint",
+    "ReplicaRouter", "RouterReport",
 ]

@@ -69,12 +69,59 @@ distribution exactly and — because every draw is keyed per (request id,
 draw counter) rather than per batch step — emits identical tokens for the
 same key on either engine, any mesh width, and across recompute
 preemptions (tests/test_sampled_speculative.py).
+
+**Shared-prefix KV page cache** (``prefix_cache=True``,
+``serving.prefix``): the block-table indirection already lets several
+slots alias ONE pool page, so requests sharing a token-identical prompt
+prefix (system prompts, few-shot headers) can share its KV instead of
+re-prefilling it.  Lifecycle:
+
+* the page allocator is a refcounted ``prefix.PagePool`` (a page's
+  refcount = live block-table references); an uncached admit registers
+  its prompt's FULL pages in a ``prefix.PrefixTrie`` keyed by each
+  page-aligned chunk's raw token bytes, chained from position 0 under a
+  per-extras-fingerprint root — so a page only matches when every
+  preceding token and the request's conditioning are identical, exactly
+  the causal dependency of its KV content;
+* admission probes the trie: matched pages are aliased into the slot's
+  block table (refcount + 1) and only the unmatched tail is computed —
+  ONE ``models.verify_step`` window at the tail position against the
+  aliased prefix (the same per-position math as ``models.prefill``, so
+  cache hits stay token-identical to uncached serving, greedy AND
+  fold_in-keyed sampled);
+* when the tail write frontier lands INSIDE a matched page (a fully
+  page-aligned full-prefix hit still recomputes the last position's
+  logits, writing its K/V), the page is forked copy-on-write first — a
+  writer can never perturb a page a sibling or the trie still reads;
+* on retire/preempt the slot's references drop; trie-registered pages
+  at refcount 0 are RETAINED on an LRU (``pages_in_use`` counts them as
+  reclaimable, not in-use) and re-aliased by later hits, while pool
+  pressure (admission, top-up, chaos squeezes) evicts them LRU-first —
+  cached pages are opportunistic capacity, never reserved capacity.
+  ``assert_quiescent`` accounts for retained pages explicitly.
+
+Only families whose prefill/verify logits agree bitwise are eligible
+(``_PREFIX_FAMILIES``): ssm/hybrid carry unpaged per-slot recurrent
+state, moe batched expert capacity makes a tail window diverge from a
+full prefill under capacity pressure, and MLA's absorbed decode differs
+at ~1e-3.  Ineligible families (and draft mode) simply never hit.
+
+**Per-request telemetry** (``RequestRecord.slot``/``.events``,
+``ServeReport.counters``): every request carries span events —
+``{"name", "ts", "dur"?, ...}`` in engine-clock seconds — for admit
+(with cached/prefilled token counts), per-round decode (with tokens
+emitted), preempt, shed, and finish, plus one per-round counter sample
+(free/retained pages, prefix-hit tokens, effective k, queue depth).
+``tools/trace_export.py`` turns a report into chrome-tracing JSON (one
+Perfetto track per slot + counter tracks); under a ``VirtualClock`` the
+trace is fully deterministic.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
+import os
 import time
 from collections import deque
 from typing import Optional, Sequence
@@ -91,10 +138,17 @@ from repro.models import (
     init_cache,
     init_paged_cache,
     prefill,
+    verify_step,
 )
 from repro.quant import quantize_symmetric
 from repro.serving import speculative as spec_mod
 from repro.serving.chaos import ChunkFault, EngineCrash
+from repro.serving.prefix import (
+    PagePool,
+    PrefixTrie,
+    chunk_keys,
+    extras_fingerprint,
+)
 from repro.serving.resilience import (
     DegradationLadder,
     InflightState,
@@ -122,6 +176,15 @@ _DENSE_KEYS = {"ln", "ln1", "ln2", "ln3", "ln_f", "conv_w", "conv_b", "A_log",
 # Metadata leaves — markers, not shipped storage: int4 packing flags and the
 # tensor-parallel shard tag added by serving.sharded.shard_quantized_tree.
 _MARKER_KEYS = ("nibbles", "nibbles_odd", "tp")
+
+# Families eligible for shared-prefix page caching: those whose admit
+# prefill and tail verify_step produce bitwise-identical logits, so a cache
+# hit cannot change a single output token.  ssm/hybrid keep per-slot
+# recurrent state outside the page pool (nothing to alias); moe expert
+# capacity is computed per batched group, so a tail-only window can drop
+# tokens a full prefill keeps (see ROADMAP carried-forward note); MLA
+# (cfg.mla) absorbed decode differs from expanded prefill at ~1e-3.
+_PREFIX_FAMILIES = ("dense", "vlm", "encdec")
 
 
 
@@ -514,7 +577,13 @@ class Request:
     (``serve_detailed``): ``arrival`` is when the request becomes
     admissible and ``deadline`` when its answer stops being useful, both
     in engine-clock seconds from serve start; ``slo`` is the priority
-    class load-shedding protects (HIGHER sheds LAST)."""
+    class load-shedding protects (HIGHER sheds LAST).
+
+    ``rid`` overrides the sampled-draw key id (defaults to the request's
+    index in the trace).  Every sampled draw is keyed by (rid, counter),
+    so a front-end that splits one logical trace across engine replicas
+    (``serving.router``) pins each request's GLOBAL index here and every
+    replica emits exactly the tokens a solo engine would."""
 
     prompt: np.ndarray  # (len,) int32 token ids
     max_new: int  # emit at most this many tokens (>= 1)
@@ -523,6 +592,7 @@ class Request:
     arrival: float = 0.0           # not admitted before this engine time
     deadline: Optional[float] = None  # shed from queue / flag miss past this
     slo: int = 1                   # shed priority class (lower sheds first)
+    rid: Optional[int] = None      # sampled-draw key id (default: trace index)
 
 
 def _admit_body(params, cfg: ModelConfig, cache, prompt, length, slot, pages,
@@ -571,6 +641,94 @@ def _admit_prefill_sharded(params, cfg: ModelConfig, cache, prompt, length,
         in_specs=(tree_pspecs(params),) + (P(),) * 9,
         out_specs=P(), check_rep=False,
     )(params, cache, prompt, length, slot, pages, rid, key, temperature,
+      extras)
+
+
+def _pool_leaf_paths(cfg: ModelConfig) -> tuple:
+    """(cache key, leading stack dims) of every page-pool subtree for the
+    family — the leaves a copy-on-write page fork must duplicate.  Every
+    pool leaf (K/V, quantized codes + scales, MLA latents) carries its
+    page axis immediately after the lead dims."""
+    fam = cfg.family
+    if fam == "dense":
+        return (("layers", 1),)
+    if fam == "moe":
+        return ((("layers", 1), ("dense_layers", 1))
+                if cfg.n_dense_layers else (("layers", 1),))
+    if fam == "vlm":
+        return (("groups_self", 2),)
+    if fam == "encdec":
+        return (("decoder", 1),)
+    if fam == "hybrid":
+        return (("groups_attn", 1),)
+    return ()  # ssm: per-slot state only, nothing paged
+
+
+@functools.partial(jax.jit, static_argnames=("keys",),
+                   donate_argnames=("cache",))
+def _copy_page(cache, src, dst, *, keys):
+    """Device-side copy-on-write fork: duplicate pool page ``src`` into
+    ``dst`` across every paged leaf (``keys`` from ``_pool_leaf_paths``)."""
+    new = dict(cache)
+    for key, lead in keys:
+        idx = (slice(None),) * lead
+        new[key] = jax.tree.map(
+            lambda l: l.at[idx + (dst,)].set(l[idx + (src,)]), cache[key])
+    return new
+
+
+def _tail_verify_body(params, cfg: ModelConfig, cache, tokens, pos, slot,
+                      rid, sample_at, key, temperature, extras, *,
+                      greedy: bool, top_k: int, page_size: int):
+    """Cached-admit tail: run ONE ``models.verify_step`` window over the
+    unmatched tail of a prompt whose prefix pages were aliased from the
+    trie.  ``tokens`` (B, T) is zero except the admitted slot's row (the
+    padded tail), ``pos`` is zero except ``pos[slot] = tail start``; every
+    other row's block-table row is zeroed by the caller, so their window
+    writes land in the trash page.  Per window position the math matches
+    ``models.prefill``/``decode_step`` exactly (same projections, masks,
+    float association — the bit-identity the prefix cache's token-identity
+    bar rests on), and the first token is sampled from the logits at the
+    true prompt end with the request's draw-0 key, exactly like
+    ``_admit_body``."""
+    logits, cache = verify_step(params, cfg, tokens, cache, pos, extras,
+                                page_size=page_size)
+    lg = jax.lax.dynamic_index_in_dim(logits, slot, axis=0, keepdims=False)
+    lg = jax.lax.dynamic_index_in_dim(lg, sample_at, axis=0,
+                                      keepdims=False)  # (V,)
+    tok0 = sample_rows(
+        lg[None], None if greedy else draw_keys(key, rid[None], 0, TAG_TOKEN),
+        greedy=greedy, temperature=temperature, top_k=top_k)[0]
+    return cache, tok0
+
+
+_tail_verify = functools.partial(
+    jax.jit, static_argnames=("cfg", "greedy", "top_k", "page_size"),
+    donate_argnames=("cache",),
+)(_tail_verify_body)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "mesh", "greedy", "top_k", "page_size"),
+    donate_argnames=("cache",),
+)
+def _tail_verify_sharded(params, cfg: ModelConfig, cache, tokens, pos, slot,
+                         rid, sample_at, key, temperature, extras, *, mesh,
+                         greedy: bool, top_k: int, page_size: int):
+    """``_tail_verify_body`` under ``shard_map``: sharded weights,
+    replicated cache/window operands."""
+
+    def f(p, c, tk, ps_, sl, ri, sa, k, t, ex):
+        return _tail_verify_body(p, cfg, c, tk, ps_, sl, ri, sa, k, t, ex,
+                                 greedy=greedy, top_k=top_k,
+                                 page_size=page_size)
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(tree_pspecs(params),) + (P(),) * 10,
+        out_specs=P(), check_rep=False,
+    )(params, cache, tokens, pos, slot, rid, sample_at, key, temperature,
       extras)
 
 
@@ -686,7 +844,8 @@ class ContinuousBatchingEngine:
                  chunk: int = 8, pim_bits: int = 0, pad_id: int = 0,
                  page_alloc_seed: Optional[int] = None, mesh=None,
                  speculate=None, draft_cfg: ModelConfig = None,
-                 draft_params=None, draft_pim_bits: int = 0, clock=None):
+                 draft_params=None, draft_pim_bits: int = 0, clock=None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.mesh = mesh
         # ``clock``: a 0-arg monotonic-seconds callable (time.monotonic by
@@ -747,6 +906,32 @@ class ContinuousBatchingEngine:
         self.pad_id = int(pad_id)
         self._rng = (np.random.default_rng(page_alloc_seed)
                      if page_alloc_seed is not None else None)
+        # Shared-prefix page cache (module docstring): only families whose
+        # prefill/verify logits agree bitwise are eligible, and the draft
+        # pool has no trie (its pages would alias stale draft KV), so
+        # ineligible configurations silently never hit.
+        self.prefix_cache = bool(prefix_cache)
+        self._prefix_on = (self.prefix_cache
+                           and cfg.family in _PREFIX_FAMILIES
+                           and not getattr(cfg, "mla", None)
+                           and not self._draft_mode)
+        # Strict pending sweep (serve_detailed): None defers to the
+        # REPRO_STRICT_SERVE env var (tests set it); an explicit bool wins.
+        self.strict_pending: Optional[bool] = None
+        # Test hook: request indices the admission loop silently drops —
+        # simulates a scheduler bug so the strict sweep's detection is
+        # itself testable.
+        self._debug_drop_rids: set[int] = set()
+        self._pool_poisoned = False
+        # Telemetry plumbing for helpers that fire outside the serve loop's
+        # lexical scope (_preempt_slot/_shed): the live RequestRecord
+        # list and the engine-clock closure of the current serve call.
+        self._records = None
+        self._now = lambda: 0.0
+        self.prefix_hits = 0        # cached admits (>= 1 page aliased)
+        self.prefix_hit_tokens = 0  # prompt tokens served from aliased pages
+        self.prefill_tokens = 0     # prompt tokens actually computed
+        self.cow_forks = 0          # copy-on-write page forks
         self.peak_pages_in_use = 0
         self.preemptions = 0
         self.spec_emitted = 0  # tokens emitted by speculative verify windows
@@ -785,45 +970,33 @@ class ContinuousBatchingEngine:
         return jax.tree.map(lambda v: v[None], ex)
 
     def pages_in_use(self) -> int:
-        return (self.num_pages - 1) - len(self._free)
+        """Pages with live block-table references.  Retained prefix-cache
+        pages (refcount 0, evictable on demand) count as NOT in use —
+        they are reclaimable capacity, exactly like free pages."""
+        return self._pool.in_use()
 
     def _alloc_pages(self, n: int) -> list[int]:
-        if n > len(self._free):
-            raise RuntimeError(
-                f"page allocator overdraw: requested {n} pages with only "
-                f"{len(self._free)} free — admission/top-up must check the "
-                "free list before allocating")
-        if self._rng is not None:
-            self._rng.shuffle(self._free)
-        pages, self._free = self._free[:n], self._free[n:]
-        self._allocated.update(pages)
-        return pages
+        return self._pool.alloc(n)
 
     def _free_pages(self, pages: list[int]) -> None:
         for p in pages:
-            if p not in self._allocated:
-                raise ValueError(
-                    f"double-free: page {p} is not currently allocated — a "
-                    "page freed twice would be issued to two slots at once "
-                    "and silently cross-corrupt their KV state")
-            self._allocated.discard(p)
-        self._free.extend(pages)
+            self._pool.release(p)
 
     def assert_quiescent(self) -> None:
-        """Page-pool invariant at quiescence (no live slots): every page is
-        back on the free list exactly once and nothing is still marked
-        allocated.  ``serve_detailed`` checks this after every completed
-        trace, so a scheduling path that leaks or double-frees pages fails
-        loudly in ANY test that serves to completion."""
-        if self._allocated:
+        """Page-pool invariant at quiescence (no live slots): every page
+        holds zero references and sits on the free list or the retained
+        prefix-cache LRU exactly once.  ``serve_detailed`` checks this
+        after every completed trace, so a scheduling path that leaks or
+        double-frees pages fails loudly in ANY test that serves to
+        completion.  A pool poisoned by an abnormal serve exit (escaped
+        ``EngineCrash``/fault mid-round) fails until the next serve's
+        ``_reset`` — its mid-trace state proves nothing either way."""
+        if self._pool_poisoned:
             raise AssertionError(
-                f"page leak: {sorted(self._allocated)} still allocated "
-                "with no live requests")
-        expect = self.num_pages - 1  # page 0 (trash) never circulates
-        if len(self._free) != expect or len(set(self._free)) != expect:
-            raise AssertionError(
-                f"free-list corruption: {len(self._free)} entries "
-                f"({len(set(self._free))} unique), expected {expect}")
+                "page pool poisoned: a serve trace aborted mid-round, so "
+                "allocator state is mid-flight, not quiescent; start a new "
+                "serve (or _reset) before asserting invariants")
+        self._pool.assert_quiescent()
 
     # ------------------------------------------------------------ lifecycle --
     def _reset(self, requests, n_stops: int):
@@ -836,8 +1009,15 @@ class ContinuousBatchingEngine:
         self._dcache = (init_paged_cache(self.draft_cfg, b, self._store_seq,
                                          self.num_pages, self.page_size)
                         if self._draft_mode else ())
-        self._free = list(range(1, self.num_pages))  # page 0 = trash
-        self._allocated: set[int] = set()
+        # Refcounted page pool + (fresh) prefix trie: trie-registered pages
+        # are only valid against THIS pool's device storage, so both reset
+        # together — prefix reuse is within one serve trace, which is where
+        # repeated system prompts actually collide.  Page 0 = trash.
+        self._trie = PrefixTrie() if self._prefix_on else None
+        self._pool = PagePool(
+            self.num_pages, rng=self._rng,
+            on_evict=self._trie.drop_page if self._trie is not None else None)
+        self._pool_poisoned = False
         self._plen = np.zeros(b, np.int32)  # prompt length per slot
         self._bt = np.zeros((b, w), np.int32)
         self._pos = np.zeros(b, np.int32)
@@ -871,18 +1051,64 @@ class ContinuousBatchingEngine:
         # than ``ctrl_init``
         self._ctrl_fresh = np.zeros(b, bool)
 
+    def _prefix_probe(self, req, resume):
+        """(chunk keys, extras fingerprint, matched trie pages) for a fresh
+        request under an active prefix cache; ``([], None, [])`` otherwise.
+        Pure probe — no refcount or LRU side effects, so the admission
+        gate and ``_admit`` can both call it.  Resume admits never match:
+        their rebuilt sequence embeds emitted tokens and must replay
+        through the exact full-prefill path the snapshot semantics pin."""
+        if not self._prefix_on or resume is not None:
+            return [], None, []
+        keys = chunk_keys(np.asarray(req.prompt, np.int32), self.page_size)
+        fp = extras_fingerprint(req.extras)
+        return keys, fp, self._trie.match(keys, fp)
+
+    def _admit_page_need(self, req, resume) -> tuple[int, list[int]]:
+        """(fresh pages the admit itself would allocate, trie pages it
+        would alias) — the admission gate's capacity probe.  Admission is
+        deliberately optimistic (prompt footprint only, not the first
+        chunk's growth): if the same round's ``_top_up`` then finds the
+        pool dry, the freshly admitted slot — necessarily the youngest —
+        YIELDS by requeueing itself rather than preempting an elder, so
+        optimism can waste a prefill but can never livelock (see
+        ``_top_up``)."""
+        L = len(req.prompt) + (len(resume.emitted) - 1 if resume else 0)
+        total = self._spad(L) // self.page_size
+        _, _, matched = self._prefix_probe(req, resume)
+        if matched and len(matched) == total and L == total * self.page_size:
+            # Full-prefix hit: only the CoW fork of the last page is fresh.
+            return 1, matched
+        return total - len(matched), matched
+
     def _admit(self, requests, slot: int, ridx: int, greedy, temperature,
-               top_k, resume: Optional[InflightState] = None) -> None:
-        """Admit request ``ridx`` into ``slot``.  With ``resume`` (crash
-        replay, resume_mode="prefill") the request is re-admitted mid-
-        stream: ONE prefill pass over ``prompt + emitted[:-1]`` rebuilds
-        its KV pages, the last emission becomes the slot's current token,
-        and the token draw counter restarts at ``len(emitted)`` — the
-        fold_in (rid, counter) keys then continue the exact random stream
-        the crashed run was consuming, so replay is token-identical."""
+               top_k, resume: Optional[InflightState] = None) -> dict:
+        """Admit request ``ridx`` into ``slot``; returns admit telemetry
+        (``cached_tokens``/``prefilled_tokens``/``cow``).
+
+        A prefix-trie hit aliases the matched pages into the slot's block
+        table (refcount + 1 each) and computes only the unmatched tail via
+        ONE ``models.verify_step`` window (``_tail_verify``) — sampling the
+        first token from the logits at the true prompt end with the same
+        (rid, 0) draw key as the full-prefill path, so a hit is
+        token-identical to a miss.  A FULL-prefix hit still has to run the
+        last prompt position for its logits, and that write lands inside
+        the final matched page — the page is forked copy-on-write first
+        (``_copy_page``), so the trie's copy and every aliasing sibling
+        keep their bytes.  An uncached admit full-prefills as before and
+        then registers its prompt's full pages in the trie.
+
+        With ``resume`` (crash replay, resume_mode="prefill") the request
+        is re-admitted mid-stream: ONE prefill pass over
+        ``prompt + emitted[:-1]`` rebuilds its KV pages, the last emission
+        becomes the slot's current token, and the token draw counter
+        restarts at ``len(emitted)`` — the fold_in (rid, counter) keys
+        then continue the exact random stream the crashed run was
+        consuming, so replay is token-identical."""
         req = requests[ridx]
         ps = self.page_size
         length = len(req.prompt)
+        rid = ridx if req.rid is None else int(req.rid)
         emitted = [int(t) for t in resume.emitted] if resume is not None else []
         m = len(emitted)
         seq = np.asarray(req.prompt, np.int32)
@@ -891,28 +1117,89 @@ class ContinuousBatchingEngine:
                 [seq, np.asarray(emitted[:-1], np.int32)])
         L = len(seq)  # length + m - 1 when resuming
         spad = self._spad(L)
-        pages = self._alloc_pages(spad // ps)
+        total = spad // ps
+        ex1 = self._set_slot_extras(slot, req.extras)
+        keys, fp, matched = self._prefix_probe(req, resume)
+        cow = False
+        if matched and len(matched) == total and L == total * ps:
+            # Full-prefix hit: every prompt position is cached, but the
+            # logits at L-1 must still be computed, and verify_step writes
+            # that position's K/V — into the final matched page, which the
+            # trie (and possibly siblings) still read.  Fork it.
+            for p in matched:
+                self._pool.acquire(p)
+            fork = self._pool.alloc(1)[0]
+            self._cache = _copy_page(
+                self._cache, jnp.int32(matched[-1]), jnp.int32(fork),
+                keys=_pool_leaf_paths(self.cfg))
+            self._pool.release(matched[-1])
+            pages = matched[:-1] + [fork]
+            tail_start = L - 1
+            cow = True
+            self.cow_forks += 1
+        elif matched:
+            # Partial hit: alias the matched pages, allocate only the tail.
+            for p in matched:
+                self._pool.acquire(p)
+            pages = matched + self._pool.alloc(total - len(matched))
+            tail_start = len(matched) * ps
+        else:
+            pages = self._pool.alloc(total)
+            tail_start = 0
         self._bt[slot, :] = 0
         self._bt[slot, : len(pages)] = pages
-        prompt = np.zeros((1, spad), np.int32)
-        prompt[0, :L] = seq
-        admit = (_admit_prefill if self.mesh is None else functools.partial(
-            _admit_prefill_sharded, mesh=self.mesh))
-        ex1 = self._set_slot_extras(slot, req.extras)
-        self._cache, tok0 = admit(
-            self.params, self.cfg, self._cache, jnp.asarray(prompt),
-            jnp.int32(L), jnp.int32(slot), jnp.asarray(pages, jnp.int32),
-            jnp.int32(ridx), self._key, jnp.float32(temperature), ex1,
-            greedy=bool(greedy), top_k=int(top_k))
-        if self._draft_mode:
-            # Prefill the draft pool's copy of the prompt into the SAME
-            # page ids (its own storage); the draft admit's sample is
-            # discarded — tok0 always comes from the target.
-            self._dcache, _ = _admit_prefill(
-                self.draft_params, self.draft_cfg, self._dcache,
-                jnp.asarray(prompt), jnp.int32(L), jnp.int32(slot),
-                jnp.asarray(pages, jnp.int32), jnp.int32(ridx), self._key,
-                jnp.float32(temperature), ex1, greedy=True, top_k=0)
+        if matched:
+            # Cached admit: one verify window over the padded tail.  Only
+            # this slot's block-table row is exposed — every other row's
+            # window writes go to the trash page.
+            tokens = np.zeros((self.slots, spad - tail_start), np.int32)
+            tokens[slot, : L - tail_start] = seq[tail_start:]
+            pos = np.zeros(self.slots, np.int32)
+            pos[slot] = tail_start
+            bt_masked = np.zeros_like(self._bt)
+            bt_masked[slot] = self._bt[slot]
+            self._cache["block_tables"] = jnp.asarray(bt_masked)
+            tail = (_tail_verify if self.mesh is None else functools.partial(
+                _tail_verify_sharded, mesh=self.mesh))
+            self._cache, tok0 = tail(
+                self.params, self.cfg, self._cache, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.int32(slot), jnp.int32(rid),
+                jnp.int32(L - 1 - tail_start), self._key,
+                jnp.float32(temperature), self._extras_slots,
+                greedy=bool(greedy), top_k=int(top_k),
+                page_size=self.page_size)
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += tail_start
+            self.prefill_tokens += L - tail_start
+        else:
+            prompt = np.zeros((1, spad), np.int32)
+            prompt[0, :L] = seq
+            admit = (_admit_prefill if self.mesh is None
+                     else functools.partial(_admit_prefill_sharded,
+                                            mesh=self.mesh))
+            self._cache, tok0 = admit(
+                self.params, self.cfg, self._cache, jnp.asarray(prompt),
+                jnp.int32(L), jnp.int32(slot), jnp.asarray(pages, jnp.int32),
+                jnp.int32(rid), self._key, jnp.float32(temperature), ex1,
+                greedy=bool(greedy), top_k=int(top_k))
+            if self._draft_mode:
+                # Prefill the draft pool's copy of the prompt into the SAME
+                # page ids (its own storage); the draft admit's sample is
+                # discarded — tok0 always comes from the target.
+                self._dcache, _ = _admit_prefill(
+                    self.draft_params, self.draft_cfg, self._dcache,
+                    jnp.asarray(prompt), jnp.int32(L), jnp.int32(slot),
+                    jnp.asarray(pages, jnp.int32), jnp.int32(rid), self._key,
+                    jnp.float32(temperature), ex1, greedy=True, top_k=0)
+            self.prefill_tokens += L
+            if self._prefix_on and resume is None:
+                # Register the prompt's FULL pages: their positions are
+                # final (decode writes start at L) and their content came
+                # from the exact full-prefill computation a later miss
+                # would run, so hits can be bit-identical.  Verify-written
+                # tail pages of cached admits are never registered.
+                self._trie.insert(keys, fp, pages,
+                                  on_new=self._pool.mark_cached)
         if not m:
             # Fresh admit: the prefill's sample IS emission 0 (draw key 0).
             emitted = [int(tok0)]
@@ -931,7 +1218,7 @@ class ContinuousBatchingEngine:
         self._stops[slot, :] = -1
         self._stops[slot, : len(st)] = st
         self._tok[slot, 0] = emitted[-1]
-        self._rids[slot] = ridx
+        self._rids[slot] = rid
         self._wctr[slot] = int(resume.wctr) if resume is not None else 0
         self._acc_ema[slot] = (float(resume.acc_ema) if resume is not None
                                else (self.spec.ctrl_init
@@ -943,6 +1230,9 @@ class ContinuousBatchingEngine:
         self._slot_pages[slot] = list(pages)
         self._admit_seq[slot] = self._seq
         self._seq += 1
+        return {"cached_tokens": tail_start,
+                "prefilled_tokens": L - tail_start if matched else L,
+                "cow": cow}
 
     def _retire(self, slot: int) -> None:
         self._free_pages(self._slot_pages[slot])
@@ -960,26 +1250,27 @@ class ContinuousBatchingEngine:
         self._ctrl_fresh[slot] = False
         self._done[slot] = True
 
-    def _preempt_youngest(self, protect: int) -> bool:
-        """Recompute preemption: requeue the most recently admitted live
-        request (except ``protect``) and free its pages."""
-        live = [s for s in range(self.slots)
-                if self._slot_req[s] >= 0 and s != protect]
-        if not live:
-            return False
-        victim = max(live, key=lambda s: self._admit_seq[s])
+    def _preempt_slot(self, victim: int) -> None:
+        """Recompute preemption: requeue ``victim``'s request at the queue
+        head and free its pages.  Progress is discarded; replay is exact
+        (draws are (rid, counter)-keyed)."""
         ridx = self._slot_req[victim]
         self._outputs[ridx].clear()
         self._queue.appendleft(ridx)
         self._retire(victim)
         self.preemptions += 1
-        return True
+        if self._records is not None:
+            self._records[ridx].events.append(
+                {"name": "preempt", "ts": self._now(), "slot": victim})
 
     def _top_up(self, requests, slot: int,
                 eff_chunk: Optional[int] = None,
                 eff_k: Optional[int] = None) -> None:
-        """Extend the slot's block table to cover the next chunk's writes,
-        preempting younger requests if the free list runs dry.
+        """Extend the slot's block table to cover the next chunk's writes.
+        If the pool runs dry, younger live requests are recompute-preempted
+        — unless THIS slot is the youngest, in which case it yields
+        (requeues itself) so elders keep their progress; see the loop
+        below for why preempting upward would livelock.
 
         ``eff_chunk``/``eff_k`` are the ROUND's effective scheduling
         parameters (the degradation ladder may shrink them below the
@@ -1025,12 +1316,29 @@ class ContinuousBatchingEngine:
         have = len(self._slot_pages[slot])
         if need <= have:
             return
-        while len(self._free) < need - have:
-            if not self._preempt_youngest(protect=slot):
+        while self._pool.available() < need - have:
+            live = [s for s in range(self.slots) if self._slot_req[s] >= 0]
+            youngest = max(live, key=lambda s: self._admit_seq[s])
+            if youngest != slot:
+                self._preempt_slot(youngest)
+                continue
+            if len(live) == 1:
                 raise RuntimeError(
                     f"page pool exhausted ({self.num_pages} pages of "
                     f"{ps} tokens) with a single live request; increase "
                     "num_pages")
+            # This slot is the YOUNGEST live request and the pool is dry:
+            # yield by requeueing ITSELF instead of stealing pages from an
+            # elder that already has progress.  Preempting upward here is
+            # the livelock: on a pool just big enough to re-admit the
+            # victim, two symmetric requests alternate evicting each other
+            # pre-decode forever (each re-admit's same-round top-up fires
+            # before either emits a token, and recompute preemption
+            # discards everything).  Yielding makes progress monotone for
+            # the oldest request — it always completes, frees its pages,
+            # and unblocks the queue.
+            self._preempt_slot(slot)
+            return
         pages = self._alloc_pages(need - have)
         self._bt[slot, have:need] = pages
         self._slot_pages[slot].extend(pages)
@@ -1064,16 +1372,23 @@ class ContinuousBatchingEngine:
         rec = records[ridx]
         rec.status, rec.reason = "shed", reason
         rec.tokens = np.asarray(self._outputs[ridx], np.int32)
+        rec.events.append({"name": "shed", "ts": self._now(),
+                           "reason": reason})
         report.sheds += 1
 
     def _finish(self, requests, records, slot: int, t: float) -> None:
         """Retire a finished slot, stamping completion time and deadline
-        attainment on its record."""
+        attainment on its record.  ``t`` is the slot's OWN completion
+        estimate — the round boundary interpolated to the chunk iteration
+        the slot actually finished in (see ``ServeReport.latencies`` for
+        the residual quantization)."""
         ridx = self._slot_req[slot]
         rec = records[ridx]
         rec.tokens = np.asarray(self._outputs[ridx], np.int32)
         rec.status = "done"
         rec.t_done = t
+        rec.events.append({"name": "finish", "ts": t,
+                           "tokens": len(rec.tokens)})
         dl = requests[ridx].deadline
         rec.met_deadline = None if dl is None else bool(t <= dl)
         self._retire(slot)
@@ -1173,6 +1488,10 @@ class ContinuousBatchingEngine:
         self.spec_emitted = 0
         self.spec_live_steps = 0
         self.decode_chunk_iters = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefill_tokens = 0
+        self.cow_forks = 0
         report = ServeReport(records=records)
         report.rejects += len(rejected_upfront)
         clock = self._clock
@@ -1181,6 +1500,9 @@ class ContinuousBatchingEngine:
 
         def now() -> float:
             return (clock() - t0) + skew
+
+        self._records = records
+        self._now = now
 
         ladder = DegradationLadder(
             policy.ladder if hardened else LadderConfig(enabled=False),
@@ -1219,6 +1541,12 @@ class ContinuousBatchingEngine:
             self._take_snapshot(records, policy, -1)
 
         rnd = 0
+        # Exception safety: any abnormal exit from the round loop (escaped
+        # EngineCrash, chunk fault, compiled-step failure) leaves allocator
+        # state mid-trace — mark the pool poisoned until the next
+        # ``_reset`` so it can't masquerade as quiescent and leaks can't
+        # be silently rebuilt away.  Cleared on normal completion below.
+        self._pool_poisoned = True
         while self._queue or any(r >= 0 for r in self._slot_req):
             self.last_round = rnd
             if heartbeat is not None:
@@ -1261,6 +1589,12 @@ class ContinuousBatchingEngine:
                     continue
                 while self._queue:
                     ridx = self._queue[0]
+                    if ridx in self._debug_drop_rids:
+                        # Test hook: simulate a scheduler bug that loses a
+                        # request on the floor, so the strict pending sweep
+                        # below is itself testable.
+                        self._queue.popleft()
+                        continue
                     req = requests[ridx]
                     if hardened and req.arrival > now():
                         blocked = True  # FIFO: an unarrived head waits
@@ -1278,16 +1612,22 @@ class ContinuousBatchingEngine:
                             report.rejects += 1
                             continue  # slot still free: try the next head
                     rs = resume_inflight.pop(ridx, None)
-                    L = len(req.prompt) + (len(rs.emitted) - 1 if rs else 0)
-                    if len(self._free) < self._spad(L) // self.page_size:
+                    need, reserve = self._admit_page_need(req, rs)
+                    if self._pool.available(reserve) < need:
+                        if rs is not None:
+                            resume_inflight[ridx] = rs  # retry next round
                         blocked = True
                         break
                     self._queue.popleft()
-                    self._admit(requests, slot, ridx, greedy, temperature,
-                                top_k, resume=rs)
-                    if records[ridx].t_admit is None:
-                        records[ridx].t_admit = now()
-                        records[ridx].t_first = records[ridx].t_admit
+                    info = self._admit(requests, slot, ridx, greedy,
+                                       temperature, top_k, resume=rs)
+                    rec = records[ridx]
+                    rec.slot = slot
+                    if rec.t_admit is None:
+                        rec.t_admit = now()
+                        rec.t_first = rec.t_admit
+                    rec.events.append({"name": "admit", "ts": now(),
+                                       "slot": slot, "round": rnd, **info})
                     admitted_any = True
                     break
             # Retire anything that finished at admit (max_new==1 / instant
@@ -1388,10 +1728,14 @@ class ContinuousBatchingEngine:
             # ---- page top-up, under injected pool pressure
             withheld: list[int] = []
             if chaos is not None:
-                n_w = chaos.squeeze_pages(len(self._free), rnd)
+                n_w = chaos.squeeze_pages(len(self._pool.free), rnd)
                 if n_w:
-                    withheld = self._free[-n_w:]
-                    del self._free[-n_w:]
+                    # Withhold from the free list only: retained
+                    # prefix-cache pages stay evictable, so a squeeze
+                    # squeezes the CACHE first — exactly the
+                    # opportunistic-capacity contract.
+                    withheld = self._pool.free[-n_w:]
+                    del self._pool.free[-n_w:]
                     report.squeezed_pages += n_w
 
             def _top_ups():
@@ -1407,7 +1751,7 @@ class ContinuousBatchingEngine:
                 if withheld:
                     # The squeeze alone exhausted the pool: give the pages
                     # back and retry before escalating.
-                    self._free.extend(withheld)
+                    self._pool.free.extend(withheld)
                     withheld = []
                     try:
                         _top_ups()
@@ -1430,7 +1774,7 @@ class ContinuousBatchingEngine:
                 rnd += 1
                 continue
             if withheld:
-                self._free.extend(withheld)
+                self._pool.free.extend(withheld)
             self.peak_pages_in_use = max(self.peak_pages_in_use,
                                          self.pages_in_use())
             # ---- transient chunk faults: retry with (virtual) backoff
@@ -1452,6 +1796,7 @@ class ContinuousBatchingEngine:
                 report.straggle_s += lag
 
             n0 = self._n_out.copy()
+            t_round_start = now()
             self._cache["block_tables"] = jnp.asarray(self._bt)
             self.decode_chunk_iters += eff_chunk
             try:
@@ -1606,9 +1951,39 @@ class ContinuousBatchingEngine:
             if hardened:
                 skew += policy.round_time
             t_end = now()
+            for slot in live:
+                ridx_s = self._slot_req[slot]
+                if ridx_s < 0:
+                    continue  # preempted during this round's top-up
+                records[ridx_s].events.append(
+                    {"name": "decode", "ts": t_round_start,
+                     "dur": t_end - t_round_start, "round": rnd,
+                     "tokens": int(self._n_out[slot] - n0[slot])})
             for slot in range(self.slots):
                 if self._slot_req[slot] >= 0 and self._done[slot]:
-                    self._finish(requests, records, slot, t_end)
+                    # Per-slot completion at chunk granularity: interpolate
+                    # the round's [t_round_start, t_end] span to the LAST
+                    # chunk iteration the slot was live in, instead of
+                    # stamping every retiring slot with the same round
+                    # boundary (see ServeReport.latencies for the residual
+                    # quantization).
+                    if spec_on:
+                        liv = np.flatnonzero(ms[:, slot] > 0)
+                    else:
+                        liv = np.flatnonzero(lives[:, slot])
+                    fin_it = int(liv[-1]) if liv.size else eff_chunk - 1
+                    t_slot = t_round_start + (fin_it + 1) / eff_chunk * (
+                        t_end - t_round_start)
+                    self._finish(requests, records, slot, t_slot)
+            report.counters.append(
+                {"ts": t_end, "round": rnd,
+                 "free_pages": len(self._pool.free),
+                 "retained_pages": len(self._pool.lru),
+                 "pages_in_use": self.pages_in_use(),
+                 "prefix_hit_tokens": self.prefix_hit_tokens,
+                 "eff_k": int(eff_k) if spec_on else 0,
+                 "queued": len(self._queue),
+                 "retries": report.retries})
             # ---- ladder signals + snapshot
             if hardened:
                 bad = []
@@ -1618,7 +1993,7 @@ class ContinuousBatchingEngine:
                     bad.append("preempt")
                 if sheds_round:
                     bad.append("shed")
-                if (len(self._free) / max(1, self.num_pages - 1)
+                if (self._pool.available() / max(1, self.num_pages - 1)
                         < ladder.cfg.free_frac):
                     bad.append("pressure")
                 if chaos is not None and lag > 0:
@@ -1628,13 +2003,37 @@ class ContinuousBatchingEngine:
                     self._take_snapshot(records, policy, rnd)
             rnd += 1
 
+        self._pool_poisoned = False  # round loop completed normally
         report.rounds = rnd
         report.ladder_trace = list(ladder.trace)
         report.max_ladder_level = max(
             (lvl for _, lvl, _ in ladder.trace), default=0)
-        for rec in records:  # defensive; every request should be closed
-            if rec.status == "pending":
-                rec.status = "done"
+        dropped = [i for i, rec in enumerate(records)
+                   if rec.status == "pending"]
+        if dropped:
+            # A still-pending record means the scheduler LOST a request —
+            # it was neither finished, shed, nor rejected.  Raising is the
+            # only honest outcome; the old unconditional "pending -> done"
+            # coercion hid exactly this class of bug.  Hardened production
+            # serving may opt back into coercion (strict_pending=False or
+            # unset REPRO_STRICT_SERVE) to prefer degraded answers over an
+            # exception, and marks the records so the loss is auditable.
+            strict = (self.strict_pending if self.strict_pending is not None
+                      else os.environ.get("REPRO_STRICT_SERVE", "")
+                      not in ("", "0", "false"))
+            if strict or not hardened:
+                raise RuntimeError(
+                    f"scheduler dropped requests {dropped}: still pending "
+                    "after the serve loop — every request must end "
+                    "done/shed/rejected")
+            for i in dropped:
+                records[i].status = "done"
+                records[i].reason = "coerced-pending"
+        report.prefix_hits = self.prefix_hits
+        report.prefix_hit_tokens = self.prefix_hit_tokens
+        report.prefill_tokens = self.prefill_tokens
+        report.cow_forks = self.cow_forks
+        report.evictions = self._pool.evictions
         self.assert_quiescent()
         if snap_every:
             self._take_snapshot(records, policy, rnd)

@@ -1,0 +1,249 @@
+"""Shared-prefix KV page cache: refcounted page pool + host-side prefix trie.
+
+The continuous engine's block-table indirection already lets several slots
+point at the SAME pool page; this module supplies the host-side accounting
+that makes that aliasing safe and useful:
+
+* ``PagePool`` — the refcounted allocator that replaces the old binary
+  free-list/``_allocated``-set pair.  A page's refcount is the number of
+  live block-table references to it.  Pages *registered* in the prefix trie
+  are additionally marked ``cached``: when their refcount drops to zero
+  they are RETAINED on an LRU list (their KV content stays valid — the
+  device pools are only rewritten through block tables, and no live slot
+  references them) instead of returning to the free list, so a later
+  request with the same prompt prefix can re-alias them without any
+  recompute.  Under pool pressure ``alloc`` evicts retained pages LRU-first
+  (deregistering them via ``on_evict``) before failing, which is how the
+  cache yields to the PR 6 squeeze/preemption paths: cached pages are
+  opportunistic capacity, never reserved capacity.
+
+* ``PrefixTrie`` — maps page-aligned prompt-token chunks to registered
+  pages.  Keys are the raw token bytes of each ``page_size`` chunk, walked
+  from position 0, under a root per extras fingerprint — chain keying, so a
+  page is only ever matched when EVERY preceding token (and the request's
+  conditioning: vlm image embeds, encdec encoder output) is identical,
+  which is exactly the causal dependency of its KV content.  Matching is
+  content-addressed: two different requests that share a token-identical
+  prefix (system prompt, few-shot header) share its pages no matter when or
+  in which slot the prefix was first prefilled.
+
+Correctness contract (enforced by the engine, tested in
+tests/test_prefix_cache.py):
+
+* only FULL pages covering final, never-rewritten positions are registered
+  (positions ``[0, floor(L/ps)*ps)`` of a prompt of length L — decode
+  writes start at L, so registered content is immutable);
+* registration happens only on full-prefill admits, so every cached page's
+  KV was produced by the exact ``models.prefill`` computation an uncached
+  admit would run — cache hits can therefore be bit-identical to uncached
+  serving;
+* a write landing inside a shared page (refcount > 1 or trie-registered)
+  forks it copy-on-write first (engine ``_admit``), so a writer can never
+  perturb a page a sibling still reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Callable, Optional
+
+import numpy as np
+
+
+def extras_fingerprint(extras) -> Optional[str]:
+    """Digest of a request's per-slot conditioning (vlm image embeds,
+    encdec encoder output).  Prefix KV depends on the conditioning as well
+    as the token prefix, so the trie roots one chain family per
+    fingerprint; ``None`` extras share the ``None`` root."""
+    if extras is None:
+        return None
+    import jax
+
+    h = hashlib.sha1()
+    for leaf in jax.tree.leaves(extras):
+        a = np.asarray(leaf)
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def chunk_keys(seq: np.ndarray, page_size: int) -> list[bytes]:
+    """The trie keys of a token sequence: one raw-bytes key per FULL
+    ``page_size``-aligned chunk (the partial tail chunk never enters the
+    trie — its page is still being written by decode)."""
+    seq = np.ascontiguousarray(np.asarray(seq, np.int32))
+    n = len(seq) // page_size
+    return [seq[i * page_size:(i + 1) * page_size].tobytes()
+            for i in range(n)]
+
+
+@dataclasses.dataclass
+class _Node:
+    page: int
+    children: dict = dataclasses.field(default_factory=dict)
+
+
+class PrefixTrie:
+    """Chunk-chain trie: ``match`` returns the pages of the longest
+    registered chain prefix, ``insert`` extends a chain, ``drop_page``
+    detaches an evicted page's node (its subtree becomes unreachable for
+    matching but stays individually evictable through the pool's LRU —
+    content-keyed chains mean a later re-registration of the same chunk
+    reattaches equivalent content, so stale subtrees are merely cold,
+    never wrong)."""
+
+    def __init__(self):
+        self._roots: dict = {}          # extras fp -> {chunk bytes: _Node}
+        self._where: dict[int, tuple] = {}  # page -> (children dict, key)
+
+    def match(self, keys: list[bytes], fp) -> list[int]:
+        """Pages of the longest registered chain prefix of ``keys``."""
+        children = self._roots.get(fp)
+        out: list[int] = []
+        for k in keys:
+            node = None if children is None else children.get(k)
+            if node is None:
+                break
+            out.append(node.page)
+            children = node.children
+        return out
+
+    def insert(self, keys: list[bytes], fp, pages: list[int],
+               on_new: Callable[[int], None]) -> int:
+        """Walk/extend the chain for ``keys``; chunk i that has no node yet
+        gets one holding ``pages[i]`` (``on_new(pages[i])`` fires so the
+        pool can mark it cached).  Existing nodes are left untouched — the
+        first registration of a chunk wins, so chain content is stable.
+        Returns the number of newly registered pages."""
+        children = self._roots.setdefault(fp, {})
+        new = 0
+        for k, page in zip(keys, pages):
+            node = children.get(k)
+            if node is None:
+                node = _Node(page=int(page))
+                children[k] = node
+                self._where[int(page)] = (children, k)
+                on_new(int(page))
+                new += 1
+            children = node.children
+        return new
+
+    def drop_page(self, page: int) -> None:
+        loc = self._where.pop(int(page), None)
+        if loc is not None:
+            children, k = loc
+            node = children.get(k)
+            if node is not None and node.page == int(page):
+                del children[k]
+
+    def __len__(self) -> int:
+        return len(self._where)
+
+
+class PagePool:
+    """Refcounted page pool with prefix-cache retention (see module
+    docstring).  Page 0 is the trash page and never circulates.
+
+    State machine per page: FREE (on ``free``, refcount 0) -> ALLOCATED/
+    REFERENCED (refcount >= 1; ``alloc`` starts at 1, aliasing ``acquire``s
+    increment) -> on the last ``release``: RETAINED (trie-registered pages,
+    refcount 0, parked on the LRU — re-aliasable via ``acquire`` or
+    evictable by ``alloc``) or straight back to FREE."""
+
+    def __init__(self, num_pages: int, rng=None,
+                 on_evict: Optional[Callable[[int], None]] = None):
+        self.num_pages = int(num_pages)
+        self.free = list(range(1, self.num_pages))
+        self.refcnt = np.zeros(self.num_pages, np.int64)
+        self.cached: set[int] = set()       # pages registered in the trie
+        self.lru = OrderedDict()            # retained refcount-0 cached pages
+        self.on_evict = on_evict
+        self.evictions = 0
+        self._rng = rng
+
+    # -- capacity ------------------------------------------------------------
+    def available(self, reserve: tuple = ()) -> int:
+        """Pages ``alloc`` could hand out right now: free + retained-LRU,
+        minus any retained pages the caller is about to ``acquire`` for
+        aliasing (``reserve``) — those must not be double-counted as
+        evictable."""
+        held = sum(1 for p in reserve if p in self.lru)
+        return len(self.free) + len(self.lru) - held
+
+    def in_use(self) -> int:
+        """Pages with live references (retained cache pages are NOT in
+        use — they are reclaimable capacity)."""
+        return int((self.refcnt[1:] > 0).sum())
+
+    # -- alloc / refcounting -------------------------------------------------
+    def alloc(self, n: int) -> list[int]:
+        if n > self.available():
+            raise RuntimeError(
+                f"page allocator overdraw: requested {n} pages with only "
+                f"{len(self.free)} free (+{len(self.lru)} evictable) — "
+                "admission/top-up must check the free list before "
+                "allocating")
+        while len(self.free) < n:
+            page, _ = self.lru.popitem(last=False)  # evict least-recent
+            self.cached.discard(page)
+            self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(page)
+            self.free.append(page)
+        if self._rng is not None:
+            self._rng.shuffle(self.free)
+        pages, self.free = self.free[:n], self.free[n:]
+        for p in pages:
+            self.refcnt[p] = 1
+        return pages
+
+    def acquire(self, page: int) -> None:
+        """Add a reference to an already-known page (block-table aliasing
+        of a cached/live page)."""
+        if self.refcnt[page] == 0:
+            # coming off the retained LRU (must be there: refcount-0 pages
+            # are either free or retained, and free pages go through alloc)
+            self.lru.pop(page)
+        self.refcnt[page] += 1
+
+    def release(self, page: int) -> None:
+        if page == 0 or self.refcnt[page] <= 0:
+            raise ValueError(
+                f"double-free: page {page} is not currently allocated — a "
+                "page freed twice would be issued to two slots at once "
+                "and silently cross-corrupt their KV state")
+        self.refcnt[page] -= 1
+        if self.refcnt[page] == 0:
+            if page in self.cached:
+                self.lru[page] = None       # retained, most-recent end
+            else:
+                self.free.append(page)
+
+    def touch(self, page: int) -> None:
+        """Refresh a retained page's LRU position on a cache hit probe."""
+        if page in self.lru:
+            self.lru.move_to_end(page)
+
+    def mark_cached(self, page: int) -> None:
+        self.cached.add(page)
+
+    # -- invariants ----------------------------------------------------------
+    def assert_quiescent(self) -> None:
+        held = np.flatnonzero(self.refcnt[1:] > 0) + 1
+        if held.size:
+            raise AssertionError(
+                f"page leak: {held.tolist()} still allocated with no live "
+                "requests")
+        expect = self.num_pages - 1  # page 0 (trash) never circulates
+        pool = list(self.free) + list(self.lru)
+        if len(pool) != expect or len(set(pool)) != expect:
+            raise AssertionError(
+                f"free-list corruption: {len(self.free)} free + "
+                f"{len(self.lru)} retained ({len(set(pool))} unique), "
+                f"expected {expect}")
+        if not set(self.lru) <= self.cached:
+            raise AssertionError(
+                f"retained pages {sorted(set(self.lru) - self.cached)} are "
+                "not trie-registered")

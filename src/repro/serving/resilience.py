@@ -124,7 +124,17 @@ class RequestRecord:
     stop token), ``"shed"`` (load-shedding; ``tokens`` holds whatever was
     emitted before the shed), or ``"rejected"`` (admission validation).
     Times are engine-clock seconds from serve start (straggler skew
-    included); ``met_deadline`` is None when the request had none."""
+    included); ``met_deadline`` is None when the request had none.
+
+    ``slot`` is the batch slot the request last occupied; ``events`` is
+    its span-event stream — dicts of ``{"name", "ts", ...}`` (``"dur"``
+    for spans with extent, plus per-event args: ``cached_tokens``/
+    ``prefilled_tokens``/``cow`` on admit, ``tokens``/``round`` on
+    decode, ``reason`` on shed).  Event names: ``admit``, ``decode``
+    (one per scheduling round the request was live in), ``preempt``,
+    ``shed``, ``finish``.  ``tools/trace_export.py`` renders these as
+    chrome-tracing/Perfetto tracks; under a VirtualClock the stream is
+    deterministic."""
 
     status: str = "pending"
     reason: str = ""
@@ -134,6 +144,8 @@ class RequestRecord:
     t_first: Optional[float] = None
     t_done: Optional[float] = None
     met_deadline: Optional[bool] = None
+    slot: Optional[int] = None
+    events: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -154,6 +166,15 @@ class ServeReport:
     ladder_trace: list = dataclasses.field(default_factory=list)
     # (round, rung, reason) transitions
     max_ladder_level: int = 0
+    # One sample per scheduling round that dispatched a chunk: free /
+    # retained page counts, cumulative prefix-hit tokens, effective k,
+    # queue depth — the counter tracks of tools/trace_export.py.
+    counters: list = dataclasses.field(default_factory=list)
+    prefix_hits: int = 0        # admits served (partly) from the prefix trie
+    prefix_hit_tokens: int = 0  # prompt tokens aliased instead of prefilled
+    prefill_tokens: int = 0     # prompt tokens actually computed
+    cow_forks: int = 0          # copy-on-write page forks
+    evictions: int = 0          # retained cache pages evicted under pressure
 
     @property
     def outputs(self) -> list[np.ndarray]:
@@ -163,7 +184,15 @@ class ServeReport:
         return [i for i, r in enumerate(self.records) if r.status == "done"]
 
     def latencies(self) -> list[float]:
-        """Completion latency (serve-start to last token) per done request."""
+        """Completion latency (serve-start to last token) per done request.
+
+        Granularity: completion times are interpolated WITHIN a scheduling
+        round to the chunk iteration the request's slot last emitted in
+        (the engine only observes device results at round boundaries), so
+        the residual quantization is one chunk iteration — ``round_time /
+        eff_chunk`` under a VirtualClock-driven policy — rather than the
+        whole round.  Two requests finishing in the same iteration of the
+        same round still share a timestamp."""
         return [r.t_done for r in self.records
                 if r.status == "done" and r.t_done is not None]
 

@@ -1,0 +1,186 @@
+"""Multi-replica front-end: route a request stream over N
+``ContinuousBatchingEngine`` replicas, token-identical to a solo engine.
+
+``ReplicaRouter`` is the "fleet" half of the ROADMAP's millions-of-users
+item: the engines are independent replicas (each with its own page pool,
+prefix trie, scheduler, and — under ``serving.sharded`` — its own model
+mesh), and the router is a thin host-side dispatcher.
+
+Routing policy — least-loaded with prefix affinity:
+
+* **affinity**: a host-side shadow of each replica's prefix trie
+  (``prefix.PrefixTrie`` keyed the same way: page-aligned chunk bytes
+  under an extras-fingerprint root) tracks which prompt prefixes each
+  replica has already been routed.  A request prefers the replica whose
+  shadow holds its longest prefix — that replica's REAL trie will serve
+  those pages without recomputing them, so repeated system prompts
+  concentrate instead of re-prefilling once per replica.  The shadow is
+  a routing heuristic, not ground truth (it ignores evictions), which is
+  exactly the split a networked fleet needs: routing must not require
+  synchronous cache state from the data plane.
+* **load**: ties break toward the replica with the least outstanding
+  predicted work — sum over its assigned requests of (prompt tokens it
+  will actually prefill, given affinity) + max_new decode tokens.
+
+Token identity: every sampled draw in the engines is keyed by
+``(rid, draw counter)`` via fold_in, independent of slot, chunk, engine,
+and batch composition.  The router pins each request's GLOBAL trace index
+as ``Request.rid`` before handing the per-replica sub-lists out, and every
+replica serves with the same base key — so each request's token stream is
+bit-identical to the one a solo engine serving the full trace would emit
+(greedy trivially, sampled by key construction;
+tests/test_router_trace.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.serving.engine import Request
+from repro.serving.prefix import PrefixTrie, chunk_keys, extras_fingerprint
+from repro.serving.resilience import RequestRecord, ServeReport
+
+
+@dataclasses.dataclass
+class RouterReport:
+    """Merged outcome of one routed trace: ``records`` in the ORIGINAL
+    trace order (so index i is request i, as with a solo engine),
+    ``assignments[i]`` = replica that served request i, and the
+    per-replica ``ServeReport``s for drill-down (their record lists are
+    the same objects, per-replica order).  ``affinity_hits`` counts
+    requests routed to a replica whose shadow trie already held a prefix
+    of their prompt."""
+
+    records: list = dataclasses.field(default_factory=list)
+    assignments: list = dataclasses.field(default_factory=list)
+    replica_reports: list = dataclasses.field(default_factory=list)
+    affinity_hits: int = 0
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
+    prefill_tokens: int = 0
+    cow_forks: int = 0
+    evictions: int = 0
+
+    @property
+    def outputs(self) -> list[np.ndarray]:
+        return [r.tokens for r in self.records]
+
+    def done(self) -> list[int]:
+        return [i for i, r in enumerate(self.records) if r.status == "done"]
+
+    def latencies(self) -> list[float]:
+        return [r.t_done for r in self.records
+                if r.status == "done" and r.t_done is not None]
+
+
+class ReplicaRouter:
+    """Route request streams over ``engines`` (see module docstring).
+
+    The engines should be constructed alike (same family/params; prefix
+    caching per taste).  ``serve_detailed`` serves each replica's
+    sub-list independently — replicas never share device state, so this
+    models N separate serving processes."""
+
+    def __init__(self, engines: Sequence):
+        if not engines:
+            raise ValueError("ReplicaRouter needs at least one engine")
+        self.engines = list(engines)
+        ps = {e.page_size for e in self.engines}
+        if len(ps) != 1:
+            raise ValueError(
+                f"replicas disagree on page_size ({sorted(ps)}); prefix "
+                "affinity keys chunks by page_size, so routing would be "
+                "meaningless")
+        self.page_size = ps.pop()
+
+    # ---------------------------------------------------------------- route --
+    def route(self, requests: Sequence[Request]) -> list[int]:
+        """Assign each request a replica index: longest shadow-trie prefix
+        match first, least predicted outstanding work second, lowest
+        replica index last.  Pure host-side planning — no engine state is
+        touched, so callers may inspect/override before serving."""
+        n = len(self.engines)
+        shadows = [PrefixTrie() for _ in range(n)]
+        load = [0] * n
+        page_ctr = [0] * n  # shadow page ids are sequence numbers
+        out = []
+        for req in requests:
+            keys = chunk_keys(np.asarray(req.prompt, np.int32),
+                              self.page_size)
+            fp = extras_fingerprint(req.extras)
+            matched = [len(shadows[r].match(keys, fp)) for r in range(n)]
+            best = max(range(n),
+                       key=lambda r: (matched[r], -load[r], -r))
+            hit_tok = matched[best] * self.page_size
+            load[best] += (len(req.prompt) - hit_tok) + int(req.max_new)
+            fresh = list(range(page_ctr[best],
+                               page_ctr[best] + len(keys)))
+            page_ctr[best] += len(keys)
+            shadows[best].insert(keys, fp, fresh, on_new=lambda p: None)
+            out.append(best)
+        return out
+
+    # ---------------------------------------------------------------- serve --
+    def serve_detailed(self, requests: Sequence[Request], *,
+                       greedy: bool = True, temperature: float = 1.0,
+                       top_k: int = 0, key=None,
+                       policy=None, chaos=None,
+                       assignments: Optional[Sequence[int]] = None
+                       ) -> RouterReport:
+        """Route (unless ``assignments`` is given) and serve every
+        sub-list, merging the per-replica reports back into original
+        trace order.  Each request's ``rid`` is pinned to its global
+        index (unless the caller already set one), so sampled streams
+        match a solo engine; ``policy``/``chaos`` apply to every replica
+        alike."""
+        assign = (list(assignments) if assignments is not None
+                  else self.route(requests))
+        if len(assign) != len(requests):
+            raise ValueError("assignments length != requests length")
+        report = RouterReport(records=[None] * len(requests),
+                              assignments=assign)
+        # affinity_hits needs the shadow replay only when assignments were
+        # computed here; recompute cheaply either way for the stat.
+        shadows = [PrefixTrie() for _ in range(len(self.engines))]
+        ctr = [0] * len(self.engines)
+        for i, req in enumerate(requests):
+            keys = chunk_keys(np.asarray(req.prompt, np.int32),
+                              self.page_size)
+            fp = extras_fingerprint(req.extras)
+            r = assign[i]
+            if shadows[r].match(keys, fp):
+                report.affinity_hits += 1
+            fresh = list(range(ctr[r], ctr[r] + len(keys)))
+            ctr[r] += len(keys)
+            shadows[r].insert(keys, fp, fresh, on_new=lambda p: None)
+        for r, eng in enumerate(self.engines):
+            idxs = [i for i, a in enumerate(assign) if a == r]
+            if not idxs:
+                report.replica_reports.append(ServeReport())
+                continue
+            subs = [dataclasses.replace(requests[i],
+                                        rid=(requests[i].rid
+                                             if requests[i].rid is not None
+                                             else i))
+                    for i in idxs]
+            rep = eng.serve_detailed(subs, greedy=greedy,
+                                     temperature=temperature, top_k=top_k,
+                                     key=key, policy=policy, chaos=chaos)
+            report.replica_reports.append(rep)
+            for i, rec in zip(idxs, rep.records):
+                rec.replica = r  # annotate for the trace exporter
+                report.records[i] = rec
+            report.prefix_hits += rep.prefix_hits
+            report.prefix_hit_tokens += rep.prefix_hit_tokens
+            report.prefill_tokens += rep.prefill_tokens
+            report.cow_forks += rep.cow_forks
+            report.evictions += rep.evictions
+        for i, rec in enumerate(report.records):
+            if rec is None:  # replica had no requests -> unreachable, but
+                report.records[i] = RequestRecord()  # keep shape total
+        return report
+
+    def serve(self, requests: Sequence[Request], **kw) -> list[np.ndarray]:
+        return [r.tokens for r in self.serve_detailed(requests, **kw).records]

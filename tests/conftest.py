@@ -8,10 +8,17 @@ When it is absent we install a minimal stub module so test files that do
 ``from hypothesis import given, settings, strategies as st`` still collect;
 every ``@given``-decorated test is then skipped instead of erroring.
 """
+import os
 import sys
 import types
 
 import pytest
+
+# Tests run the serve loop in STRICT mode: a request left "pending" after
+# the scheduler drains means the scheduler LOST it, and must raise instead
+# of being coerced to "done" (engine.serve_detailed's final sweep).  Only a
+# default — hardened-mode tests override via Engine.strict_pending.
+os.environ.setdefault("REPRO_STRICT_SERVE", "1")
 
 
 def pytest_addoption(parser):

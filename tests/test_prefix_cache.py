@@ -1,0 +1,276 @@
+"""Shared-prefix KV page cache: correctness and lifecycle adversarial suite.
+
+Layer one is the bit-exactness bar: serving with ``prefix_cache=True`` must
+be TOKEN-IDENTICAL to uncached serving for every family, greedy and
+sampled — eligible families (dense / vlm / encdec, non-MLA, non-draft)
+with real cache hits, ineligible families trivially (the cache gates
+itself off).  Layer two attacks the allocator lifecycle: copy-on-write
+fork isolation with a live sibling, refcount quiescence through
+preemption / eviction / crash replay, pool poisoning on abnormal serve
+exit, the strict pending sweep, and per-slot completion granularity.
+"""
+import jax
+import numpy as np
+import pytest
+
+from helpers import (
+    FAMILY_ARCHS,
+    assert_chaos_parity,
+    assert_tokens_identical,
+    batch_requests,
+    build_engine,
+    request_extras,
+    setup_family,
+)
+from repro.serving import (
+    ChaosConfig,
+    EngineCrash,
+    FaultInjector,
+    Request,
+    ResiliencePolicy,
+    ServingSupervisor,
+    VirtualClock,
+)
+
+PS = 4  # page size used throughout: prompts of 8 tokens = 2 full pages
+
+
+def _shared_prefix_requests(prompt, extras, n_new=6, vocab=101):
+    """Two requests per prompt row: the row itself plus a variant sharing
+    its first full page (tokens [0, PS)) but with a perturbed tail — so an
+    eligible cache serves the variant's first page from the trie."""
+    reqs = []
+    prompt = np.asarray(prompt, np.int32)
+    for i, row in enumerate(prompt):
+        ex = request_extras(extras, i)
+        reqs.append(Request(prompt=row.copy(), max_new=n_new, extras=ex))
+        tail = row.copy()
+        tail[-2:] = (tail[-2:] + 1 + i) % vocab
+        reqs.append(Request(prompt=tail, max_new=n_new, extras=ex))
+    return reqs
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_prefix_cache_token_identity_all_families(arch):
+    """The hard bar: cached == uncached tokens, greedy AND sampled, with
+    hits > 0 where the family is eligible and hits == 0 where the cache
+    must gate itself off (moe window ragging, ssm dense state, MLA latent
+    pages)."""
+    cfg, params, prompt, extras = setup_family(arch)
+    reqs = _shared_prefix_requests(prompt, extras, vocab=cfg.vocab)
+    kw = dict(max_seq=24, page_size=PS, chunk=3, num_pages=20)
+    key = jax.random.PRNGKey(5)
+    skw = dict(greedy=False, temperature=0.8, top_k=8, key=key)
+
+    base = build_engine("continuous", cfg, params, **kw)
+    want_g = base.serve(reqs)
+    want_s = base.serve(reqs, **skw)
+
+    eng = build_engine("continuous", cfg, params, prefix_cache=True, **kw)
+    got_g = eng.serve(reqs)
+    hits_g = eng.prefix_hits
+    got_s = eng.serve(reqs, **skw)
+    hits_s = eng.prefix_hits
+
+    for i in range(len(reqs)):
+        assert_tokens_identical(want_g[i], got_g[i],
+                                msg=f"{arch} greedy req {i} diverged cached")
+        assert_tokens_identical(want_s[i], got_s[i],
+                                msg=f"{arch} sampled req {i} diverged cached")
+    eligible = (cfg.family in ("dense", "vlm", "encdec")
+                and not getattr(cfg, "mla", None))
+    if eligible:
+        assert hits_g > 0 and hits_s > 0, \
+            f"{arch} eligible but served no prefix hits"
+        assert eng.prefix_hit_tokens > 0
+        assert eng.prefill_tokens < sum(len(r.prompt) for r in reqs)
+    else:
+        assert hits_g == 0 and hits_s == 0, \
+            f"{arch} ineligible family must not alias pages"
+    eng.assert_quiescent()
+
+
+def test_cow_fork_isolation_with_live_sibling():
+    """Two requests with an IDENTICAL fully-page-aligned prompt: the second
+    admit aliases every prompt page and must copy-on-write fork the last
+    one before decoding into it.  Sampled decode gives the two requests
+    different continuations (per-rid draw keys), so a missing fork would
+    cross-corrupt the sibling's KV — both must match uncached serving."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    row = np.asarray(prompt, np.int32)[0]
+    assert len(row) % PS == 0  # full pages: forces the CoW branch
+    reqs = [Request(prompt=row.copy(), max_new=6) for _ in range(2)]
+    kw = dict(max_seq=24, page_size=PS, chunk=3, num_pages=20)
+    skw = dict(greedy=False, temperature=0.8, top_k=8,
+               key=jax.random.PRNGKey(7))
+
+    want = build_engine("continuous", cfg, params, **kw).serve(reqs, **skw)
+    eng = build_engine("continuous", cfg, params, prefix_cache=True, **kw)
+    got = eng.serve(reqs, **skw)
+
+    assert eng.prefix_hits >= 1
+    assert eng.cow_forks >= 1, "full-prefix hit must fork the write page"
+    for i in range(2):
+        assert_tokens_identical(want[i], got[i], msg=f"req {i}")
+    # Sanity that isolation was actually load-bearing: the rid-keyed
+    # streams diverge, so the two slots wrote different tokens into what
+    # started as the same page.
+    assert not np.array_equal(got[0], got[1])
+    eng.assert_quiescent()
+
+
+def test_refcount_quiescent_under_preemption_and_eviction():
+    """A pool tight enough to force recompute preemption AND LRU eviction
+    of retained cache pages: after the trace drains, every page must be
+    refcount-0 and on exactly one of free/LRU (assert_quiescent), and the
+    outputs still match an uncached roomy-pool engine."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    reqs = _shared_prefix_requests(prompt, None, n_new=8, vocab=cfg.vocab)
+    want = build_engine("continuous", cfg, params, max_seq=24, page_size=PS,
+                        chunk=3, num_pages=20).serve(reqs)
+    eng = build_engine("continuous", cfg, params, max_seq=24, page_size=PS,
+                       chunk=3, num_pages=9, prefix_cache=True)
+    got = eng.serve(reqs)
+    for i in range(len(reqs)):
+        assert_tokens_identical(want[i], got[i], msg=f"req {i}")
+    assert eng.preemptions > 0 or eng._pool.evictions > 0, \
+        "pool was not actually tight — test exercises nothing"
+    eng.assert_quiescent()
+    pool = eng._pool
+    assert len(pool.free) + len(pool.lru) == eng.num_pages - 1
+    assert set(pool.lru) <= pool.cached
+
+
+def test_prefix_cache_crash_replay_token_identical_and_quiescent():
+    """Supervisor crash replay on a cached engine: the replacement trace
+    rebuilds pool + trie from scratch (device pages died with the crash),
+    replays token-identically, and leaves a quiescent pool."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    reqs = _shared_prefix_requests(prompt, None, vocab=cfg.vocab)
+    kw = dict(max_seq=24, page_size=PS, chunk=3, num_pages=20)
+    want = build_engine("continuous", cfg, params, **kw).serve(reqs)
+    eng = build_engine("continuous", cfg, params, prefix_cache=True, **kw)
+    sup = ServingSupervisor(
+        eng, policy=ResiliencePolicy(),
+        chaos=FaultInjector(ChaosConfig(crash_rounds=(1,))))
+    report = sup.run(reqs)
+    assert report.restarts == 1
+    for i, rec in enumerate(report.records):
+        assert rec.status == "done"
+        assert_tokens_identical(want[i], rec.tokens, msg=f"req {i}")
+    eng.assert_quiescent()
+
+
+def test_eviction_under_squeeze_chaos_parity():
+    """PR 6 integration: scripted page squeezes on a tight cached pool —
+    retained cache pages are opportunistic capacity and must yield without
+    perturbing any finished request's tokens."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    reqs = _shared_prefix_requests(prompt, None, n_new=8, vocab=cfg.vocab)
+    _, report = assert_chaos_parity(
+        cfg, params, reqs,
+        ChaosConfig(squeeze_rounds=(1, 2), squeeze_frac=0.5),
+        engine_kw=dict(prefix_cache=True, num_pages=12, max_seq=24,
+                       page_size=PS, chunk=3),
+        msg="prefix cache under squeeze")
+    assert report.squeezed_pages > 0
+
+
+def test_abnormal_exit_poisons_pool_until_next_serve():
+    """serve_detailed exception safety: an escaped EngineCrash (no
+    supervisor) leaves allocator state mid-flight — assert_quiescent must
+    refuse to certify it until the next serve's _reset rebuilds the pool."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    reqs = batch_requests(prompt, 6)
+    eng = build_engine("continuous", cfg, params, max_seq=24, page_size=PS,
+                       chunk=3, num_pages=20, prefix_cache=True)
+    with pytest.raises(EngineCrash):
+        eng.serve_detailed(reqs, policy=ResiliencePolicy(),
+                           chaos=FaultInjector(ChaosConfig(crash_rounds=(1,))))
+    with pytest.raises(AssertionError, match="poisoned"):
+        eng.assert_quiescent()
+    # A fresh serve on the SAME engine recovers: _reset clears the poison.
+    eng.serve(reqs)
+    eng.assert_quiescent()
+
+
+def test_strict_sweep_raises_on_dropped_request(monkeypatch):
+    """A scheduler that silently loses a request (simulated via the
+    _debug_drop_rids hook) must raise in strict mode — the old
+    unconditional pending->done coercion hid exactly this bug class."""
+    monkeypatch.setenv("REPRO_STRICT_SERVE", "1")
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    reqs = batch_requests(prompt, 4)
+    eng = build_engine("continuous", cfg, params, max_seq=24, page_size=PS,
+                       chunk=3, num_pages=20)
+    eng._debug_drop_rids = {1}
+    with pytest.raises(RuntimeError, match="scheduler dropped requests"):
+        eng.serve_detailed(reqs, policy=ResiliencePolicy())
+
+
+def test_hardened_sweep_coerces_only_when_opted_in():
+    """Hardened serving may opt back into coercion (strict_pending=False):
+    the lost request surfaces as an auditable "coerced-pending" done
+    record.  Without a policy (non-hardened) the raise is unconditional —
+    coercion is a production-degradation choice, never a default."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    reqs = batch_requests(prompt, 4)
+    eng = build_engine("continuous", cfg, params, max_seq=24, page_size=PS,
+                       chunk=3, num_pages=20)
+    eng.strict_pending = False
+    eng._debug_drop_rids = {1}
+    report = eng.serve_detailed(reqs, policy=ResiliencePolicy())
+    assert report.records[1].status == "done"
+    assert report.records[1].reason == "coerced-pending"
+    assert report.records[0].status == "done"
+    assert report.records[0].reason == ""
+
+    eng2 = build_engine("continuous", cfg, params, max_seq=24, page_size=PS,
+                        chunk=3, num_pages=20)
+    eng2.strict_pending = False
+    eng2._debug_drop_rids = {1}
+    with pytest.raises(RuntimeError, match="scheduler dropped requests"):
+        eng2.serve_detailed(reqs)
+
+
+def test_finish_granularity_within_one_round():
+    """Per-slot completion at chunk granularity: two requests that finish
+    in DIFFERENT chunk iterations of the same scheduling round get
+    different t_done stamps (round boundary interpolated to the finishing
+    iteration), instead of the old shared round-end timestamp."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    rows = np.asarray(prompt, np.int32)
+    reqs = [Request(prompt=rows[0], max_new=2),
+            Request(prompt=rows[1], max_new=5)]
+    eng = build_engine("continuous", cfg, params, max_seq=24, page_size=PS,
+                       chunk=6, num_pages=20, clock=VirtualClock())
+    report = eng.serve_detailed(reqs, policy=ResiliencePolicy(round_time=1.0))
+    recs = report.records
+    assert all(r.status == "done" for r in recs)
+    # Both admit in round 0 (prefill emits token 1) and finish inside the
+    # same chunk=6 decode round — at iterations 0 and 3 respectively.
+    assert recs[0].t_done < recs[1].t_done, \
+        "slots finishing at different chunk iterations must not share t_done"
+    for rec in recs:
+        names = [e["name"] for e in rec.events]
+        assert names[0] == "admit" and names[-1] == "finish"
+        ts = [e["ts"] for e in rec.events]
+        assert ts == sorted(ts)
+
+
+def test_prefix_hit_skips_recompute_but_keeps_arrival_admissibility():
+    """Cache hits must not break hardened admission ordering: requests with
+    future arrivals still wait, and a hit on admission aliases rather than
+    recomputes (prefill_tokens counts only the computed tail)."""
+    cfg, params, prompt, _ = setup_family("qwen2-1.5b")
+    row = np.asarray(prompt, np.int32)[0]
+    reqs = [Request(prompt=row.copy(), max_new=4),
+            Request(prompt=row.copy(), max_new=4, arrival=3.0)]
+    eng = build_engine("continuous", cfg, params, max_seq=24, page_size=PS,
+                       chunk=3, num_pages=20, prefix_cache=True,
+                       clock=VirtualClock())
+    report = eng.serve_detailed(reqs, policy=ResiliencePolicy(round_time=1.0))
+    assert all(r.status == "done" for r in report.records)
+    assert report.records[1].t_admit >= 3.0
+    assert eng.prefix_hits >= 1
+    assert eng.prefill_tokens < 2 * len(row)

@@ -1,0 +1,171 @@
+"""Schema validator for the repo's ``BENCH_*.json`` artifacts.
+
+The benches (benchmarks/decode_bench.py, benchmarks/serving_bench.py)
+write structured result files that downstream tooling — the paper tables,
+the CI no-regression guards, the README claims — read field-by-field.  A
+bench refactor that silently renames or drops a field only surfaces when
+a consumer breaks, usually in a different PR.  This checker pins the
+contract: every committed/CI-generated ``BENCH_*.json`` must carry its
+required sections with sanely-typed values.
+
+Deliberately stdlib-only (no jsonschema dependency): the "schema" is a
+nested dict of ``field -> type | sub-schema | callable predicate``, which
+is enough to catch renames, dropped sections, and type drift.  It is NOT
+a values regression guard — CI has a separate tolerance check for that.
+
+CLI::
+
+    python tools/validate_bench.py BENCH_serving.json [more.json ...]
+
+exits non-zero listing every violation.  Files are matched to a schema by
+their ``bench`` field (``serving_continuous_batching`` / ``decode_fastpath``);
+unknown bench kinds only get the generic envelope check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import sys
+
+NUM = numbers.Real
+
+
+def _is_grid(v):
+    return isinstance(v, list) and all(isinstance(e, dict) for e in v)
+
+
+# field -> expected: a type/tuple-of-types, a nested dict (sub-object), or
+# a callable predicate.  Fields prefixed "?" are optional when present.
+ENVELOPE = {"bench": str, "backend": str}
+
+SERVING = {
+    "bench": str,
+    "backend": str,
+    "arch": str,
+    "trace": {"requests": NUM, "slots": NUM, "seed": NUM},
+    "page_size": NUM,
+    "chunk": NUM,
+    "num_pages": NUM,
+    "max_seq": NUM,
+    "fixed_batch": {"wall_sec": NUM, "useful_tokens": NUM,
+                    "tokens_per_sec": NUM},
+    "continuous": {"wall_sec": NUM, "useful_tokens": NUM,
+                   "tokens_per_sec": NUM, "peak_pages_in_use": NUM},
+    "speedup_tokens_per_sec": NUM,
+    "speculative": {"k": NUM, "grid": _is_grid},
+    "chaos": {"grid": _is_grid},
+    "sharded": {"devices": NUM, "grid": _is_grid},
+    "?speculative_repetitive": {"grid": _is_grid},
+    "?prefix_router": {
+        "requests": NUM,
+        "system_prompts": NUM,
+        "page_size": NUM,
+        "prefix_hit_rate": NUM,
+        "prefill_tokens_uncached": NUM,
+        "prefill_tokens_cached": NUM,
+        "prefill_savings_frac": NUM,
+        "admit_to_first_uncached_s": NUM,
+        "admit_to_first_cached_s": NUM,
+        "cow_forks": NUM,
+        "evictions": NUM,
+        "token_identical_greedy": bool,
+        "token_identical_sampled": bool,
+        "router": {"replicas": NUM, "affinity_hits": NUM,
+                   "token_identical": bool},
+        "trace_file": str,
+        "trace_events": NUM,
+    },
+}
+
+DECODE = {
+    "bench": str,
+    "backend": str,
+    "grid": _is_grid,
+    "fastpath_vs_seed": {"speedup": NUM, "tokens_match_seed": bool},
+    "speculative": {"k": NUM, "grid": _is_grid},
+    "sharded": {"devices": NUM, "grid": _is_grid},
+}
+
+SCHEMAS = {"serving_continuous_batching": SERVING,
+           "decode_fastpath": DECODE}
+
+
+def _check(obj, schema, path, errors):
+    for field, want in schema.items():
+        optional = field.startswith("?")
+        name = field[1:] if optional else field
+        here = f"{path}.{name}" if path else name
+        if name not in obj:
+            if not optional:
+                errors.append(f"missing field: {here}")
+            continue
+        val = obj[name]
+        if isinstance(want, dict):
+            if not isinstance(val, dict):
+                errors.append(f"{here}: expected object, got "
+                              f"{type(val).__name__}")
+            else:
+                _check(val, want, here, errors)
+        elif callable(want) and not isinstance(want, type):
+            if not want(val):
+                errors.append(f"{here}: failed {want.__name__} "
+                              f"(got {type(val).__name__})")
+        else:
+            # bool is an int subclass; demand exact bools where asked
+            if want is bool:
+                ok = isinstance(val, bool)
+            elif want is NUM or want is numbers.Real:
+                ok = isinstance(val, numbers.Real) and not isinstance(
+                    val, bool)
+            else:
+                ok = isinstance(val, want)
+            if not ok:
+                errors.append(f"{here}: expected "
+                              f"{getattr(want, '__name__', want)}, got "
+                              f"{type(val).__name__} ({val!r:.60})")
+
+
+def validate_bench(obj, kind: str = "") -> list[str]:
+    """Return a list of violations (empty == valid).  ``kind`` overrides
+    the ``bench`` field when validating partial/smoke outputs."""
+    errors: list[str] = []
+    if not isinstance(obj, dict):
+        return ["top level must be a JSON object"]
+    _check(obj, ENVELOPE, "", errors)
+    schema = SCHEMAS.get(kind or obj.get("bench", ""))
+    if schema is not None:
+        errors = []
+        _check(obj, schema, "", errors)
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="BENCH_*.json files to check")
+    ap.add_argument("--kind", default="",
+                    help="force a schema (serving_continuous_batching / "
+                         "decode_fastpath) instead of reading 'bench'")
+    args = ap.parse_args(argv)
+    bad = 0
+    for path in args.paths:
+        try:
+            with open(path) as f:
+                obj = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"INVALID {path}: {e}", file=sys.stderr)
+            bad += 1
+            continue
+        errors = validate_bench(obj, args.kind)
+        if errors:
+            bad += 1
+            print(f"INVALID {path}:", file=sys.stderr)
+            for e in errors:
+                print(f"  - {e}", file=sys.stderr)
+        else:
+            print(f"OK {path} ({obj.get('bench', '?')})")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
